@@ -1,0 +1,153 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E).
+//!
+//! Proves all layers of the stack compose on a real (small) workload:
+//!
+//!   1. `make artifacts` compiled the JAX/Pallas golden model to HLO text;
+//!   2. the rust runtime loads it on the PJRT CPU client (python is NOT on
+//!      this path);
+//!   3. a batch of synthetic CIFAR-like images is classified twice — by the
+//!      golden model and by the **bit-true TULIP-PE simulation** (every
+//!      activation computed through real control words on the 4-neuron
+//!      threshold-logic PEs);
+//!   4. classifications must agree image-for-image; throughput, simulated
+//!      latency and energy are reported from the calibrated model.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_inference`
+
+use std::time::Instant;
+use tulip::arch::unit::PeArray;
+use tulip::bnn::tensor::{BinWeights, BitTensor};
+use tulip::bnn::{reference, tiny_bnn};
+use tulip::energy::{calib, Activity, EnergyModel};
+use tulip::runtime::{literal_bits, literal_i32, Runtime};
+use tulip::scheduler::seqgen::SequenceGenerator;
+use tulip::sim::cycle;
+
+fn weight_literal(w: &BinWeights) -> xla::Literal {
+    let data: Vec<i32> = w.data.iter().map(|&v| v as i32).collect();
+    literal_i32(&data, &[w.z2, w.fanin]).unwrap()
+}
+
+fn threshold_literal(w: &BinWeights) -> xla::Literal {
+    let t: Vec<i32> = w.thresholds.iter().map(|&v| v as i32).collect();
+    literal_i32(&t, &[w.z2]).unwrap()
+}
+
+fn argmax(scores: &[i32]) -> usize {
+    scores.iter().enumerate().max_by_key(|(_, &s)| s).map(|(i, _)| i).unwrap()
+}
+
+fn main() {
+    const BATCH: usize = 32;
+    let rt = Runtime::new("artifacts").expect("PJRT client");
+    println!("PJRT platform: {}", rt.platform());
+    let model = match rt.load("tiny_bnn") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e:#}\nRun `make artifacts` first.");
+            std::process::exit(1);
+        }
+    };
+
+    // Network + frozen synthetic weights (batch-norm thresholds folded).
+    let net = tiny_bnn(16, 8, 4);
+    let weights: Vec<BinWeights> = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 1000 + i as u64))
+        .collect();
+    println!("network: {} ({} layers, {:.2} MOp/inference)", net.name, net.layers.len(), net.total_mops());
+
+    // ---- Path A: JAX golden model via PJRT (the serving path) ----------
+    let t0 = Instant::now();
+    let mut golden_classes = Vec::with_capacity(BATCH);
+    for img in 0..BATCH {
+        let input = BitTensor::random(16, 16, 8, img as u64);
+        let scores = model
+            .run_i32(&[
+                literal_bits(&input.data, &[16, 16, 8]).unwrap(),
+                weight_literal(&weights[0]),
+                threshold_literal(&weights[0]),
+                weight_literal(&weights[1]),
+                threshold_literal(&weights[1]),
+                weight_literal(&weights[2]),
+            ])
+            .unwrap();
+        golden_classes.push(argmax(&scores));
+    }
+    let golden_dt = t0.elapsed();
+
+    // ---- Path B: bit-true TULIP-PE simulation --------------------------
+    let mut array = PeArray::paper(); // 32 units × 8 PEs = 256 PEs
+    let mut sg = SequenceGenerator::new();
+    let mut sim_classes = Vec::with_capacity(BATCH);
+    let mut sim_cycles = 0u64;
+    let t1 = Instant::now();
+    for img in 0..BATCH {
+        let input = BitTensor::random(16, 16, 8, img as u64);
+        let c1 = cycle::conv_bin_cycle(&mut array, &mut sg, &input, &net.layers[0], &weights[0]);
+        let p1 = cycle::maxpool_cycle(&mut array, &mut sg, &c1.output, 2, 2);
+        let c2 = cycle::conv_bin_cycle(&mut array, &mut sg, &p1.output, &net.layers[1], &weights[1]);
+        let p2 = cycle::maxpool_cycle(&mut array, &mut sg, &c2.output, 2, 2);
+        let (_, scores, fc_cy) = cycle::fc_bin_cycle(
+            &mut array,
+            &mut sg,
+            &p2.output.flatten(),
+            &net.layers[2],
+            &weights[2],
+        );
+        sim_cycles += c1.cycles + p1.cycles + c2.cycles + p2.cycles + fc_cy;
+        sim_classes.push(argmax(&scores.iter().map(|&s| s as i32).collect::<Vec<_>>()));
+    }
+    let sim_dt = t1.elapsed();
+
+    // ---- Path C: functional reference (sanity triangle) ----------------
+    let mut ref_classes = Vec::with_capacity(BATCH);
+    for img in 0..BATCH {
+        let input = BitTensor::random(16, 16, 8, img as u64);
+        let scores = reference::forward_scores(&net, &input, &weights);
+        ref_classes.push(argmax(&scores.iter().map(|&s| s as i32).collect::<Vec<_>>()));
+    }
+
+    assert_eq!(golden_classes, sim_classes, "golden vs bit-true PE classifications");
+    assert_eq!(golden_classes, ref_classes, "golden vs functional classifications");
+    println!(
+        "\n{} images classified — golden (PJRT), bit-true PE sim and functional\n\
+         reference agree image-for-image OK  (class histogram: {:?})",
+        BATCH,
+        (0..4).map(|c| golden_classes.iter().filter(|&&x| x == c).count()).collect::<Vec<_>>()
+    );
+
+    // ---- Reported metrics ----------------------------------------------
+    let stats = array.stats();
+    let m = EnergyModel::default();
+    let act = Activity {
+        pe_neuron_evals: stats.neuron_evals,
+        pe_reg_accesses: stats.reg_reads + stats.reg_writes,
+        pe_gated_neuron_cycles: stats.gated_neuron_cycles,
+        total_cycles: sim_cycles,
+        ..Default::default()
+    };
+    let e = m.energy(&act);
+    println!("\n-- serving path (PJRT golden) --");
+    println!(
+        "  host latency {:.2} ms/image, throughput {:.1} images/s",
+        golden_dt.as_secs_f64() * 1e3 / BATCH as f64,
+        BATCH as f64 / golden_dt.as_secs_f64()
+    );
+    println!("-- simulated TULIP chip (bit-true, 256 PEs) --");
+    println!(
+        "  {} cycles/image = {:.1} us/image at the {} ns clock ({:.0} images/s on-chip)",
+        sim_cycles / BATCH as u64,
+        m.seconds(sim_cycles / BATCH as u64) * 1e6,
+        calib::CLOCK_NS,
+        1.0 / m.seconds(sim_cycles / BATCH as u64)
+    );
+    println!(
+        "  PE energy {:.2} nJ/image ({} neuron evals total)",
+        e.total_pj() * 1e-3 / BATCH as f64,
+        stats.neuron_evals
+    );
+    println!("  simulator wall time {:.2} s for {} images", sim_dt.as_secs_f64(), BATCH);
+}

@@ -1,0 +1,24 @@
+//! Profiling driver for the bit-true hot path (EXPERIMENTS.md §Perf):
+//!
+//!   cargo build --release --example profconv
+//!   perf record -g target/release/examples/profconv
+//!   perf report --stdio --no-children --no-inline
+use tulip::arch::unit::PeArray;
+use tulip::bnn::layer::LayerKind;
+use tulip::bnn::tensor::{BinWeights, BitTensor};
+use tulip::bnn::Layer;
+use tulip::scheduler::seqgen::SequenceGenerator;
+use tulip::sim::cycle;
+
+fn main() {
+    let layer = Layer::conv("b", LayerKind::ConvBin, (8, 8, 16), 3, 1, 1, 8, None);
+    let input = BitTensor::random(8, 8, 16, 5);
+    let weights = BinWeights::random(8, layer.fanin(), 6);
+    let mut total = 0u64;
+    for _ in 0..200 {
+        let mut array = PeArray::new(2, 4);
+        let mut sg = SequenceGenerator::new();
+        total += cycle::conv_bin_cycle(&mut array, &mut sg, &input, &layer, &weights).cycles;
+    }
+    println!("{total}");
+}

@@ -1,0 +1,72 @@
+//! Quickstart: the public API in ~60 lines.
+//!
+//! Builds a binary conv layer, runs it **bit-true** on a simulated
+//! TULIP-PE array (every output bit produced by real control words on the
+//! 4-neuron threshold-logic PEs), checks it against the functional
+//! reference, and prices the run with the calibrated energy model.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tulip::arch::unit::PeArray;
+use tulip::bnn::layer::LayerKind;
+use tulip::bnn::tensor::{BinWeights, BitTensor};
+use tulip::bnn::{reference, Layer};
+use tulip::energy::{calib, Activity, EnergyModel};
+use tulip::scheduler::adder_tree::threshold_node;
+use tulip::scheduler::seqgen::SequenceGenerator;
+use tulip::sim::cycle;
+
+fn main() {
+    // 1. A binary conv layer: 16×16×32 input, 3×3 kernel, 64 OFM channels —
+    //    each output neuron is the 288-input node of the paper's Table II.
+    let layer = Layer::conv("demo", LayerKind::ConvBin, (16, 16, 32), 3, 1, 1, 64, None);
+    println!("layer: {} (fan-in {} per output neuron)", layer.name, layer.fanin());
+
+    // 2. The schedule a TULIP-PE runs per output: adder tree in reverse
+    //    post-order + sequential threshold comparison (Fig. 2b).
+    let node = threshold_node(layer.fanin(), (layer.fanin() / 2) as i64);
+    println!(
+        "per-node schedule: {} cycles ({} tree + {} compare), peak storage {} of 64 bits",
+        node.total_cycles(),
+        node.tree_cycles,
+        node.cmp_cycles,
+        node.peak_storage_bits
+    );
+
+    // 3. Bit-true execution on a PE array (8 PEs here; the paper's chip has
+    //    256) against synthetic data.
+    let input = BitTensor::random(16, 16, 32, 42);
+    let weights = BinWeights::random(64, layer.fanin(), 7);
+    let mut array = PeArray::new(2, 4);
+    let mut sg = SequenceGenerator::new();
+    let result = cycle::conv_bin_cycle(&mut array, &mut sg, &input, &layer, &weights);
+
+    // 4. Verify against the functional reference — bit-for-bit.
+    let expect = reference::conv_bin(&input, &layer, &weights);
+    assert_eq!(result.output, expect, "bit-true output must match the reference");
+    println!("bit-true output matches the functional reference OK");
+
+    // 5. Price the activity with the calibrated energy model.
+    let m = EnergyModel::default();
+    let act = Activity {
+        pe_neuron_evals: result.stats.neuron_evals,
+        pe_reg_accesses: result.stats.reg_reads + result.stats.reg_writes,
+        pe_gated_neuron_cycles: result.stats.gated_neuron_cycles,
+        total_cycles: result.cycles,
+        ..Default::default()
+    };
+    let e = m.energy(&act);
+    println!(
+        "simulated {} wall cycles = {:.1} us at the paper's {} ns clock",
+        result.cycles,
+        m.seconds(result.cycles) * 1e6,
+        calib::CLOCK_NS
+    );
+    println!(
+        "energy: {:.2} nJ ({} neuron evals, {} register accesses)",
+        e.total_pj() * 1e-3,
+        result.stats.neuron_evals,
+        result.stats.reg_reads + result.stats.reg_writes
+    );
+    println!("\nnext: examples/schedule_viz, examples/alexnet_sweep, examples/e2e_inference");
+}

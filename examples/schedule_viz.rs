@@ -1,0 +1,160 @@
+//! Schedule visualization — Figs. 2, 4 and 5 of the paper, regenerated.
+//!
+//! Prints (a) the adder-tree decomposition and RPO storage analysis for the
+//! paper's 1023-input example (Fig. 2b), (b) the cycle-by-cycle control
+//! trace of a 4-bit addition (Fig. 4a), the accumulator (Fig. 4c), the
+//! sequential comparator (Fig. 5a) and maxpool (Fig. 5b).
+//!
+//! Run: `cargo run --release --example schedule_viz`
+
+use tulip::pe::{Src, TulipPe, WSrc};
+use tulip::scheduler::adder_tree::{threshold_node, AdderTree};
+use tulip::scheduler::{ops, storage, Loc, Schedule};
+
+fn src_str(s: Src) -> String {
+    match s {
+        Src::Zero => "0".into(),
+        Src::One => "1".into(),
+        Src::Ext(i) => format!("ext{i}"),
+        Src::N(k) => format!("N{}", k + 1),
+        Src::NInv(k) => format!("!N{}", k + 1),
+        Src::NFresh(k) => format!("N{}*", k + 1),
+        Src::NFreshInv(k) => format!("!N{}*", k + 1),
+        Src::Reg { reg, bit } => format!("R{}[{}]", reg + 1, bit),
+        Src::RegInv { reg, bit } => format!("!R{}[{}]", reg + 1, bit),
+    }
+}
+
+fn trace(title: &str, sched: &Schedule) {
+    println!("\n--- {title} ({} cycles) ---", sched.cycles());
+    println!("{:>3}  {:<24} {:<40} {}", "cy", "buses", "neurons (a|b|c|d >= T)", "writes / note");
+    for (cy, w) in sched.words.iter().enumerate() {
+        let mut neurons = String::new();
+        for (k, n) in w.neurons.iter().enumerate() {
+            if n.gated {
+                continue;
+            }
+            let b = if n.b_en { if n.b_inv { "!b" } else { "b" } } else { "-" };
+            let c = if n.c_en { if n.c_inv { "!c" } else { "c" } } else { "-" };
+            neurons.push_str(&format!(
+                "N{}[{}|{}|{}|{}>={}]{} ",
+                k + 1,
+                src_str(n.a),
+                b,
+                c,
+                src_str(n.d),
+                n.threshold,
+                if n.phase == 1 { "'" } else { "" }
+            ));
+        }
+        let writes: Vec<String> = w
+            .writes
+            .iter()
+            .map(|wr| {
+                let src = match wr.src {
+                    WSrc::N(k) => format!("N{}", k + 1),
+                    WSrc::NInv(k) => format!("!N{}", k + 1),
+                    WSrc::NOld(k) => format!("N{}(old)", k + 1),
+                    WSrc::Ext(i) => format!("ext{i}"),
+                    WSrc::Reg { reg, bit } => format!("R{}[{}]", reg + 1, bit),
+                    WSrc::Zero => "0".into(),
+                    WSrc::One => "1".into(),
+                };
+                format!("R{}[{}]<={src}", wr.reg + 1, wr.bit)
+            })
+            .collect();
+        println!(
+            "{:>3}  b={:<9} c={:<9} {:<40} {}  {}",
+            cy,
+            src_str(w.bus_b),
+            src_str(w.bus_c),
+            neurons,
+            writes.join(" "),
+            w.note.as_deref().unwrap_or("")
+        );
+    }
+}
+
+fn main() {
+    // ---- Fig. 2(b): the 1023-input node -------------------------------
+    println!("=== Fig. 2(b): 1023-input threshold node, RPO schedule ===");
+    let tree = AdderTree::build(1023);
+    let leaves = tree.nodes.iter().filter(|n| n.children.is_none()).count();
+    println!(
+        "decomposition: {leaves} leaf full-adders, {} levels, root sum width {} bits",
+        tree.levels(),
+        tree.root_width()
+    );
+    let prog = threshold_node(1023, 512);
+    println!(
+        "schedule: {} cycles total ({} tree + {} compare)",
+        prog.total_cycles(),
+        prog.tree_cycles,
+        prog.cmp_cycles
+    );
+    let rep = storage::report(1023);
+    println!(
+        "storage: exact peak {} bits | paper bound {} bits | physical {} bits",
+        rep.exact_peak_bits, rep.paper_bound_bits, rep.physical_bits
+    );
+    println!("\nstorage scaling (the O(log^2 N) law of §III-B):");
+    println!("{:>8} {:>10} {:>12}", "N", "peak bits", "paper bound");
+    for n in [48usize, 96, 192, 288, 384, 768, 1023, 2047] {
+        let r = storage::report(n);
+        println!("{:>8} {:>10} {:>12}", n, r.exact_peak_bits, r.paper_bound_bits);
+    }
+
+    // Node numbering of a small tree (the Fig. 2b labels).
+    println!("\nRPO node numbering for a 48-input tree (leaf ids in schedule order):");
+    let t48 = AdderTree::build(48);
+    println!(
+        "  {} leaves -> {} internal nodes, {} total cycles",
+        t48.nodes.iter().filter(|n| n.children.is_none()).count(),
+        t48.nodes.iter().filter(|n| n.children.is_some()).count(),
+        t48.sum_cycles()
+    );
+
+    // ---- Fig. 4(a): 4-bit addition ------------------------------------
+    let add = ops::add(
+        Loc::Reg { reg: 0, lsb: 0, width: 4 },
+        Loc::Reg { reg: 3, lsb: 0, width: 4 },
+        1,
+        0,
+        ops::SUM_N,
+        ops::CARRY_N,
+    );
+    trace("Fig. 4(a): 4-bit addition x+y (x in R1, y in R4, sum -> R2)", &add);
+    // Execute it to show the numbers.
+    let mut pe = TulipPe::new();
+    pe.regs_mut().poke_field(0, 0, 4, 11);
+    pe.regs_mut().poke_field(3, 0, 4, 6);
+    add.run_on(&mut pe, &[]);
+    println!("    11 + 6 = {} (R2[0..5])", pe.regs().peek_field(1, 0, 5));
+
+    // ---- Fig. 4(c): accumulation ---------------------------------------
+    let acc = ops::accumulate(
+        Loc::Reg { reg: 1, lsb: 0, width: 5 },
+        Loc::Reg { reg: 0, lsb: 0, width: 4 },
+        3,
+        0,
+    );
+    trace("Fig. 4(c): accumulate q += p (q alternates R2 <-> R4)", &acc);
+
+    // ---- Fig. 5(a): sequential comparator ------------------------------
+    let cmp = ops::compare_gt(
+        Loc::Reg { reg: 0, lsb: 0, width: 4 },
+        Loc::Reg { reg: 1, lsb: 0, width: 4 },
+        ops::CMP_N,
+    );
+    trace("Fig. 5(a): 4-bit sequential comparator x > y (3-input neuron)", &cmp);
+
+    // ---- Fig. 5(b): maxpool --------------------------------------------
+    let pool = ops::maxpool_or(&[0, 1, 2, 3], ops::CMP_N);
+    trace("Fig. 5(b): 2x2 maxpool window (single-cycle OR)", &pool);
+    let pool9 = ops::maxpool_or(&(0..9).collect::<Vec<_>>(), ops::CMP_N);
+    trace("Fig. 5(b) extended: 3x3 overlapping-pool window", &pool9);
+
+    // ---- ReLU (§IV-D) ---------------------------------------------------
+    let relu = ops::relu(Loc::Reg { reg: 0, lsb: 0, width: 4 }, 5, 1, 0);
+    trace("ReLU: compare then AND-mask ([1,1;2])", &relu);
+}

@@ -1,0 +1,63 @@
+"""AOT compile path: lower the L2 golden models to **HLO text** artifacts
+that the rust runtime loads via PJRT (`rust/src/runtime`).
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Artifact registry: stem -> (entry function, example-arg specs).
+ARTIFACTS = {
+    "tiny_bnn": (model.tiny_bnn_forward, model.tiny_bnn_specs()),
+    "binconv_layer": (model.binconv_layer_entry, model.binconv_layer_specs()),
+    "fc_head": (model.fc_head_entry, model.fc_head_specs()),
+}
+
+
+def emit(stem: str, out_dir: str) -> str:
+    fn, specs = ARTIFACTS[stem]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{stem}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", choices=sorted(ARTIFACTS), default=None)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    stems = [args.only] if args.only else sorted(ARTIFACTS)
+    for stem in stems:
+        path = emit(stem, args.out_dir)
+        size = os.path.getsize(path)
+        print(f"wrote {path} ({size} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in ``xnor.py`` must agree with these reference functions
+exactly (integer arithmetic, no tolerance) over the shape/dtype sweeps in
+``python/tests/test_kernel.py``.
+"""
+
+import jax.numpy as jnp
+
+
+def binconv_ref(x01, w_pm1, t_popcount):
+    """popcount(xnor(x, w)) >= T' via the signed-sum identity."""
+    fanin = x01.shape[1]
+    xs = (2 * x01 - 1).astype(jnp.int32)
+    s = xs @ w_pm1.astype(jnp.int32)
+    popcount = (s + fanin) // 2
+    return (popcount >= t_popcount.astype(jnp.int32)).astype(jnp.int32)
+
+
+def binsum_ref(x, w_pm1):
+    """Raw signed weighted sum."""
+    return x.astype(jnp.int32) @ w_pm1.astype(jnp.int32)
+
+
+def maxpool_or_ref(windows01):
+    """OR over the window axis."""
+    return jnp.max(windows01.astype(jnp.int32), axis=1)
+
+
+def xnor_popcount_ref(x01, w_pm1):
+    """Direct popcount-of-XNOR definition (cross-validates the signed-sum
+    identity itself)."""
+    w01 = (w_pm1 > 0).astype(jnp.int32)
+    # xnor(a, b) over {0,1}: 1 - (a ^ b) = a*b + (1-a)*(1-b)
+    agree = x01[:, :, None] * w01[None, :, :] + (1 - x01[:, :, None]) * (1 - w01[None, :, :])
+    return agree.sum(axis=1)

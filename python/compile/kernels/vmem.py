@@ -1,0 +1,104 @@
+"""L1 §Perf instrumentation: VMEM footprint and MXU-utilization *estimates*
+for the Pallas kernels' real-TPU variant.
+
+``interpret=True`` gives CPU-numpy wallclock, which is NOT a TPU proxy —
+the optimization target for the kernel is structural (DESIGN.md §Perf).
+This module makes those structural numbers executable: the EXPERIMENTS.md
+§Perf L1 figures are produced by these functions and pinned by
+``python/tests/test_vmem.py``.
+"""
+
+from dataclasses import dataclass
+
+# TPU-generation reference constants (v4-class core, the documented target
+# of the BlockSpec sizing; see DESIGN.md §Hardware-Adaptation).
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_LANES = 128
+HBM_BW_BYTES_PER_S = 1.2e12
+MXU_INT8_OPS_PER_S = 2 * 275e12  # 2 ops/MAC at the bf16/int8 rate
+
+
+@dataclass
+class KernelEstimate:
+    """Structural estimate for one (bm, bn, bk) tiling of the fused
+    XNOR-popcount-threshold matmul."""
+
+    bm: int
+    bn: int
+    bk: int
+    dtype_bytes: int
+
+    @property
+    def tile_bytes(self) -> int:
+        """Resident tiles: activation (bm x bk) + weight (bk x bn) +
+        accumulator/output (bm x bn)."""
+        return self.dtype_bytes * (self.bm * self.bk + self.bk * self.bn + self.bm * self.bn)
+
+    @property
+    def vmem_fraction(self) -> float:
+        """Fraction of VMEM one pipeline stage occupies (x2 for double
+        buffering of the input tiles)."""
+        double_buffered = self.tile_bytes + self.dtype_bytes * (
+            self.bm * self.bk + self.bk * self.bn
+        )
+        return double_buffered / VMEM_BYTES
+
+    def weights_resident(self, n: int, k: int) -> bool:
+        """Can the full K x N weight panel stay pinned in VMEM across the
+        M sweep? Requires bn to cover N (otherwise the (i, j, kk) grid
+        re-streams weight blocks per M panel) and the panel to fit in half
+        of VMEM (the other half double-buffers activations)."""
+        return self.bn >= n and k * n * self.dtype_bytes <= VMEM_BYTES // 2
+
+    def arithmetic_intensity(self, m: int, n: int, k: int) -> float:
+        """Ops per HBM byte for the whole problem under this tiling:
+        2·M·N·K ops; HBM traffic = activations once per N-panel sweep +
+        weights (once if VMEM-resident, else once per M-panel sweep) +
+        outputs once."""
+        ops = 2.0 * m * n * k
+        n_panels = max(1, -(-n // self.bn))
+        m_panels = max(1, -(-m // self.bm))
+        w_sweeps = 1 if self.weights_resident(n, k) else m_panels
+        bytes_moved = self.dtype_bytes * (
+            m * k * n_panels + k * n * w_sweeps + m * n
+        )
+        return ops / bytes_moved
+
+    def compute_bound(self, m: int, n: int, k: int) -> bool:
+        """Roofline: compute-bound iff arithmetic intensity exceeds the
+        machine balance point."""
+        balance = MXU_INT8_OPS_PER_S / HBM_BW_BYTES_PER_S
+        return self.arithmetic_intensity(m, n, k) >= balance
+
+    def mxu_utilization(self) -> float:
+        """Lane-occupancy estimate: fraction of the 128x128 systolic tile
+        the block shapes keep busy."""
+        return min(1.0, self.bm / MXU_LANES) * min(1.0, self.bn / MXU_LANES)
+
+
+def default_estimate(dtype_bytes: int = 4) -> KernelEstimate:
+    """The shipped 128x128x128 int32 tiling (interpret mode). The real-TPU
+    variant would use int8 (+-1 operands), dtype_bytes = 1."""
+    return KernelEstimate(bm=128, bn=128, bk=128, dtype_bytes=dtype_bytes)
+
+
+def report() -> str:
+    """Human-readable §Perf block (printed by `python -m compile.kernels.vmem`)."""
+    lines = []
+    for name, est in [
+        ("interpret/int32", default_estimate(4)),
+        ("real-TPU/int8", default_estimate(1)),
+    ]:
+        m, n, k = 169 * 256, 384, 2304  # AlexNet conv4 as im2col
+        lines.append(
+            f"{name}: tiles {est.tile_bytes / 1024:.0f} KiB "
+            f"({est.vmem_fraction * 100:.1f}% of VMEM double-buffered), "
+            f"MXU occupancy {est.mxu_utilization() * 100:.0f}%, "
+            f"AI {est.arithmetic_intensity(m, n, k):.0f} op/B "
+            f"({'compute' if est.compute_bound(m, n, k) else 'memory'}-bound)"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

@@ -1,0 +1,192 @@
+"""L1 — Pallas kernels for the BNN compute hot-spot.
+
+The paper's TULIP-PE performs XNOR-popcount-threshold with a bit-serial
+adder tree; the TPU-idiomatic restatement of the same insight (DESIGN.md
+§Hardware-Adaptation) is a *tiled matmul over ±1 operands with the
+threshold comparison fused into the epilogue*, so the binarized activation
+never round-trips to HBM:
+
+    popcount(xnor(x, w)) >= T'  <=>  (+-1 x) . (+-1 w) >= 2*T' - fanin
+
+Kernels are written with ``BlockSpec`` tiling for VMEM and run under
+``interpret=True`` (the CPU PJRT plugin cannot execute Mosaic custom
+calls); correctness is pinned against the pure-jnp oracle in ``ref.py`` by
+``python/tests/test_kernel.py``. VMEM-footprint / MXU-utilization estimates
+for the real-TPU variant are recorded in DESIGN.md §Perf and
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes: one (bm x bk) activation tile + (bk x bn) weight tile +
+# the (bm x bn) int32 accumulator block. At the default 128^3 that is
+# 3 * 128*128*4 B = 192 KiB << 16 MiB VMEM, leaving ample room for
+# double-buffering the HBM->VMEM pipeline (DESIGN.md §Perf).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _block_sizes(m, n, k, bm, bn, bk):
+    return min(bm, max(8, m)), min(bn, max(8, n)), min(bk, max(8, k))
+
+
+def _binconv_kernel(x_ref, w_ref, t_ref, o_ref, *, k_steps: int):
+    """Grid (M/bm, N/bn, K/bk). The output block doubles as the int32
+    accumulator across K steps; on the last step the threshold comparison
+    is fused in-place and the block leaves as {0,1} — the activation never
+    exists in memory at integer width (the kernel-level analogue of the
+    TULIP-PE's data locality argument)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = o_ref[...] + jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.int32)
+
+    @pl.when(k < k_steps - 1)
+    def _carry():
+        o_ref[...] = acc
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        # t_ref carries the signed threshold 2*T' - fanin per column.
+        o_ref[...] = (acc >= t_ref[...]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def binconv_matmul(x01, w_pm1, t_popcount, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Binary conv/FC layer as fused XNOR-popcount-threshold.
+
+    Args:
+      x01:        (M, K) int32 activations in {0, 1} (im2col windows).
+      w_pm1:      (K, N) int32 weights in {-1, +1}.
+      t_popcount: (N,) int32 popcount thresholds T' (batch-norm folded).
+
+    Returns:
+      (M, N) int32 in {0, 1}: ``popcount(xnor(x, w)) >= T'``.
+    """
+    m, k = x01.shape
+    k2, n = w_pm1.shape
+    assert k == k2, (x01.shape, w_pm1.shape)
+    fanin = k
+
+    # +-1 encoding. K is zero-padded to the block size: padded positions
+    # carry x = 0 in the signed domain and therefore contribute nothing.
+    xs = (2 * x01 - 1).astype(jnp.int32)
+    ws = w_pm1.astype(jnp.int32)
+    t_signed = (2 * t_popcount - fanin).astype(jnp.int32)
+
+    bm, bn, bk = _block_sizes(m, n, k, bm, bn, bk)
+    xs = _pad_to(_pad_to(xs, 0, bm), 1, bk)
+    ws = _pad_to(_pad_to(ws, 0, bk), 1, bn)
+    # Padded output columns compare against an unreachable threshold.
+    ts = _pad_to(t_signed.reshape(1, -1), 1, bn)
+    mp, kp = xs.shape
+    _, np_ = ws.shape
+    k_steps = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_binconv_kernel, k_steps=k_steps),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(xs, ws, ts)
+    return out[:m, :n]
+
+
+def _binsum_kernel(x_ref, w_ref, o_ref, *, k_steps: int):
+    """As `_binconv_kernel` but emits the raw signed sum — the integer
+    first-layer path and the classifier head (raw scores)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.int32)
+    del k_steps
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def binsum_matmul(x, w_pm1, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Signed weighted sum with binary weights: integer activations (first
+    layers, §V-B) or +-1-encoded activations (classifier scores).
+
+    Args:
+      x:     (M, K) int32 activations.
+      w_pm1: (K, N) int32 weights in {-1, +1}.
+
+    Returns:
+      (M, N) int32 signed sums.
+    """
+    m, k = x.shape
+    k2, n = w_pm1.shape
+    assert k == k2
+    xs = x.astype(jnp.int32)
+    ws = w_pm1.astype(jnp.int32)
+    bm, bn, bk = _block_sizes(m, n, k, bm, bn, bk)
+    xs = _pad_to(_pad_to(xs, 0, bm), 1, bk)
+    ws = _pad_to(_pad_to(ws, 0, bk), 1, bn)
+    mp, kp = xs.shape
+    _, np_ = ws.shape
+    k_steps = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_binsum_kernel, k_steps=k_steps),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(xs, ws)
+    return out[:m, :n]
+
+
+def _maxpool_kernel(x_ref, o_ref):
+    """OR-maxpool (§IV-D): max over the window axis of {0,1} inputs."""
+    o_ref[...] = jnp.max(x_ref[...], axis=1)
+
+
+@jax.jit
+def maxpool_or(windows01):
+    """Max-pooling as OR over pooling windows.
+
+    Args:
+      windows01: (P, W) int32 in {0,1} — P pooled positions x W window bits.
+
+    Returns:
+      (P,) int32 in {0,1}.
+    """
+    p, w = windows01.shape
+    return pl.pallas_call(
+        _maxpool_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((p, w), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((p,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.int32),
+        interpret=True,
+    )(windows01.astype(jnp.int32))

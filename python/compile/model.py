@@ -1,0 +1,140 @@
+"""L2 — the JAX golden model of a BNN, built on the L1 Pallas kernels.
+
+This is the bit-exact functional specification of what the TULIP simulator
+computes: XNOR-popcount-threshold convolutions (zero padding, (ky, kx, c)
+window order — the same product ordering the rust scheduler streams into
+the PE adder trees), OR-maxpooling, and a popcount-score classifier head.
+
+Layout conventions (must match ``rust/src/bnn``):
+  * activations: (H, W, C) int32 in {0, 1};
+  * weights:     (z2, fanin) int32 in {-1, +1}, fanin ordered (ky, kx, c);
+  * thresholds:  (z2,) int32 popcount thresholds (batch-norm folded, §IV-D).
+
+The model is lowered once to HLO text by ``aot.py`` and served from rust
+via PJRT; python never runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import xnor
+
+
+def im2col(x_hwc, k, stride=1, pad=1):
+    """Extract zero-padded k x k windows in (ky, kx, c) order.
+
+    Returns (out_h * out_w, k * k * C) int32.
+    """
+    h, w, c = x_hwc.shape
+    xp = jnp.pad(x_hwc, ((pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    cols = []
+    for ky in range(k):
+        for kx in range(k):
+            patch = jax.lax.slice(
+                xp, (ky, kx, 0), (ky + (oh - 1) * stride + 1, kx + (ow - 1) * stride + 1, c),
+                (stride, stride, 1),
+            )
+            cols.append(patch.reshape(oh * ow, c))
+    return jnp.concatenate(cols, axis=1)
+
+
+def conv_bin_layer(x_hwc, w_zf, t, k=3, stride=1, pad=1):
+    """Binary conv layer: XNOR-popcount-threshold via the Pallas kernel."""
+    h, w, _ = x_hwc.shape
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    cols = im2col(x_hwc, k, stride, pad)  # (oh*ow, fanin)
+    out = xnor.binconv_matmul(cols, w_zf.T, t)  # (oh*ow, z2)
+    return out.reshape(oh, ow, w_zf.shape[0])
+
+
+def maxpool_layer(x_hwc, k=2, stride=2):
+    """OR-maxpool via the Pallas kernel; windows per (position, channel)."""
+    h, w, c = x_hwc.shape
+    oh = (h - k) // stride + 1
+    ow = (w - k) // stride + 1
+    wins = []
+    for ky in range(k):
+        for kx in range(k):
+            patch = jax.lax.slice(
+                x_hwc, (ky, kx, 0), (ky + (oh - 1) * stride + 1, kx + (ow - 1) * stride + 1, c),
+                (stride, stride, 1),
+            )
+            wins.append(patch.reshape(oh * ow * c))
+    windows = jnp.stack(wins, axis=1)  # (oh*ow*c, k*k)
+    return xnor.maxpool_or(windows).reshape(oh, ow, c)
+
+
+def fc_scores(x_flat01, w_zf):
+    """Classifier head: raw popcount scores (matches rust `fc_scores`)."""
+    fanin = x_flat01.shape[0]
+    xs = (2 * x_flat01 - 1).astype(jnp.int32).reshape(1, fanin)
+    s = xnor.binsum_matmul(xs, w_zf.T)  # (1, classes) signed
+    return ((s[0] + fanin) // 2).astype(jnp.int32)
+
+
+def fc_bin(x_flat01, w_zf, t):
+    """Hidden binary FC layer: thresholded popcount."""
+    cols = x_flat01.reshape(1, -1)
+    return xnor.binconv_matmul(cols, w_zf.T, t)[0]
+
+
+def tiny_bnn_forward(x, w1, t1, w2, t2, w3):
+    """The TinyBNN of ``rust/src/bnn/zoo.rs::tiny_bnn(size, ch, classes)``:
+
+        conv(3x3, ch -> ch) + pool2 -> conv(3x3, ch -> 2ch) + pool2
+        -> fc(flat -> classes) popcount scores.
+
+    All shapes static; returns (classes,) int32 scores.
+    """
+    a = conv_bin_layer(x, w1, t1)
+    a = maxpool_layer(a)
+    a = conv_bin_layer(a, w2, t2)
+    a = maxpool_layer(a)
+    return fc_scores(a.reshape(-1), w3)
+
+
+def tiny_bnn_specs(size=16, ch=8, classes=4):
+    """ShapeDtypeStructs for AOT lowering of `tiny_bnn_forward`."""
+    i32 = jnp.int32
+    fan1 = 9 * ch
+    fan2 = 9 * ch
+    flat = (size // 4) * (size // 4) * (2 * ch)
+    return (
+        jax.ShapeDtypeStruct((size, size, ch), i32),
+        jax.ShapeDtypeStruct((ch, fan1), i32),
+        jax.ShapeDtypeStruct((ch,), i32),
+        jax.ShapeDtypeStruct((2 * ch, fan2), i32),
+        jax.ShapeDtypeStruct((2 * ch,), i32),
+        jax.ShapeDtypeStruct((classes, flat), i32),
+    )
+
+
+def binconv_layer_entry(x, w, t):
+    """Single-conv-layer golden (16x16x8 -> 8 channels), for layer-level
+    cross-checks against the bit-true simulator."""
+    return conv_bin_layer(x, w, t)
+
+
+def binconv_layer_specs(size=16, ch=8, z2=8):
+    i32 = jnp.int32
+    return (
+        jax.ShapeDtypeStruct((size, size, ch), i32),
+        jax.ShapeDtypeStruct((z2, 9 * ch), i32),
+        jax.ShapeDtypeStruct((z2,), i32),
+    )
+
+
+def fc_head_entry(x_flat, w):
+    """Classifier-head golden (256 -> 4 popcount scores)."""
+    return fc_scores(x_flat, w)
+
+
+def fc_head_specs(flat=256, classes=4):
+    i32 = jnp.int32
+    return (
+        jax.ShapeDtypeStruct((flat,), i32),
+        jax.ShapeDtypeStruct((classes, flat), i32),
+    )

@@ -1,0 +1,137 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, block sizes and data; assertions are exact
+(integer kernels — no tolerance).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, xnor
+
+
+def rand_bits(rng, shape):
+    return jnp.asarray(rng.integers(0, 2, size=shape), jnp.int32)
+
+
+def rand_pm1(rng, shape):
+    return jnp.asarray(rng.integers(0, 2, size=shape) * 2 - 1, jnp.int32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 96),
+    n=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_binconv_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_bits(rng, (m, k))
+    w = rand_pm1(rng, (k, n))
+    t = jnp.asarray(rng.integers(-2, k + 2, size=(n,)), jnp.int32)
+    got = xnor.binconv_matmul(x, w, t)
+    want = ref.binconv_ref(x, w, t)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 32),
+    k=st.integers(1, 64),
+    n=st.integers(1, 16),
+    bits=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_binsum_matches_ref_integer_inputs(m, k, n, bits, seed):
+    """Integer first-layer path: up-to-12-bit activations (§V-A)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 2**bits, size=(m, k)), jnp.int32)
+    w = rand_pm1(rng, (k, n))
+    got = xnor.binsum_matmul(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.binsum_ref(x, w)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    p=st.integers(1, 64),
+    w=st.integers(1, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_or_matches_ref(p, w, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_bits(rng, (p, w))
+    got = xnor.maxpool_or(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.maxpool_or_ref(x)))
+
+
+def test_signed_sum_identity_equals_direct_xnor_popcount():
+    """The identity the whole stack rests on: popcount(xnor) computed
+    directly equals (signed_sum + fanin) / 2."""
+    rng = np.random.default_rng(7)
+    x = rand_bits(rng, (13, 29))
+    w = rand_pm1(rng, (29, 5))
+    direct = ref.xnor_popcount_ref(x, w)
+    via_sum = (ref.binsum_ref(2 * x - 1, w) + 29) // 2
+    np.testing.assert_array_equal(np.asarray(direct), np.asarray(via_sum))
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 8, 32), (128, 128, 128)])
+def test_block_size_invariance(bm, bn, bk):
+    """Output must not depend on the tiling (the knob the perf pass turns)."""
+    rng = np.random.default_rng(3)
+    x = rand_bits(rng, (33, 70))
+    w = rand_pm1(rng, (70, 11))
+    t = jnp.asarray(rng.integers(0, 70, size=(11,)), jnp.int32)
+    got = xnor.binconv_matmul(x, w, t, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.binconv_ref(x, w, t))
+    )
+
+
+def test_degenerate_thresholds():
+    """T' <= 0 is always 1; T' > fanin is always 0 (the degenerate cases
+    the rust scheduler special-cases too)."""
+    rng = np.random.default_rng(5)
+    x = rand_bits(rng, (9, 21))
+    w = rand_pm1(rng, (21, 4))
+    always = xnor.binconv_matmul(x, w, jnp.asarray([-5, 0, 22, 100], jnp.int32))
+    got = np.asarray(always)
+    assert (got[:, 0] == 1).all() and (got[:, 1] == 1).all()
+    assert (got[:, 2] == 0).all() and (got[:, 3] == 0).all()
+
+
+def test_table2_fanin_288():
+    """The Table II workload: 288-input node (3x3 x 32 IFMs)."""
+    rng = np.random.default_rng(11)
+    x = rand_bits(rng, (4, 288))
+    w = rand_pm1(rng, (288, 8))
+    t = jnp.asarray(rng.integers(100, 190, size=(8,)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(xnor.binconv_matmul(x, w, t)),
+        np.asarray(ref.binconv_ref(x, w, t)),
+    )
+
+
+def test_binsum_saturating_none():
+    """Kernel accumulates in int32 — no silent wrap for 12-bit x 2047-deep
+    sums (worst case 2^12 * 2048 << 2^31)."""
+    x = jnp.full((1, 2048), 4095, jnp.int32)
+    w = jnp.ones((2048, 1), jnp.int32)
+    out = xnor.binsum_matmul(x, w)
+    assert int(out[0, 0]) == 4095 * 2048
+
+
+def test_jit_cache_stable():
+    """Two calls with identical shapes hit the same compiled executable and
+    agree (guards against tracing-time randomness)."""
+    rng = np.random.default_rng(13)
+    x = rand_bits(rng, (8, 24))
+    w = rand_pm1(rng, (24, 3))
+    t = jnp.asarray([5, 10, 15], jnp.int32)
+    a = xnor.binconv_matmul(x, w, t)
+    b = xnor.binconv_matmul(x, w, t)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

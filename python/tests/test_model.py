@@ -1,0 +1,106 @@
+"""L2 correctness: golden-model layers vs direct NumPy references (shapes,
+windows ordering, end-to-end forward)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def np_conv_bin(x, w, t, k=3, pad=1):
+    """Direct nested-loop reference of the binary conv layer (HWC, zero
+    pad, (ky, kx, c) fanin order — mirrors rust/src/bnn/reference.rs)."""
+    h, wd, c = x.shape
+    z2 = w.shape[0]
+    oh, ow = h + 2 * pad - k + 1, wd + 2 * pad - k + 1
+    xp = np.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    out = np.zeros((oh, ow, z2), np.int32)
+    for oy in range(oh):
+        for ox in range(ow):
+            win = xp[oy : oy + k, ox : ox + k, :].reshape(-1)  # (ky,kx,c)
+            signed = (2 * win - 1) @ w.T.astype(np.int64).reshape(-1, z2)
+            pc = (signed + k * k * c) // 2
+            out[oy, ox] = (pc >= t).astype(np.int32)
+    return out
+
+
+def test_im2col_window_order():
+    """Window flattening must be (ky, kx, c) — the order the rust scheduler
+    streams products in."""
+    x = jnp.arange(2 * 2 * 3, dtype=jnp.int32).reshape(2, 2, 3)
+    cols = model.im2col(x, k=3, stride=1, pad=1)
+    assert cols.shape == (4, 27)
+    # Window at output (0,0): centre element (ky=1,kx=1) is input (0,0).
+    w00 = np.asarray(cols[0]).reshape(3, 3, 3)
+    np.testing.assert_array_equal(w00[1, 1], np.asarray(x[0, 0]))
+    # Top-left of that window is padding.
+    np.testing.assert_array_equal(w00[0, 0], np.zeros(3))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    size=st.sampled_from([4, 6, 8]),
+    c=st.integers(1, 4),
+    z2=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_layer_matches_loop_reference(size, c, z2, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2, size=(size, size, c)).astype(np.int32)
+    w = (rng.integers(0, 2, size=(z2, 9 * c)) * 2 - 1).astype(np.int32)
+    t = rng.integers(0, 9 * c + 1, size=(z2,)).astype(np.int32)
+    got = model.conv_bin_layer(jnp.asarray(x), jnp.asarray(w), jnp.asarray(t))
+    want = np_conv_bin(x, w, t)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_maxpool_layer_or_semantics():
+    x = np.zeros((4, 4, 2), np.int32)
+    x[0, 0, 0] = 1
+    x[3, 3, 1] = 1
+    got = np.asarray(model.maxpool_layer(jnp.asarray(x)))
+    assert got.shape == (2, 2, 2)
+    assert got[0, 0, 0] == 1 and got[1, 1, 1] == 1
+    assert got.sum() == 2
+
+
+def test_fc_scores_popcount():
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, 2, size=(16,)).astype(np.int32)
+    w = (rng.integers(0, 2, size=(3, 16)) * 2 - 1).astype(np.int32)
+    got = np.asarray(model.fc_scores(jnp.asarray(x), jnp.asarray(w)))
+    want = np.array(
+        [np.sum(x == (w[i] > 0).astype(np.int32)) for i in range(3)], np.int32
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_tiny_bnn_forward_shapes_and_determinism():
+    specs = model.tiny_bnn_specs(size=16, ch=8, classes=4)
+    rng = np.random.default_rng(42)
+    args = []
+    for s in specs:
+        if len(s.shape) == 2 and s.shape[1] > 16:  # weights
+            args.append(jnp.asarray(rng.integers(0, 2, size=s.shape) * 2 - 1, jnp.int32))
+        elif len(s.shape) == 1:  # thresholds
+            args.append(jnp.asarray(rng.integers(0, 72, size=s.shape), jnp.int32))
+        else:  # input
+            args.append(jnp.asarray(rng.integers(0, 2, size=s.shape), jnp.int32))
+    scores = model.tiny_bnn_forward(*args)
+    assert scores.shape == (4,)
+    assert (np.asarray(scores) >= 0).all()
+    assert (np.asarray(scores) <= 256).all()
+    np.testing.assert_array_equal(
+        np.asarray(scores), np.asarray(model.tiny_bnn_forward(*args))
+    )
+
+
+def test_fc_bin_thresholded():
+    rng = np.random.default_rng(2)
+    x = rng.integers(0, 2, size=(32,)).astype(np.int32)
+    w = (rng.integers(0, 2, size=(5, 32)) * 2 - 1).astype(np.int32)
+    t = rng.integers(0, 33, size=(5,)).astype(np.int32)
+    got = np.asarray(model.fc_bin(jnp.asarray(x), jnp.asarray(w), jnp.asarray(t)))
+    pc = np.array([np.sum(x == (w[i] > 0)) for i in range(5)])
+    np.testing.assert_array_equal(got, (pc >= t).astype(np.int32))

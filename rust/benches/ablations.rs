@@ -1,0 +1,135 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. **Adder scheme** — the paper's footnote 3: 2-/3-bit carry-lookahead
+//!    threshold cells vs the evaluated full-adder cascade.
+//! 2. **PE count** — the §I scalability claim.
+//! 3. **Network generality** — "the gains are consistent across different
+//!    neural networks" (§V-C), checked over four workloads including two
+//!    (MNIST MLP, SVHN) beyond the paper's evaluation.
+//! 4. **Overlap policy** — fetch/compute overlap (double-buffered L2) vs a
+//!    serialized upper bound.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use tulip::bnn::{alexnet, binarynet_cifar10, mnist_mlp, svhn_net};
+use tulip::config::ArchConfig;
+use tulip::coordinator::NetworkPerf;
+use tulip::scheduler::cla::{ablation, AdderScheme};
+use tulip::util::bench::print_table;
+
+fn main() {
+    // ---- 1. Carry-lookahead cells (footnote 3) -------------------------
+    for n in [288usize, 1152, 1023] {
+        let rows: Vec<Vec<String>> = ablation(n)
+            .iter()
+            .map(|r| {
+                vec![
+                    r.scheme.to_string(),
+                    r.node_cycles.to_string(),
+                    format!("{:.2}X", r.speedup_vs_fa),
+                    format!("{:.2}X", r.area_factor),
+                    format!("{:.2}X", r.energy_factor),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!("Ablation: adder scheme, {n}-input node"),
+            &["scheme", "cycles", "speedup", "cell area", "node energy"],
+            &rows,
+        );
+    }
+    println!(
+        "CLA-2 gives ~1.6X node throughput for ~1.3X cell area at near-parity\n\
+         energy — consistent with the paper's 'increase the throughput at the\n\
+         expense of a small increase in area and power' (footnote 3)."
+    );
+
+    // ---- 2. PE scaling ---------------------------------------------------
+    let net = binarynet_cifar10();
+    let mut rows = Vec::new();
+    let base = NetworkPerf::model(&net, &ArchConfig::tulip().with_pes(64)).conv_aggregate();
+    for pes in [64usize, 128, 256, 512, 1024] {
+        let c = NetworkPerf::model(&net, &ArchConfig::tulip().with_pes(pes)).conv_aggregate();
+        rows.push(vec![
+            pes.to_string(),
+            format!("{:.1}", c.gops),
+            format!("{:.2}X", c.gops / base.gops),
+            format!("{:.2}", c.tops_per_w),
+        ]);
+    }
+    print_table(
+        "Ablation: PE count (BinaryNet conv) — §I 'throughput increases linearly'",
+        &["PEs", "GOp/s", "scaling", "TOp/s/W"],
+        &rows,
+    );
+
+    // ---- 3. Generality across networks ----------------------------------
+    let mut rows = Vec::new();
+    for net in [binarynet_cifar10(), alexnet(), svhn_net(), mnist_mlp()] {
+        let t = NetworkPerf::model(&net, &ArchConfig::tulip());
+        let y = NetworkPerf::model(&net, &ArchConfig::yodann());
+        let (ta, ya) = (t.total_aggregate(), y.total_aggregate());
+        rows.push(vec![
+            format!("{}/{}", net.name, net.dataset),
+            format!("{:.0}", ta.mops),
+            format!("{:.2}", ya.tops_per_w),
+            format!("{:.2}", ta.tops_per_w),
+            format!("{:.2}X", ta.tops_per_w / ya.tops_per_w),
+        ]);
+    }
+    print_table(
+        "Ablation: network generality (all layers)",
+        &["network", "MOp", "YodaNN TOp/s/W", "TULIP TOp/s/W", "gain"],
+        &rows,
+    );
+    println!(
+        "The MLP (FC-only) gain collapses toward 1X — FC layers are weight-\n\
+         stream-bound on both designs, the §V-C effect in its pure form."
+    );
+
+    // ---- 3b. Integer layers on PEs vs MACs (the §V-C steering decision) --
+    use tulip::coordinator::exec::{pe_int_node_cycles, pe_node_cost};
+    use tulip::scheduler::seqgen::SequenceGenerator;
+    let mut sg = SequenceGenerator::new();
+    let mut rows = Vec::new();
+    for bits in [1u32, 4, 8, 12] {
+        let cycles = if bits == 1 {
+            pe_node_cost(&mut sg, 288, 288).cycles
+        } else {
+            pe_int_node_cycles(288, bits)
+        };
+        rows.push(vec![
+            bits.to_string(),
+            cycles.to_string(),
+            format!("{:.0}X", cycles as f64 / 17.0),
+        ]);
+    }
+    print_table(
+        "Ablation: 288-input node on a TULIP-PE by activation width (MAC = 17 cy)",
+        &["activation bits", "PE cycles", "vs MAC"],
+        &rows,
+    );
+    println!(
+        "At 12-bit activations the PE is >200X slower than the MAC — the\n\
+         quantified version of §V-C's 'hence, MACs are used for integer layers'."
+    );
+
+    // ---- 4. Fetch/compute overlap ---------------------------------------
+    let mut rows = Vec::new();
+    for net in [binarynet_cifar10(), alexnet()] {
+        let t = NetworkPerf::model(&net, &ArchConfig::tulip());
+        let overlapped: u64 = t.layers.iter().map(|l| l.total_cycles).sum();
+        let serialized: u64 = t.layers.iter().map(|l| l.compute_cycles + l.fetch_cycles).sum();
+        rows.push(vec![
+            net.name.clone(),
+            overlapped.to_string(),
+            serialized.to_string(),
+            format!("{:.2}X", serialized as f64 / overlapped as f64),
+        ]);
+    }
+    print_table(
+        "Ablation: double-buffered L2 overlap vs serialized fetch+compute (TULIP)",
+        &["network", "overlapped (cy)", "serialized (cy)", "overlap gain"],
+        &rows,
+    );
+}

@@ -1,0 +1,47 @@
+//! Fig. 7 regeneration: the area rollup of the TULIP layout in TSMC
+//! 40nm-LP, checked against the paper's floorplan numbers, plus the
+//! PE-deployment claim ("TULIP can deploy an order of magnitude more PEs
+//! ... for the same chip area").
+//!
+//! Run: `cargo bench --bench fig7_area`
+
+use tulip::energy::{calib, tulip_area, yodann_area};
+use tulip::metrics;
+
+fn main() {
+    metrics::print_fig7();
+
+    let t = tulip_area();
+    println!("\npaper Fig. 7 anchors:");
+    let checks = [
+        ("die area (mm^2)", t.total_mm2(), calib::DIE_AREA_MM2),
+        ("image buffer (um^2)", t.image_buffer_um2, 680e3),
+        ("kernel buffer (um^2)", t.kernel_buffer_um2, 293e3),
+        ("controller (um^2)", t.controller_um2, 4.52e3),
+        ("processing (um^2)", t.processing_um2, 656e3),
+    ];
+    for (name, ours, paper) in checks {
+        let delta = (ours - paper).abs() / paper * 100.0;
+        println!("  {name:<22} ours {ours:>12.2}  paper {paper:>12.2}  delta {delta:.1}%");
+    }
+
+    // §VI: "TULIP can deploy an order of magnitude more PEs as compared to
+    // a MAC-based architecture for the same chip area."
+    let pes_per_mac_area = calib::MAC_AREA_UM2 / calib::PE_AREA_UM2;
+    println!(
+        "\nPEs per full-MAC footprint: {pes_per_mac_area:.1} (paper: 23.18X area ratio ⇒ 'an order of magnitude more PEs')"
+    );
+    let y = yodann_area();
+    println!(
+        "chip-area parity: TULIP {:.2} mm^2 vs YodaNN {:.2} mm^2 ({:+.1}%)",
+        t.total_mm2(),
+        y.total_mm2(),
+        (t.total_mm2() / y.total_mm2() - 1.0) * 100.0
+    );
+
+    // Chip average power anchor (Fig. 7: 23.9 mW).
+    println!(
+        "paper chip power: {:.1} mW; our modelled TULIP average over BinaryNet conv: see table4_conv",
+        calib::CHIP_POWER_MW
+    );
+}

@@ -1,0 +1,89 @@
+//! L3 hot-path benchmarks — the profiling substrate for EXPERIMENTS.md
+//! §Perf. Covers every loop the coordinator or the bit-true engine sits
+//! in: PE stepping, schedule generation (cached and uncached), bit-true
+//! layer execution, and the full analytic network model.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use tulip::arch::unit::PeArray;
+use tulip::bnn::layer::LayerKind;
+use tulip::bnn::tensor::{BinWeights, BitTensor};
+use tulip::bnn::{alexnet, binarynet_cifar10, Layer};
+use tulip::config::ArchConfig;
+use tulip::coordinator::NetworkPerf;
+use tulip::pe::TulipPe;
+use tulip::scheduler::adder_tree;
+use tulip::scheduler::seqgen::{OpDesc, SequenceGenerator};
+use tulip::sim::cycle;
+use tulip::util::bench::bench;
+
+fn main() {
+    // --- 1. PE micro-step (the innermost bit-true loop) -----------------
+    let mut sg = SequenceGenerator::new();
+    let prog = sg.program(&OpDesc::ThresholdNode { n: 288, t_popcount: 144 });
+    let word = &prog.schedule.words[10];
+    let mut pe = TulipPe::new();
+    bench("pe.step (single control word)", 7, || {
+        pe.step(word, &[]);
+        pe.neuron_out(0)
+    });
+
+    // --- 2. Whole-node bit-true execution -------------------------------
+    let products = BitTensor::random(1, 1, 288, 3).data;
+    bench("bit-true 288-node (384 cycles)", 7, || {
+        let mut pe = TulipPe::new();
+        prog.schedule.run_on(&mut pe, &products);
+        pe.neuron_out(prog.out_neuron.unwrap())
+    });
+
+    // --- 3. Schedule generation: uncached vs cached ----------------------
+    bench("threshold_node(288) generation (uncached)", 5, || {
+        adder_tree::threshold_node(288, 144).total_cycles()
+    });
+    bench("threshold_node(1023) generation (uncached)", 5, || {
+        adder_tree::threshold_node(1023, 512).total_cycles()
+    });
+    let mut sg2 = SequenceGenerator::new();
+    let _ = sg2.program(&OpDesc::ThresholdNode { n: 288, t_popcount: 144 });
+    bench("seqgen.program(288) (cached)", 7, || {
+        sg2.program(&OpDesc::ThresholdNode { n: 288, t_popcount: 144 }).schedule.cycles()
+    });
+    // A realistic conv-layer setup: 64 channels, 64 distinct thresholds —
+    // the shared-tree optimization makes the marginal threshold a
+    // clone+append instead of a full backtracking re-plan.
+    bench("seqgen: 64 distinct thresholds (n=288)", 5, || {
+        let mut sg = SequenceGenerator::new();
+        let mut total = 0usize;
+        for t in 100..164 {
+            total += sg.program(&OpDesc::ThresholdNode { n: 288, t_popcount: t }).schedule.cycles();
+        }
+        total
+    });
+
+    // --- 4. Bit-true conv layer on an 8-PE array -------------------------
+    let layer = Layer::conv("b", LayerKind::ConvBin, (8, 8, 16), 3, 1, 1, 8, None);
+    let input = BitTensor::random(8, 8, 16, 5);
+    let weights = BinWeights::random(8, layer.fanin(), 6);
+    bench("bit-true conv 8x8x16 -> 8ch (8 PEs)", 5, || {
+        let mut array = PeArray::new(2, 4);
+        let mut sg = SequenceGenerator::new();
+        cycle::conv_bin_cycle(&mut array, &mut sg, &input, &layer, &weights).cycles
+    });
+
+    // --- 5. Analytic model over full networks ---------------------------
+    let bn = binarynet_cifar10();
+    let an = alexnet();
+    bench("NetworkPerf::model(BinaryNet, TULIP)", 5, || {
+        NetworkPerf::model(&bn, &ArchConfig::tulip()).total_aggregate().cycles
+    });
+    bench("NetworkPerf::model(AlexNet, both archs)", 5, || {
+        let t = NetworkPerf::model(&an, &ArchConfig::tulip()).total_aggregate().cycles;
+        let y = NetworkPerf::model(&an, &ArchConfig::yodann()).total_aggregate().cycles;
+        t + y
+    });
+
+    // --- 6. Register-allocation planner (the backtracking search) -------
+    // 1023 is the PE's documented fan-in ceiling (§IV-C "up to 10-bit
+    // addition"); larger fan-ins are chunked by the coordinator.
+    bench("plan+emit sum_tree(1023)", 5, || adder_tree::sum_tree(1023).0.cycles());
+}

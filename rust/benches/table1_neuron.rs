@@ -1,0 +1,26 @@
+//! Table I regeneration: the hardware threshold-logic neuron vs its CMOS
+//! standard-cell equivalent (area / power / delay, across corners), plus a
+//! micro-benchmark of the simulator's cell model (the innermost hot path).
+//!
+//! Run: `cargo bench --bench table1_neuron`
+
+use tulip::metrics;
+use tulip::neuron::{table1_improvements, HwNeuron};
+use tulip::util::bench::bench;
+
+fn main() {
+    metrics::print_table1();
+
+    let (a, p, d) = table1_improvements();
+    println!("\npaper Table I X column: 1.8X area, 1.5X power, 1.8X delay");
+    println!("measured              : {a:.1}X area, {p:.1}X power, {d:.1}X delay");
+
+    // Simulator micro-bench: threshold-cell evaluation rate (feeds the
+    // bit-true engine's roofline — see EXPERIMENTS.md §Perf).
+    let mut n = HwNeuron::new();
+    let mut i = 0u64;
+    bench("hw_neuron.clock (cell model eval)", 7, || {
+        i = i.wrapping_add(1);
+        n.clock(i & 1 != 0, i & 2 != 0, i & 4 != 0, i & 8 != 0, (i % 6) as i32)
+    });
+}

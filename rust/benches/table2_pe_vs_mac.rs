@@ -1,0 +1,49 @@
+//! Table II regeneration: the fully reconfigurable YodaNN MAC vs one
+//! TULIP-PE on the 288-input neuron (3×3 kernel × 32 IFMs), plus bit-true
+//! execution benchmarks of both unit models.
+//!
+//! Paper row anchors: MAC 3.54e4 µm² / 7.17 mW / 17 cy / 39 ns;
+//! TULIP-PE 1.53e3 µm² / 0.12 mW / 441 cy / 1014 ns; PDP advantage 2.27×.
+//!
+//! Run: `cargo bench --bench table2_pe_vs_mac`
+
+use tulip::baseline::MacUnit;
+use tulip::bnn::tensor::BitTensor;
+use tulip::metrics;
+use tulip::pe::TulipPe;
+use tulip::scheduler::seqgen::{OpDesc, SequenceGenerator};
+use tulip::util::bench::bench;
+
+fn main() {
+    let t2 = metrics::print_table2();
+    println!(
+        "\npaper: 23.18X area, 59.75X power, 0.038X cycles (17 vs 441), PDP 2.27X\n\
+         ours : {:.2}X area, {:.1}X power, {:.3}X cycles ({} vs {}), PDP {:.2}X\n\
+         (cycle delta vs the paper's 441 and the Table II/IV power-calibration\n\
+          tension are quantified in EXPERIMENTS.md §Table II)",
+        t2.mac_area_um2 / t2.pe_area_um2,
+        t2.mac_power_mw / t2.pe_power_mw,
+        t2.mac_cycles as f64 / t2.pe_cycles as f64,
+        t2.mac_cycles,
+        t2.pe_cycles,
+        t2.pdp_ratio()
+    );
+
+    // Bit-true PE node execution rate (simulator hot path).
+    let mut sg = SequenceGenerator::new();
+    let prog = sg.program(&OpDesc::ThresholdNode { n: 288, t_popcount: 144 });
+    let products = BitTensor::random(1, 1, 288, 3).data;
+    bench("bit-true 288-input node on a TULIP-PE", 7, || {
+        let mut pe = TulipPe::new();
+        prog.schedule.run_on(&mut pe, &products);
+        pe.neuron_out(prog.out_neuron.unwrap())
+    });
+
+    // MAC functional model.
+    let mac = MacUnit::yodann();
+    let inputs: Vec<i32> = products.iter().map(|&b| if b { 1 } else { -1 }).collect();
+    let weights: Vec<i8> = (0..288).map(|i| if i % 3 == 0 { -1 } else { 1 }).collect();
+    bench("MAC 288-input weighted sum (functional)", 7, || {
+        mac.weighted_sum(&inputs, &weights)
+    });
+}

@@ -1,0 +1,55 @@
+//! Table IV regeneration: YodaNN vs TULIP on the convolution layers of
+//! BinaryNet-CIFAR10 and AlexNet-ImageNet (Op, GOp/s, Energy, Time,
+//! TOp/s/W), with the paper's numbers printed alongside.
+//!
+//! Run: `cargo bench --bench table4_conv`
+
+use tulip::bnn::{alexnet, binarynet_cifar10};
+use tulip::metrics;
+use tulip::util::bench::bench;
+
+struct PaperRow {
+    energy_y: f64,
+    energy_t: f64,
+    time_y: f64,
+    time_t: f64,
+    eff_y: f64,
+    eff_t: f64,
+}
+
+fn main() {
+    let paper = [
+        ("BinaryNet", PaperRow { energy_y: 472.6, energy_t: 159.1, time_y: 21.4, time_t: 20.6, eff_y: 2.2, eff_t: 6.4 }),
+        ("AlexNet", PaperRow { energy_y: 678.8, energy_t: 224.5, time_y: 28.1, time_t: 25.9, eff_y: 3.0, eff_t: 9.1 }),
+    ];
+
+    for (net, p) in [binarynet_cifar10(), alexnet()].into_iter().zip(&paper) {
+        let c = metrics::print_comparison(&net, true);
+        let (_, row) = p;
+        println!(
+            "paper:   Y {:.1} uJ / {:.1} ms / {:.1} TOp/s/W | T {:.1} uJ / {:.1} ms / {:.1} TOp/s/W  (gain {:.1}X)",
+            row.energy_y, row.time_y, row.eff_y, row.energy_t, row.time_t, row.eff_t,
+            row.eff_t / row.eff_y
+        );
+        println!(
+            "ours:    Y {:.1} uJ / {:.1} ms / {:.1} TOp/s/W | T {:.1} uJ / {:.1} ms / {:.1} TOp/s/W  (gain {:.1}X)",
+            c.yodann.energy_uj, c.yodann.time_ms, c.yodann.tops_per_w,
+            c.tulip.energy_uj, c.tulip.time_ms, c.tulip.tops_per_w,
+            c.efficiency_gain()
+        );
+        println!(
+            "shape:   energy-efficiency winner {} (paper: TULIP), gain {:.1}X vs paper {:.1}X\n",
+            if c.efficiency_gain() > 1.0 { "TULIP" } else { "YodaNN" },
+            c.efficiency_gain(),
+            row.eff_t / row.eff_y
+        );
+    }
+
+    // Model-evaluation throughput (the L3 analytic engine itself).
+    let net = alexnet();
+    bench("NetworkPerf::model(AlexNet, TULIP)", 5, || {
+        tulip::coordinator::NetworkPerf::model(&net, &tulip::config::ArchConfig::tulip())
+            .conv_aggregate()
+            .cycles
+    });
+}

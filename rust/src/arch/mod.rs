@@ -1,0 +1,14 @@
+//! Top-level architecture (Fig. 6): image buffer (two-stage L2/L1
+//! standard-cell memory), kernel shift-register buffer, processing units
+//! (XNOR array + 8 TULIP-PEs + simplified MAC each), output buffers and
+//! the controller with its clock-gating strategy.
+//!
+//! * [`memory`] — buffer capacity + per-layer traffic model (feeds the
+//!   energy model and the fetch-time side of the performance model).
+//! * [`unit`] — the processing-unit structure used by the bit-true engine.
+//! * [`controller`] — per-layer control programs and clock-gating
+//!   bookkeeping.
+
+pub mod controller;
+pub mod memory;
+pub mod unit;

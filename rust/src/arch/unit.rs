@@ -1,0 +1,145 @@
+//! The processing unit (Fig. 6): an XNOR product array feeding eight
+//! TULIP-PEs (one OFM channel each) and one simplified MAC for integer
+//! layers. 32 such units form the evaluated chip (256 PEs, 32 MACs).
+
+use crate::baseline::MacUnit;
+use crate::bnn::tensor::BinWeights;
+use crate::pe::{PeStats, TulipPe};
+
+/// XNOR product generation: "The inputs and weights are multiplied using
+/// XNOR gates, to generate product terms."
+pub fn xnor_products(window: &[bool], weights: &[i8]) -> Vec<bool> {
+    assert_eq!(window.len(), weights.len());
+    window.iter().zip(weights).map(|(&x, &w)| x == (w > 0)).collect()
+}
+
+/// Allocation-free variant for the bit-true hot loop (§Perf): writes the
+/// products into a caller-owned buffer.
+pub fn xnor_products_into(window: &[bool], weights: &[i8], out: &mut Vec<bool>) {
+    assert_eq!(window.len(), weights.len());
+    out.clear();
+    out.extend(window.iter().zip(weights).map(|(&x, &w)| x == (w > 0)));
+}
+
+/// One processing unit.
+#[derive(Debug, Clone)]
+pub struct ProcessingUnit {
+    pub pes: Vec<TulipPe>,
+    pub mac: MacUnit,
+}
+
+impl ProcessingUnit {
+    /// The paper's unit: 8 PEs + 1 simplified MAC.
+    pub fn new(pes_per_unit: usize) -> Self {
+        ProcessingUnit { pes: (0..pes_per_unit).map(|_| TulipPe::new()).collect(), mac: MacUnit::simplified() }
+    }
+
+    /// Merged PE activity counters.
+    pub fn pe_stats(&self) -> PeStats {
+        let mut s = PeStats::default();
+        for pe in &self.pes {
+            s.merge(&pe.stats());
+        }
+        s
+    }
+
+    pub fn reset_stats(&mut self) {
+        for pe in &mut self.pes {
+            pe.reset_stats();
+        }
+    }
+}
+
+/// A SIMD array of processing units sharing one broadcast window
+/// ("This window of input pixels is broadcasted to all the processing
+/// units present in the design").
+#[derive(Debug, Clone)]
+pub struct PeArray {
+    pub units: Vec<ProcessingUnit>,
+    pub pes_per_unit: usize,
+}
+
+impl PeArray {
+    pub fn new(num_units: usize, pes_per_unit: usize) -> Self {
+        PeArray {
+            units: (0..num_units).map(|_| ProcessingUnit::new(pes_per_unit)).collect(),
+            pes_per_unit,
+        }
+    }
+
+    /// Paper design point: 32 units × 8 PEs.
+    pub fn paper() -> Self {
+        Self::new(crate::energy::calib::NUM_MACS, crate::energy::calib::PES_PER_UNIT)
+    }
+
+    pub fn num_pes(&self) -> usize {
+        self.units.len() * self.pes_per_unit
+    }
+
+    /// Borrow PE `i` (array-flattened index).
+    pub fn pe_mut(&mut self, i: usize) -> &mut TulipPe {
+        let u = i / self.pes_per_unit;
+        let p = i % self.pes_per_unit;
+        &mut self.units[u].pes[p]
+    }
+
+    /// Generate per-PE product vectors for one broadcast window: PE `i`
+    /// applies filter `channel_base + i`'s weights to the same window.
+    pub fn products_for_window(
+        &self,
+        window: &[bool],
+        weights: &BinWeights,
+        channel_base: usize,
+    ) -> Vec<Vec<bool>> {
+        (0..self.num_pes())
+            .filter(|i| channel_base + i < weights.z2)
+            .map(|i| xnor_products(window, weights.filter(channel_base + i)))
+            .collect()
+    }
+
+    /// Total PE activity across the array.
+    pub fn stats(&self) -> PeStats {
+        let mut s = PeStats::default();
+        for u in &self.units {
+            s.merge(&u.pe_stats());
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xnor_is_equality_of_sign() {
+        assert_eq!(
+            xnor_products(&[true, true, false, false], &[1, -1, 1, -1]),
+            vec![true, false, false, true]
+        );
+    }
+
+    #[test]
+    fn array_geometry() {
+        let arr = PeArray::paper();
+        assert_eq!(arr.num_pes(), 256);
+        assert_eq!(arr.units.len(), 32);
+    }
+
+    #[test]
+    fn products_respect_channel_bounds() {
+        let arr = PeArray::new(2, 2); // 4 PEs
+        let w = BinWeights::random(3, 4, 1); // only 3 channels
+        let window = vec![true, false, true, true];
+        let prods = arr.products_for_window(&window, &w, 0);
+        assert_eq!(prods.len(), 3); // clipped at z2
+        assert_eq!(prods[0].len(), 4);
+    }
+
+    #[test]
+    fn pe_indexing_is_stable() {
+        let mut arr = PeArray::new(2, 3);
+        arr.pe_mut(4).regs_mut().poke_field(0, 0, 4, 7);
+        assert_eq!(arr.units[1].pes[1].regs().peek_field(0, 0, 4), 7);
+    }
+}

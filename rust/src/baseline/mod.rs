@@ -1,0 +1,197 @@
+//! The YodaNN baseline [17] — a conventional MAC-based BNN accelerator,
+//! re-implemented (as the paper did, §V-A) in the same technology so the
+//! comparison is fair.
+//!
+//! YodaNN's processing element is a **15-bit fully reconfigurable MAC**
+//! supporting 3×3, 5×5 and 7×7 kernel windows with binary weights and up to
+//! 12-bit inputs. For kernels with `k ≤ 5` the datapath fetches and reduces
+//! **two IFMs per cycle** (2·k² products/cycle); for `k = 7` one IFM per
+//! cycle. A 288-input weighted sum (3×3 × 32 IFMs) therefore takes
+//! `32/2 + 1 = 17` cycles — exactly Table II's figure. For binary layers
+//! the paper adds clock gating of 11 of the 12 input bits.
+//!
+//! TULIP's integer layers use a **simplified MAC** (§V-C): not
+//! reconfigurable, 5×5/7×7 windows only, with a proportionally smaller
+//! area/power footprint (constants in `energy::calib`).
+
+
+/// Which MAC variant (Table II / §V-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MacKind {
+    /// YodaNN's fully reconfigurable 15-bit MAC (3×3/5×5/7×7).
+    FullReconfigurable,
+    /// TULIP's simplified integer-layer MAC (5×5/7×7 only).
+    Simplified,
+}
+
+/// Cycle/functional model of the MAC unit.
+#[derive(Debug, Clone, Copy)]
+pub struct MacUnit {
+    pub kind: MacKind,
+    /// Accumulator width in bits (15 for YodaNN's MAC).
+    pub acc_bits: u32,
+}
+
+/// Activity record for the energy model.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MacStats {
+    /// Cycles with the full integer datapath active.
+    pub int_cycles: u64,
+    /// Cycles with 11/12 input bits clock-gated (binary layers).
+    pub bin_cycles: u64,
+    /// Idle (fully gated) cycles.
+    pub idle_cycles: u64,
+}
+
+impl MacStats {
+    pub fn merge(&mut self, o: &MacStats) {
+        self.int_cycles += o.int_cycles;
+        self.bin_cycles += o.bin_cycles;
+        self.idle_cycles += o.idle_cycles;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.int_cycles + self.bin_cycles + self.idle_cycles
+    }
+}
+
+impl MacUnit {
+    pub fn yodann() -> Self {
+        MacUnit { kind: MacKind::FullReconfigurable, acc_bits: 15 }
+    }
+
+    pub fn simplified() -> Self {
+        MacUnit { kind: MacKind::Simplified, acc_bits: 15 }
+    }
+
+    /// Does this MAC support a `k × k` kernel window?
+    pub fn supports_kernel(&self, k: usize) -> bool {
+        match self.kind {
+            MacKind::FullReconfigurable => matches!(k, 3 | 5 | 7),
+            // §V-C: the simplified MAC supports only 5×5 and 7×7 windows; a
+            // 3×3 layer is padded into the 5×5 datapath.
+            MacKind::Simplified => matches!(k, 3 | 5 | 7),
+        }
+    }
+
+    /// IFMs reduced per cycle for a `k × k` window (§V-C: "when the kernel
+    /// size is small (k ≤ 5), the MAC units in both designs can fetch twice
+    /// the number of IFMs").
+    pub fn ifms_per_cycle(&self, k: usize) -> usize {
+        if k <= 5 {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// The effective window width the datapath computes with. The
+    /// simplified MAC maps 3×3 onto its 5×5 datapath.
+    pub fn datapath_k(&self, k: usize) -> usize {
+        match self.kind {
+            MacKind::FullReconfigurable => k,
+            MacKind::Simplified => {
+                if k <= 5 {
+                    5.max(k)
+                } else {
+                    7
+                }
+            }
+        }
+    }
+
+    /// Cycles to reduce one `k×k × ifms` window into the accumulator:
+    /// `⌈ifms / ifms_per_cycle⌉ + 1` (pipeline fill/writeback).
+    /// Table II anchor: `k = 3, ifms = 32` → 17 cycles.
+    pub fn window_cycles(&self, k: usize, ifms: usize) -> u64 {
+        assert!(self.supports_kernel(k), "unsupported kernel {k}");
+        (ifms.div_ceil(self.ifms_per_cycle(k)) + 1) as u64
+    }
+
+    /// Functional weighted sum: binary weights (±1), integer activations.
+    /// Saturates at the accumulator width, as the silicon would.
+    pub fn weighted_sum(&self, inputs: &[i32], weights: &[i8]) -> i64 {
+        assert_eq!(inputs.len(), weights.len());
+        let max = (1i64 << (self.acc_bits - 1)) - 1;
+        let min = -(1i64 << (self.acc_bits - 1));
+        let mut acc = 0i64;
+        for (&x, &w) in inputs.iter().zip(weights) {
+            debug_assert!(w == 1 || w == -1, "YodaNN uses binary weights");
+            acc += w as i64 * x as i64;
+            acc = acc.clamp(min, max);
+        }
+        acc
+    }
+
+    /// Binary-layer weighted sum over {0,1} activations with ±1 weights —
+    /// the same quantity TULIP's adder tree computes, so the two designs
+    /// can be cross-checked bit-for-bit.
+    pub fn binary_weighted_sum(&self, x: &[bool], w: &[i8]) -> i64 {
+        let inputs: Vec<i32> = x.iter().map(|&b| if b { 1 } else { -1 }).collect();
+        self.weighted_sum(&inputs, w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neuron::function::xnor_popcount;
+
+    /// Table II anchor: 288-input neuron (3×3 kernel, 32 IFMs) → 17 cycles.
+    #[test]
+    fn table2_cycle_anchor() {
+        let mac = MacUnit::yodann();
+        assert_eq!(mac.window_cycles(3, 32), 17);
+    }
+
+    #[test]
+    fn window_cycles_by_kernel() {
+        let mac = MacUnit::yodann();
+        assert_eq!(mac.window_cycles(5, 32), 17);
+        assert_eq!(mac.window_cycles(7, 32), 33); // one IFM per cycle
+        assert_eq!(mac.window_cycles(3, 1), 2);
+    }
+
+    #[test]
+    fn kernels_supported() {
+        assert!(MacUnit::yodann().supports_kernel(3));
+        assert!(!MacUnit::yodann().supports_kernel(4));
+        assert_eq!(MacUnit::simplified().datapath_k(3), 5);
+        assert_eq!(MacUnit::simplified().datapath_k(7), 7);
+    }
+
+    #[test]
+    fn weighted_sum_functional() {
+        let mac = MacUnit::yodann();
+        assert_eq!(mac.weighted_sum(&[3, -2, 7], &[1, -1, -1]), 3 + 2 - 7);
+    }
+
+    #[test]
+    fn saturation_at_15_bits() {
+        let mac = MacUnit::yodann();
+        let inputs = vec![2047i32; 32];
+        let weights = vec![1i8; 32];
+        assert_eq!(mac.weighted_sum(&inputs, &weights), (1 << 14) - 1);
+        let weights_neg = vec![-1i8; 32];
+        assert_eq!(mac.weighted_sum(&inputs, &weights_neg), -(1 << 14));
+    }
+
+    /// MAC and TULIP compute the same binary-layer quantity:
+    /// `2·popcount(xnor) − n`.
+    #[test]
+    fn binary_sum_consistent_with_popcount() {
+        let mac = MacUnit::yodann();
+        let x = [true, false, true, true, false, true];
+        let w = [1i8, -1, -1, 1, 1, 1];
+        let s = mac.binary_weighted_sum(&x, &w);
+        let pc = xnor_popcount(&x, &w) as i64;
+        assert_eq!(s, 2 * pc - x.len() as i64);
+    }
+
+    #[test]
+    fn stats_merge() {
+        let mut a = MacStats { int_cycles: 1, bin_cycles: 2, idle_cycles: 3 };
+        a.merge(&MacStats { int_cycles: 10, bin_cycles: 20, idle_cycles: 30 });
+        assert_eq!(a.total(), 66);
+    }
+}

@@ -1,0 +1,206 @@
+//! A single BNN layer and the paper's operation-count formulas (§V-C).
+
+
+/// Layer kind. The paper's workloads have integer first layers ("In large
+/// BNN architectures such as Alexnet, the initial layers are integer
+/// layers, while the rest of the layers are binary") and binary everything
+/// else; max-pooling and batch-norm are folded into the conv layers as in
+/// the paper's schedules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Convolution with integer activations (up to 12 bits), binary weights.
+    ConvInt,
+    /// Convolution with binary activations and weights.
+    ConvBin,
+    /// Fully connected, integer activations, binary weights.
+    FcInt,
+    /// Fully connected, binary activations and weights.
+    FcBin,
+}
+
+/// One layer. Notation follows §V-C: IFMs `(x1, y1, z1)`, OFMs
+/// `(x2, y2, z2)`, kernel `k × k`.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// IFM width.
+    pub x1: usize,
+    /// IFM height.
+    pub y1: usize,
+    /// IFM channels (for FC layers: the flattened input length).
+    pub z1: usize,
+    /// Kernel size (1 for FC).
+    pub k: usize,
+    pub stride: usize,
+    pub padding: usize,
+    /// OFM channels (FC: output length).
+    pub z2: usize,
+    /// Max-pooling window/stride applied after the layer, if any.
+    pub pool: Option<(usize, usize)>,
+    /// Activation bits (12 for integer layers, 1 for binary).
+    pub input_bits: u32,
+    /// §V-C, Table III: AlexNet's first layer is processed in 4 image
+    /// parts because the full frame does not fit on-chip.
+    pub image_parts: usize,
+}
+
+impl Layer {
+    /// Convolution layer constructor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        name: &str,
+        kind: LayerKind,
+        (x1, y1, z1): (usize, usize, usize),
+        k: usize,
+        stride: usize,
+        padding: usize,
+        z2: usize,
+        pool: Option<(usize, usize)>,
+    ) -> Self {
+        assert!(matches!(kind, LayerKind::ConvInt | LayerKind::ConvBin));
+        Layer {
+            name: name.into(),
+            kind,
+            x1,
+            y1,
+            z1,
+            k,
+            stride,
+            padding,
+            z2,
+            pool,
+            input_bits: if kind == LayerKind::ConvInt { 12 } else { 1 },
+            image_parts: 1,
+        }
+    }
+
+    /// Fully connected layer constructor.
+    pub fn fc(name: &str, kind: LayerKind, z1: usize, z2: usize) -> Self {
+        assert!(matches!(kind, LayerKind::FcInt | LayerKind::FcBin));
+        Layer {
+            name: name.into(),
+            kind,
+            x1: 1,
+            y1: 1,
+            z1,
+            k: 1,
+            stride: 1,
+            padding: 0,
+            z2,
+            pool: None,
+            input_bits: if kind == LayerKind::FcInt { 12 } else { 1 },
+            image_parts: 1,
+        }
+    }
+
+    pub fn with_parts(mut self, parts: usize) -> Self {
+        self.image_parts = parts;
+        self
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self.kind, LayerKind::ConvInt | LayerKind::ConvBin)
+    }
+
+    pub fn is_fc(&self) -> bool {
+        !self.is_conv()
+    }
+
+    pub fn is_binary(&self) -> bool {
+        matches!(self.kind, LayerKind::ConvBin | LayerKind::FcBin)
+    }
+
+    /// OFM spatial dims `(x2, y2)` before pooling.
+    pub fn output_spatial(&self) -> (usize, usize) {
+        let x2 = (self.x1 + 2 * self.padding - self.k) / self.stride + 1;
+        let y2 = (self.y1 + 2 * self.padding - self.k) / self.stride + 1;
+        (x2, y2)
+    }
+
+    /// Output dims `(x, y, z)` after the fused pooling step.
+    pub fn output_dims_after_pool(&self) -> (usize, usize, usize) {
+        let (mut x2, mut y2) = self.output_spatial();
+        if let Some((pk, ps)) = self.pool {
+            x2 = (x2 - pk) / ps + 1;
+            y2 = (y2 - pk) / ps + 1;
+        }
+        (x2, y2, self.z2)
+    }
+
+    /// Fan-in of one output neuron: `z1 · k²`.
+    pub fn fanin(&self) -> usize {
+        self.z1 * self.k * self.k
+    }
+
+    /// Number of output pixels `x2 · y2` (1 for FC).
+    pub fn output_pixels(&self) -> usize {
+        let (x2, y2) = self.output_spatial();
+        x2 * y2
+    }
+
+    /// Operation count per the paper (§V-C): `2·z1·k²·x2·y2·z2` MAC
+    /// operations plus `x2·y2·z2` threshold comparisons.
+    pub fn ops(&self) -> u64 {
+        let (x2, y2) = self.output_spatial();
+        let mac = 2 * self.z1 as u64
+            * (self.k * self.k) as u64
+            * (x2 * y2) as u64
+            * self.z2 as u64;
+        let cmp = (x2 * y2) as u64 * self.z2 as u64;
+        mac + cmp
+    }
+
+    /// Total weight bits the kernel buffer must hold / stream for this
+    /// layer (binary weights throughout, §V-A).
+    pub fn weight_bits(&self) -> u64 {
+        (self.z1 * self.k * self.k * self.z2) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_geometry() {
+        let l = Layer::conv("c", LayerKind::ConvBin, (32, 32, 128), 3, 1, 1, 128, None);
+        assert_eq!(l.output_spatial(), (32, 32));
+        assert_eq!(l.fanin(), 1152);
+        assert_eq!(l.output_pixels(), 1024);
+    }
+
+    #[test]
+    fn pooling_shrinks_output() {
+        let l = Layer::conv("c", LayerKind::ConvBin, (32, 32, 128), 3, 1, 1, 128, Some((2, 2)));
+        assert_eq!(l.output_dims_after_pool(), (16, 16, 128));
+        // AlexNet-style overlapping pool.
+        let l = Layer::conv("c1", LayerKind::ConvInt, (227, 227, 3), 11, 4, 0, 96, Some((3, 2)));
+        assert_eq!(l.output_spatial(), (55, 55));
+        assert_eq!(l.output_dims_after_pool(), (27, 27, 96));
+    }
+
+    /// §V-C: 3×3 kernel over 32 IFMs gives the 288-input node of Table II.
+    #[test]
+    fn table2_fanin() {
+        let l = Layer::conv("c", LayerKind::ConvBin, (16, 16, 32), 3, 1, 1, 64, None);
+        assert_eq!(l.fanin(), 288);
+    }
+
+    #[test]
+    fn ops_formula() {
+        let l = Layer::conv("c", LayerKind::ConvBin, (32, 32, 128), 3, 1, 1, 128, None);
+        // 2·128·9·1024·128 + 1024·128
+        assert_eq!(l.ops(), 2 * 128 * 9 * 1024 * 128 + 1024 * 128);
+        let f = Layer::fc("f", LayerKind::FcBin, 8192, 1024);
+        assert_eq!(f.ops(), 2 * 8192 * 1024 + 1024);
+    }
+
+    #[test]
+    fn fc_dims() {
+        let f = Layer::fc("f", LayerKind::FcBin, 1024, 10);
+        assert!(f.is_fc() && f.is_binary());
+        assert_eq!(f.output_dims_after_pool(), (1, 1, 10));
+        assert_eq!(f.weight_bits(), 10240);
+    }
+}

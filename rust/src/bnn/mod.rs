@@ -1,0 +1,111 @@
+//! BNN intermediate representation: layers, networks, the evaluation
+//! workloads of §V (BinaryNet-CIFAR10 and AlexNet-ImageNet), operation
+//! counting per the paper's formulas, and bit-true tensor references.
+
+pub mod bitpack;
+pub mod layer;
+pub mod reference;
+pub mod tensor;
+pub mod zoo;
+
+pub use layer::{Layer, LayerKind};
+pub use zoo::{alexnet, binarynet_cifar10, mnist_mlp, svhn_net, tiny_bnn};
+
+
+/// A BNN as a sequence of layers (the DAG of §I specialized to the chain
+/// topology both evaluation networks have).
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub dataset: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    /// Total operations in MOp, counted as the paper does (§V-C): for a 2-D
+    /// convolution layer `2·z1·k²·x2·y2·z2` multiply/accumulate operations
+    /// plus `x2·y2·z2` comparisons.
+    pub fn total_mops(&self) -> f64 {
+        self.layers.iter().map(|l| l.ops() as f64).sum::<f64>() / 1e6
+    }
+
+    /// MOp restricted to convolution layers (Table IV scope).
+    pub fn conv_mops(&self) -> f64 {
+        self.layers.iter().filter(|l| l.is_conv()).map(|l| l.ops() as f64).sum::<f64>() / 1e6
+    }
+
+    /// MOp restricted to fully connected layers.
+    pub fn fc_mops(&self) -> f64 {
+        self.total_mops() - self.conv_mops()
+    }
+
+    /// Convolution layers only (Table IV), preserving order.
+    pub fn conv_layers(&self) -> impl Iterator<Item = &Layer> {
+        self.layers.iter().filter(|l| l.is_conv())
+    }
+
+    /// Sanity-check layer chaining: each layer's input dims must match the
+    /// previous layer's output dims.
+    pub fn validate(&self) -> Result<(), String> {
+        for w in self.layers.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            let (ox, oy, oz) = a.output_dims_after_pool();
+            let flat_ok = b.is_fc() && b.z1 == ox * oy * oz;
+            let dims_ok = b.x1 == ox && b.y1 == oy && b.z1 == oz;
+            if !(dims_ok || flat_ok) {
+                return Err(format!(
+                    "layer '{}' output {:?} does not feed '{}' input ({},{},{})",
+                    a.name,
+                    (ox, oy, oz),
+                    b.name,
+                    b.x1,
+                    b.y1,
+                    b.z1
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// §V anchors: the paper's op counts. Conv totals depend on the exact
+    /// padding convention; the FC splits match the paper to < 1 MOp
+    /// (Table V − Table IV: 19 MOp for BinaryNet, 118 MOp for AlexNet).
+    #[test]
+    fn fc_mops_match_paper_deltas() {
+        let b = binarynet_cifar10();
+        assert!((b.fc_mops() - 19.0).abs() < 1.5, "BinaryNet FC MOp: {}", b.fc_mops());
+        let a = alexnet();
+        assert!((a.fc_mops() - 118.0).abs() < 3.0, "AlexNet FC MOp: {}", a.fc_mops());
+    }
+
+    #[test]
+    fn conv_mops_same_regime_as_paper() {
+        // Paper: 1017 MOp (BinaryNet conv), 2050 MOp (AlexNet conv). Our
+        // padding conventions land within ~25% — same regime; EXPERIMENTS.md
+        // reports the exact deltas.
+        let b = binarynet_cifar10().conv_mops();
+        assert!(b > 700.0 && b < 1400.0, "BinaryNet conv MOp {b}");
+        let a = alexnet().conv_mops();
+        assert!(a > 1600.0 && a < 2600.0, "AlexNet conv MOp {a}");
+    }
+
+    #[test]
+    fn networks_validate() {
+        binarynet_cifar10().validate().unwrap();
+        alexnet().validate().unwrap();
+        tiny_bnn(16, 8, 2).validate().unwrap();
+    }
+
+    #[test]
+    fn conv_fc_partition() {
+        let n = binarynet_cifar10();
+        let total = n.total_mops();
+        assert!((n.conv_mops() + n.fc_mops() - total).abs() < 1e-9);
+        assert_eq!(n.conv_layers().count(), 6);
+    }
+}

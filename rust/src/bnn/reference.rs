@@ -1,0 +1,193 @@
+//! Functional (non-timed) reference implementations of every BNN layer —
+//! the rust-side oracle the bit-true PE simulation is checked against.
+//! (The JAX golden model in `python/compile` provides an independent
+//! second oracle through the PJRT runtime.)
+
+use super::layer::Layer;
+use super::tensor::{BinWeights, BitTensor, IntTensor};
+use crate::neuron::function::xnor_popcount;
+
+/// Binary convolution: XNOR-popcount + threshold, with zero padding.
+/// Output `o(y,x,ch) = [popcount(xnor(window, w_ch)) ≥ T'_ch]`.
+pub fn conv_bin(input: &BitTensor, layer: &Layer, weights: &BinWeights) -> BitTensor {
+    assert_eq!(input.c, layer.z1);
+    assert_eq!(weights.fanin, layer.fanin());
+    assert_eq!(weights.z2, layer.z2);
+    let (x2, y2) = layer.output_spatial();
+    let mut out = BitTensor::zeros(y2, x2, layer.z2);
+    for oy in 0..y2 {
+        for ox in 0..x2 {
+            let win = input.window(oy, ox, layer.k, layer.stride, layer.padding);
+            for ch in 0..layer.z2 {
+                let pc = xnor_popcount(&win, weights.filter(ch)) as i64;
+                out.set(oy, ox, ch, pc >= weights.thresholds[ch]);
+            }
+        }
+    }
+    out
+}
+
+/// Integer convolution with binary weights (first layers): signed
+/// weighted sum then threshold.
+pub fn conv_int(input: &IntTensor, layer: &Layer, weights: &BinWeights) -> BitTensor {
+    assert_eq!(input.c, layer.z1);
+    let (x2, y2) = layer.output_spatial();
+    let mut out = BitTensor::zeros(y2, x2, layer.z2);
+    for oy in 0..y2 {
+        for ox in 0..x2 {
+            let win = input.window(oy, ox, layer.k, layer.stride, layer.padding);
+            for ch in 0..layer.z2 {
+                let s: i64 = win
+                    .iter()
+                    .zip(weights.filter(ch))
+                    .map(|(&x, &w)| x as i64 * w as i64)
+                    .sum();
+                out.set(oy, ox, ch, s >= weights.thresholds[ch]);
+            }
+        }
+    }
+    out
+}
+
+/// Max-pooling on a binary map = OR over the window (§IV-D).
+pub fn maxpool(input: &BitTensor, k: usize, stride: usize) -> BitTensor {
+    let oh = (input.h - k) / stride + 1;
+    let ow = (input.w - k) / stride + 1;
+    let mut out = BitTensor::zeros(oh, ow, input.c);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ch in 0..input.c {
+                let mut v = false;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        v |= input.get(oy * stride + ky, ox * stride + kx, ch);
+                    }
+                }
+                out.set(oy, ox, ch, v);
+            }
+        }
+    }
+    out
+}
+
+/// Binary fully connected layer on a flattened input.
+pub fn fc_bin(input: &[bool], layer: &Layer, weights: &BinWeights) -> Vec<bool> {
+    assert_eq!(input.len(), layer.z1);
+    assert_eq!(weights.fanin, layer.z1);
+    (0..layer.z2)
+        .map(|ch| xnor_popcount(input, weights.filter(ch)) as i64 >= weights.thresholds[ch])
+        .collect()
+}
+
+/// Binary FC returning raw popcounts (the last layer of a classifier keeps
+/// scores for argmax instead of binarizing).
+pub fn fc_scores(input: &[bool], layer: &Layer, weights: &BinWeights) -> Vec<i64> {
+    (0..layer.z2).map(|ch| xnor_popcount(input, weights.filter(ch)) as i64).collect()
+}
+
+/// Run a whole binary network functionally; returns final-layer scores.
+/// Panics on integer layers (use the tiny all-binary zoo entry for this).
+pub fn forward_scores(
+    net: &super::Network,
+    input: &BitTensor,
+    weights: &[BinWeights],
+) -> Vec<i64> {
+    assert_eq!(net.layers.len(), weights.len());
+    let mut act = input.clone();
+    let mut flat: Option<Vec<bool>> = None;
+    for (i, (layer, w)) in net.layers.iter().zip(weights).enumerate() {
+        let last = i + 1 == net.layers.len();
+        if layer.is_conv() {
+            assert!(layer.is_binary(), "forward_scores handles binary nets only");
+            let mut o = conv_bin(&act, layer, w);
+            if let Some((pk, ps)) = layer.pool {
+                o = maxpool(&o, pk, ps);
+            }
+            act = o;
+        } else {
+            let input_flat = flat.take().unwrap_or_else(|| act.flatten());
+            if last {
+                return fc_scores(&input_flat, layer, w);
+            }
+            flat = Some(fc_bin(&input_flat, layer, w));
+        }
+    }
+    unreachable!("network must end in an FC layer");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::layer::LayerKind;
+    use crate::bnn::zoo::tiny_bnn;
+
+    #[test]
+    fn conv_bin_known_values() {
+        // 1 input channel, all-ones 3×3 image, weight filter of all +1,
+        // threshold 5: interior pixels see 9 ones (with pad), corners 4.
+        let mut input = BitTensor::zeros(3, 3, 1);
+        for i in 0..9 {
+            input.data[i] = true;
+        }
+        let layer = Layer::conv("t", LayerKind::ConvBin, (3, 3, 1), 3, 1, 1, 1, None);
+        let weights = BinWeights {
+            z2: 1,
+            fanin: 9,
+            data: vec![1i8; 9],
+            thresholds: vec![5],
+        };
+        let out = conv_bin(&input, &layer, &weights);
+        assert!(out.get(1, 1, 0), "centre sees 9 ≥ 5");
+        assert!(!out.get(0, 0, 0), "corner sees 4 < 5");
+        assert!(out.get(0, 1, 0), "edge sees 6 ≥ 5");
+    }
+
+    #[test]
+    fn maxpool_or_semantics() {
+        let mut t = BitTensor::zeros(4, 4, 1);
+        t.set(0, 0, 0, true);
+        let p = maxpool(&t, 2, 2);
+        assert_eq!((p.h, p.w), (2, 2));
+        assert!(p.get(0, 0, 0));
+        assert!(!p.get(1, 1, 0));
+    }
+
+    #[test]
+    fn conv_int_signs() {
+        let mut input = IntTensor::zeros(1, 1, 2);
+        input.data = vec![7, 3];
+        let layer = Layer::conv("t", LayerKind::ConvInt, (1, 1, 2), 1, 1, 0, 1, None);
+        let w = BinWeights { z2: 1, fanin: 2, data: vec![1, -1], thresholds: vec![4] };
+        let out = conv_int(&input, &layer, &w);
+        assert!(out.get(0, 0, 0), "7−3 = 4 ≥ 4");
+    }
+
+    #[test]
+    fn tiny_network_forward_runs() {
+        let net = tiny_bnn(8, 4, 3);
+        let weights: Vec<BinWeights> = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), i as u64 + 1))
+            .collect();
+        let input = BitTensor::random(8, 8, 4, 9);
+        let scores = forward_scores(&net, &input, &weights);
+        assert_eq!(scores.len(), 3);
+        assert!(scores.iter().all(|&s| s >= 0 && s <= net.layers[2].z1 as i64));
+        // Determinism.
+        assert_eq!(scores, forward_scores(&net, &input, &weights));
+    }
+
+    #[test]
+    fn fc_bin_matches_fc_scores_thresholding() {
+        let layer = Layer::fc("f", LayerKind::FcBin, 16, 4);
+        let w = BinWeights::random(4, 16, 5);
+        let input: Vec<bool> = (0..16).map(|i| i % 3 == 0).collect();
+        let bits = fc_bin(&input, &layer, &w);
+        let scores = fc_scores(&input, &layer, &w);
+        for i in 0..4 {
+            assert_eq!(bits[i], scores[i] >= w.thresholds[i]);
+        }
+    }
+}

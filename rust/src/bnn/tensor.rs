@@ -1,0 +1,217 @@
+//! Minimal tensors for the bit-true simulation path: binary (HWC bool) and
+//! integer (HWC i32) feature maps, window extraction (im2col), and
+//! deterministic synthetic data generation.
+
+use crate::util::Rng;
+
+/// A binary feature map, HWC layout, `{0,1}` activations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitTensor {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<bool>,
+}
+
+impl BitTensor {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        BitTensor { h, w, c, data: vec![false; h * w * c] }
+    }
+
+    /// Deterministic pseudo-random contents (synthetic workloads).
+    pub fn random(h: usize, w: usize, c: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        BitTensor { h, w, c, data: (0..h * w * c).map(|_| rng.gen_bool(0.5)).collect() }
+    }
+
+    #[inline]
+    pub fn idx(&self, y: usize, x: usize, ch: usize) -> usize {
+        (y * self.w + x) * self.c + ch
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> bool {
+        self.data[self.idx(y, x, ch)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: bool) {
+        let i = self.idx(y, x, ch);
+        self.data[i] = v;
+    }
+
+    /// Zero-padded `k×k×C` window centred per the convolution geometry, in
+    /// (ky, kx, c) order — the product ordering every schedule uses.
+    pub fn window(&self, oy: usize, ox: usize, k: usize, stride: usize, pad: usize) -> Vec<bool> {
+        let mut out = Vec::with_capacity(k * k * self.c);
+        for ky in 0..k {
+            for kx in 0..k {
+                let y = (oy * stride + ky) as isize - pad as isize;
+                let x = (ox * stride + kx) as isize - pad as isize;
+                for ch in 0..self.c {
+                    if y < 0 || x < 0 || y >= self.h as isize || x >= self.w as isize {
+                        out.push(false);
+                    } else {
+                        out.push(self.get(y as usize, x as usize, ch));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Allocation-free window extraction for hot loops (§Perf).
+    pub fn window_into(
+        &self,
+        oy: usize,
+        ox: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        out: &mut Vec<bool>,
+    ) {
+        out.clear();
+        for ky in 0..k {
+            for kx in 0..k {
+                let y = (oy * stride + ky) as isize - pad as isize;
+                let x = (ox * stride + kx) as isize - pad as isize;
+                for ch in 0..self.c {
+                    if y < 0 || x < 0 || y >= self.h as isize || x >= self.w as isize {
+                        out.push(false);
+                    } else {
+                        out.push(self.get(y as usize, x as usize, ch));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Flatten (y, x, c) — the FC-input order.
+    pub fn flatten(&self) -> Vec<bool> {
+        self.data.clone()
+    }
+}
+
+/// An integer feature map, HWC layout.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IntTensor {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        IntTensor { h, w, c, data: vec![0; h * w * c] }
+    }
+
+    /// Random activations within `bits`-bit unsigned range.
+    pub fn random(h: usize, w: usize, c: usize, bits: u32, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let max = (1i32 << bits.min(12)) - 1;
+        IntTensor { h, w, c, data: (0..h * w * c).map(|_| rng.gen_range_i64(0, max as i64) as i32).collect() }
+    }
+
+    #[inline]
+    pub fn idx(&self, y: usize, x: usize, ch: usize) -> usize {
+        (y * self.w + x) * self.c + ch
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> i32 {
+        self.data[self.idx(y, x, ch)]
+    }
+
+    pub fn window(&self, oy: usize, ox: usize, k: usize, stride: usize, pad: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(k * k * self.c);
+        for ky in 0..k {
+            for kx in 0..k {
+                let y = (oy * stride + ky) as isize - pad as isize;
+                let x = (ox * stride + kx) as isize - pad as isize;
+                for ch in 0..self.c {
+                    if y < 0 || x < 0 || y >= self.h as isize || x >= self.w as isize {
+                        out.push(0);
+                    } else {
+                        out.push(self.get(y as usize, x as usize, ch));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Binary weights for one layer: `z2` filters of `k·k·z1` ±1 weights, in
+/// the same (ky, kx, c) order as [`BitTensor::window`].
+#[derive(Debug, Clone)]
+pub struct BinWeights {
+    pub z2: usize,
+    pub fanin: usize,
+    pub data: Vec<i8>,
+    /// Per-output-channel popcount thresholds (batch-norm folded in).
+    pub thresholds: Vec<i64>,
+}
+
+impl BinWeights {
+    pub fn random(z2: usize, fanin: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let data = (0..z2 * fanin).map(|_| if rng.gen_bool(0.5) { 1i8 } else { -1 }).collect();
+        // Thresholds near fanin/2 keep outputs balanced (like trained BN).
+        let thresholds = (0..z2)
+            .map(|_| {
+                let jitter = rng.gen_range_i64(-(fanin as i64) / 8, (fanin as i64) / 8);
+                fanin as i64 / 2 + jitter
+            })
+            .collect();
+        BinWeights { z2, fanin, data, thresholds }
+    }
+
+    /// Filter `o`'s weights.
+    pub fn filter(&self, o: usize) -> &[i8] {
+        &self.data[o * self.fanin..(o + 1) * self.fanin]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_interior_and_padding() {
+        let mut t = BitTensor::zeros(4, 4, 2);
+        t.set(1, 1, 0, true);
+        t.set(1, 1, 1, true);
+        // 3×3 window at output (0,0) with pad 1 → centre is input (0,0)…
+        let w = t.window(1, 1, 3, 1, 1);
+        assert_eq!(w.len(), 18);
+        // centre of the window at (oy=1, ox=1) is input (1,1):
+        assert!(w[(1 * 3 + 1) * 2] && w[(1 * 3 + 1) * 2 + 1]);
+        // corner window is fully padded on two sides:
+        let w0 = t.window(0, 0, 3, 1, 1);
+        assert!(!w0[0] && !w0[1]); // (-1,-1) padded
+    }
+
+    #[test]
+    fn stride_window() {
+        let t = IntTensor::random(8, 8, 1, 4, 7);
+        let w = t.window(1, 2, 3, 2, 0);
+        assert_eq!(w[0], t.get(2, 4, 0));
+        assert_eq!(w[8], t.get(4, 6, 0));
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        assert_eq!(BitTensor::random(4, 4, 3, 42), BitTensor::random(4, 4, 3, 42));
+        assert_ne!(BitTensor::random(4, 4, 3, 42), BitTensor::random(4, 4, 3, 43));
+        let w = BinWeights::random(4, 27, 1);
+        assert_eq!(w.filter(2).len(), 27);
+        assert!(w.thresholds.iter().all(|&t| t >= 0 && t <= 27));
+    }
+
+    #[test]
+    fn int_random_respects_bits() {
+        let t = IntTensor::random(8, 8, 2, 5, 3);
+        assert!(t.data.iter().all(|&v| (0..32).contains(&v)));
+    }
+}

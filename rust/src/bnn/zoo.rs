@@ -1,0 +1,163 @@
+//! The paper's evaluation workloads (§V): BinaryNet on CIFAR-10
+//! (Courbariaux et al. [9]) and AlexNet on ImageNet (XNOR-Net variant
+//! [10][30]), plus a tiny synthetic BNN for bit-true end-to-end validation.
+
+use super::layer::{Layer, LayerKind};
+use super::Network;
+
+/// BinaryNet's CIFAR-10 topology [9]: six 3×3 conv layers
+/// (128-128-256-256-512-512, pooling after every second) and three FC
+/// layers (8192→1024→1024→10). First conv takes 8-bit-ish integer pixels
+/// (processed on the 12-bit datapath); everything downstream is binary.
+pub fn binarynet_cifar10() -> Network {
+    use LayerKind::*;
+    Network {
+        name: "BinaryNet".into(),
+        dataset: "CIFAR10".into(),
+        layers: vec![
+            Layer::conv("conv1", ConvInt, (32, 32, 3), 3, 1, 1, 128, None),
+            Layer::conv("conv2", ConvBin, (32, 32, 128), 3, 1, 1, 128, Some((2, 2))),
+            Layer::conv("conv3", ConvBin, (16, 16, 128), 3, 1, 1, 256, None),
+            Layer::conv("conv4", ConvBin, (16, 16, 256), 3, 1, 1, 256, Some((2, 2))),
+            Layer::conv("conv5", ConvBin, (8, 8, 256), 3, 1, 1, 512, None),
+            Layer::conv("conv6", ConvBin, (8, 8, 512), 3, 1, 1, 512, Some((2, 2))),
+            Layer::fc("fc1", FcBin, 8192, 1024),
+            Layer::fc("fc2", FcBin, 1024, 1024),
+            Layer::fc("fc3", FcBin, 1024, 10),
+        ],
+    }
+}
+
+/// AlexNet (XNOR-Net binarization [30]): integer conv1/conv2, binary
+/// conv3–conv5 and FC stack — the layer split Table III uses. conv1 is
+/// processed in 4 image parts (Table III: "Parts 4").
+pub fn alexnet() -> Network {
+    use LayerKind::*;
+    Network {
+        name: "AlexNet".into(),
+        dataset: "Imagenet".into(),
+        layers: vec![
+            Layer::conv("conv1", ConvInt, (227, 227, 3), 11, 4, 0, 96, Some((3, 2))).with_parts(4),
+            Layer::conv("conv2", ConvInt, (27, 27, 96), 5, 1, 2, 256, Some((3, 2))),
+            Layer::conv("conv3", ConvBin, (13, 13, 256), 3, 1, 1, 384, None),
+            Layer::conv("conv4", ConvBin, (13, 13, 384), 3, 1, 1, 384, None),
+            Layer::conv("conv5", ConvBin, (13, 13, 384), 3, 1, 1, 256, Some((3, 2))),
+            Layer::fc("fc6", FcBin, 9216, 4096),
+            Layer::fc("fc7", FcBin, 4096, 4096),
+            Layer::fc("fc8", FcBin, 4096, 1000),
+        ],
+    }
+}
+
+/// The MNIST MLP of the original BinaryNet evaluation [9] (the paper cites
+/// MNIST/SVHN/CIFAR-10 as the BNN accuracy anchors): 784 → 3×4096 → 10,
+/// all binary after the integer input layer.
+pub fn mnist_mlp() -> Network {
+    use LayerKind::*;
+    Network {
+        name: "BinaryNet-MLP".into(),
+        dataset: "MNIST".into(),
+        layers: vec![
+            Layer::fc("fc1", FcInt, 784, 4096),
+            Layer::fc("fc2", FcBin, 4096, 4096),
+            Layer::fc("fc3", FcBin, 4096, 4096),
+            Layer::fc("fc4", FcBin, 4096, 10),
+        ],
+    }
+}
+
+/// The SVHN convnet of BinaryNet [9]: same topology family as the CIFAR-10
+/// network at half the width (64-64-128-128-256-256 + 1024-unit FCs).
+pub fn svhn_net() -> Network {
+    use LayerKind::*;
+    Network {
+        name: "BinaryNet-SVHN".into(),
+        dataset: "SVHN".into(),
+        layers: vec![
+            Layer::conv("conv1", ConvInt, (32, 32, 3), 3, 1, 1, 64, None),
+            Layer::conv("conv2", ConvBin, (32, 32, 64), 3, 1, 1, 64, Some((2, 2))),
+            Layer::conv("conv3", ConvBin, (16, 16, 64), 3, 1, 1, 128, None),
+            Layer::conv("conv4", ConvBin, (16, 16, 128), 3, 1, 1, 128, Some((2, 2))),
+            Layer::conv("conv5", ConvBin, (8, 8, 128), 3, 1, 1, 256, None),
+            Layer::conv("conv6", ConvBin, (8, 8, 256), 3, 1, 1, 256, Some((2, 2))),
+            Layer::fc("fc1", FcBin, 4096, 1024),
+            Layer::fc("fc2", FcBin, 1024, 1024),
+            Layer::fc("fc3", FcBin, 1024, 10),
+        ],
+    }
+}
+
+/// A tiny synthetic BNN (`size`×`size` input, `ch` channels, `classes`
+/// outputs) small enough to push through the **bit-true** PE simulation and
+/// cross-check against the JAX golden model (examples/e2e_inference.rs).
+pub fn tiny_bnn(size: usize, ch: usize, classes: usize) -> Network {
+    use LayerKind::*;
+    assert!(size >= 8 && size % 4 == 0);
+    let half = size / 2;
+    let flat = (half / 2) * (half / 2) * (2 * ch);
+    Network {
+        name: format!("TinyBNN-{size}x{size}x{ch}"),
+        dataset: "synthetic".into(),
+        layers: vec![
+            Layer::conv("conv1", ConvBin, (size, size, ch), 3, 1, 1, ch, Some((2, 2))),
+            Layer::conv("conv2", ConvBin, (half, half, ch), 3, 1, 1, 2 * ch, Some((2, 2))),
+            Layer::fc("fc", FcBin, flat, classes),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extra_networks_validate() {
+        mnist_mlp().validate().unwrap();
+        svhn_net().validate().unwrap();
+        // SVHN conv stack feeds 4·4·256 = 4096 into fc1.
+        assert_eq!(svhn_net().layers[6].z1, 4096);
+        // MNIST MLP is FC-only.
+        assert!(mnist_mlp().layers.iter().all(|l| l.is_fc()));
+    }
+
+    /// Table III's layer parameters are reproduced by the AlexNet topology:
+    /// z1/z2 per conv layer drive the P/Z columns (checked end-to-end in
+    /// coordinator::tiling).
+    #[test]
+    fn alexnet_table3_dims() {
+        let n = alexnet();
+        let convs: Vec<&Layer> = n.conv_layers().collect();
+        assert_eq!(convs.len(), 5);
+        assert_eq!((convs[0].z1, convs[0].z2, convs[0].image_parts), (3, 96, 4));
+        assert_eq!((convs[1].z1, convs[1].z2), (96, 256));
+        assert_eq!((convs[2].z1, convs[2].z2), (256, 384));
+        assert_eq!((convs[3].z1, convs[3].z2), (384, 384));
+        assert_eq!((convs[4].z1, convs[4].z2), (384, 256));
+        assert!(convs[2].is_binary() && !convs[1].is_binary());
+    }
+
+    #[test]
+    fn binarynet_shape_chain() {
+        let n = binarynet_cifar10();
+        n.validate().unwrap();
+        let last_conv = n.conv_layers().last().unwrap();
+        assert_eq!(last_conv.output_dims_after_pool(), (4, 4, 512));
+        // 4·4·512 = 8192 feeds fc1.
+        assert_eq!(n.layers[6].z1, 8192);
+    }
+
+    #[test]
+    fn tiny_bnn_dims() {
+        let n = tiny_bnn(16, 8, 4);
+        n.validate().unwrap();
+        assert_eq!(n.layers[2].z1, 4 * 4 * 16);
+    }
+
+    /// Only conv1 (and conv2 for AlexNet) are integer; the rest binary —
+    /// this drives the MAC-vs-PE split in the coordinator.
+    #[test]
+    fn integer_binary_split() {
+        assert_eq!(binarynet_cifar10().layers.iter().filter(|l| !l.is_binary()).count(), 1);
+        assert_eq!(alexnet().layers.iter().filter(|l| !l.is_binary()).count(), 2);
+    }
+}

@@ -1,0 +1,100 @@
+//! Architecture configuration — the knobs §IV-E says can be "tailored for a
+//! given application" (PE/MAC counts, on-chip IFM capacity, interface
+//! widths). Defaults reproduce the paper's evaluated design point; the
+//! ablation benches sweep them.
+
+use crate::energy::calib;
+
+/// Which design point a simulation models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArchKind {
+    /// TULIP: 256 TULIP-PEs for binary layers + 32 simplified MACs for
+    /// integer layers.
+    Tulip,
+    /// YodaNN [17]: 32 fully reconfigurable MACs for every layer.
+    Yodann,
+}
+
+impl std::fmt::Display for ArchKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArchKind::Tulip => write!(f, "TULIP"),
+            ArchKind::Yodann => write!(f, "YodaNN"),
+        }
+    }
+}
+
+/// Tunable architecture parameters.
+#[derive(Debug, Clone)]
+pub struct ArchConfig {
+    pub kind: ArchKind,
+    /// Number of TULIP-PEs (binary-layer OFM parallelism).
+    pub num_pes: usize,
+    /// Number of MAC units (integer layers; all layers for YodaNN).
+    pub num_macs: usize,
+    /// IFMs resident on-chip per slab (§V-C: 32; doubled for k ≤ 5 on the
+    /// MAC path).
+    pub onchip_ifms: usize,
+    /// Off-chip interface bandwidth, bits/cycle.
+    pub offchip_bits_per_cycle: f64,
+    /// FC weight-stream bandwidth, bits/cycle.
+    pub weight_bits_per_cycle: f64,
+    /// Maximum fan-in a single PE adder-tree pass handles before the
+    /// coordinator switches to chunk + accumulate (§IV-C: "up to 10-bit
+    /// addition", i.e. 1023 inputs).
+    pub max_tree_fanin: usize,
+}
+
+impl ArchConfig {
+    /// The paper's TULIP design point.
+    pub fn tulip() -> Self {
+        ArchConfig {
+            kind: ArchKind::Tulip,
+            num_pes: calib::TULIP_NUM_PES,
+            num_macs: calib::NUM_MACS,
+            onchip_ifms: calib::ONCHIP_IFMS,
+            offchip_bits_per_cycle: calib::OFFCHIP_BITS_PER_CYCLE,
+            weight_bits_per_cycle: calib::WEIGHT_BITS_PER_CYCLE,
+            max_tree_fanin: 1023,
+        }
+    }
+
+    /// The paper's YodaNN comparison point (same buffers, 32 full MACs).
+    pub fn yodann() -> Self {
+        ArchConfig { kind: ArchKind::Yodann, num_pes: 0, ..Self::tulip() }
+    }
+
+    /// Scale the processing array (the paper's scalability claim: "the
+    /// throughput can simply be increased linearly by adding PEs").
+    pub fn with_pes(mut self, pes: usize) -> Self {
+        self.num_pes = pes;
+        self
+    }
+
+    pub fn with_offchip_bw(mut self, bits_per_cycle: f64) -> Self {
+        self.offchip_bits_per_cycle = bits_per_cycle;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_design_points() {
+        let t = ArchConfig::tulip();
+        assert_eq!((t.num_pes, t.num_macs, t.onchip_ifms), (256, 32, 32));
+        let y = ArchConfig::yodann();
+        assert_eq!(y.num_pes, 0);
+        assert_eq!(y.num_macs, 32);
+        assert_eq!(format!("{}/{}", t.kind, y.kind), "TULIP/YodaNN");
+    }
+
+    #[test]
+    fn builders() {
+        let t = ArchConfig::tulip().with_pes(512).with_offchip_bw(4.0);
+        assert_eq!(t.num_pes, 512);
+        assert_eq!(t.offchip_bits_per_cycle, 4.0);
+    }
+}

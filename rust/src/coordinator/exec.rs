@@ -1,0 +1,393 @@
+//! The analytic performance model: walks a network layer by layer and
+//! derives cycle counts and activity from the *same* schedule objects the
+//! bit-true engine executes (via the sequence generator), plus the MAC
+//! cycle model and the memory traffic model. This is the engine behind
+//! Tables II, IV and V.
+
+use crate::arch::memory::{conv_traffic, fc_traffic, LayerTraffic};
+use crate::baseline::MacUnit;
+use crate::bnn::{Layer, Network};
+use crate::config::{ArchConfig, ArchKind};
+use crate::coordinator::tiling::{tiling, Tiling};
+use crate::energy::{calib, Activity, EnergyModel};
+use crate::scheduler::seqgen::{OpDesc, SequenceGenerator};
+
+/// Cost of executing one BNN node (one output activation) on a TULIP-PE.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeCost {
+    pub cycles: u64,
+    pub neuron_evals: u64,
+    pub reg_accesses: u64,
+    /// Number of chunked passes (1 when the fan-in fits one adder tree).
+    pub passes: u64,
+}
+
+/// Cycle/energy cost of an `n`-input threshold node computed as up to
+/// `slab_fanin`-input adder-tree passes accumulated per Fig. 4(c), plus the
+/// final comparison (§IV-B/C).
+pub fn pe_node_cost(sg: &mut SequenceGenerator, fanin: usize, slab_fanin: usize) -> NodeCost {
+    assert!(fanin >= 1 && slab_fanin >= 1);
+    let total_width = 64 - (fanin as u64).leading_zeros() as u64 + 1; // ⌈log2(fanin+1)⌉
+    if fanin <= slab_fanin {
+        let prog = sg.program(&OpDesc::ThresholdNode { n: fanin, t_popcount: (fanin / 2) as i64 });
+        let (r, w) = prog.schedule.reg_accesses();
+        return NodeCost {
+            cycles: prog.schedule.cycles() as u64,
+            neuron_evals: prog.schedule.neuron_evals(),
+            reg_accesses: r + w,
+            passes: 1,
+        };
+    }
+    // Chunked: P = ⌈fanin/slab⌉ sum-tree passes + (P−1) accumulations of
+    // the running partial sum (alternating registers, Fig. 4c) + one final
+    // threshold comparison.
+    let mut cycles = 0u64;
+    let mut evals = 0u64;
+    let mut regs = 0u64;
+    let mut passes = 0u64;
+    let mut remaining = fanin;
+    while remaining > 0 {
+        let n = remaining.min(slab_fanin);
+        remaining -= n;
+        passes += 1;
+        let prog = sg.program(&OpDesc::SumTree { n });
+        cycles += prog.schedule.cycles() as u64;
+        evals += prog.schedule.neuron_evals();
+        let (r, w) = prog.schedule.reg_accesses();
+        regs += r + w;
+    }
+    // Accumulations: each is a bit-serial add at (growing) partial width;
+    // bounded by the total width. 2 active neurons + ~3 register bit
+    // accesses per cycle (two operand reads + result write).
+    let acc_cycles = (passes - 1) * (total_width + 1);
+    cycles += acc_cycles;
+    evals += acc_cycles * 2;
+    regs += acc_cycles * 3;
+    // Final threshold comparison at full width (1 active neuron/cycle).
+    cycles += total_width;
+    evals += total_width;
+    regs += total_width * 2;
+    NodeCost { cycles, neuron_evals: evals, reg_accesses: regs, passes }
+}
+
+/// Cycle cost of an **integer** node on a TULIP-PE — the design-decision
+/// ablation behind §V-C's "Although the TULIP-PEs are capable of handling
+/// the integer layers as well, it would result in reduced throughput. This
+/// is because the TULIP-PEs require several cycles for integer additions,
+/// which becomes progressively worse as the size of the operands increase.
+/// Hence, MACs are used for integer layers."
+///
+/// With `bits`-wide activations the adder tree's operands start at `bits`
+/// width instead of 1, so every internal node is a `(bits + level)`-cycle
+/// bit-serial addition: the tree costs ≈ `fanin · bits` cycles instead of
+/// ≈ `1.3 · fanin / 3`.
+pub fn pe_int_node_cycles(fanin: usize, bits: u32) -> u64 {
+    assert!(fanin >= 1);
+    // Binary combine over `fanin` operands of initial width `bits`:
+    // level ℓ (1-based) has fanin/2^ℓ adds of width (bits + ℓ - 1).
+    let mut cycles = 0u64;
+    let mut count = fanin as u64;
+    let mut width = bits as u64;
+    while count > 1 {
+        let pairs = count / 2;
+        cycles += pairs * width;
+        count -= pairs; // pairs results + possible odd leftover
+        width += 1;
+    }
+    cycles + width // final threshold comparison
+}
+
+/// Per-layer performance on one architecture.
+#[derive(Debug, Clone)]
+pub struct LayerPerf {
+    pub name: String,
+    pub binary: bool,
+    pub is_conv: bool,
+    pub ops: u64,
+    pub tiling: Tiling,
+    pub compute_cycles: u64,
+    pub fetch_cycles: u64,
+    /// Wall-clock cycles: compute and fetch overlap through the
+    /// double-buffered L2 (§IV-E), so the layer takes the max of the two.
+    pub total_cycles: u64,
+    pub activity: Activity,
+}
+
+/// Model one layer.
+pub fn layer_perf(layer: &Layer, cfg: &ArchConfig, sg: &mut SequenceGenerator) -> LayerPerf {
+    let t = tiling(layer, cfg);
+    let traffic: LayerTraffic = if layer.is_conv() {
+        conv_traffic(layer, &t, cfg)
+    } else {
+        fc_traffic(layer, &t, cfg)
+    };
+    let mut act = traffic.activity;
+
+    let (x2, y2) = layer.output_spatial();
+    let pixels = (x2 * y2) as u64;
+    let zb = t.z as u64;
+
+    let compute_cycles: u64;
+    if t.on_pes {
+        // ---- TULIP-PE path (binary conv / binary FC) ----
+        let slab_fanin = if layer.is_conv() {
+            layer.k * layer.k * layer.z1.min(t.slab_ifms)
+        } else {
+            // FC chunks are sized by the PE's direct tree capacity.
+            layer.z1.min(cfg.max_tree_fanin.min(768))
+        };
+        let node = pe_node_cost(sg, layer.fanin(), slab_fanin);
+        let nodes_per_batch = pixels; // each PE walks all pixels of its OFM
+        let mut cycles = zb * nodes_per_batch * node.cycles;
+        // Fused max-pooling on the same PEs (Fig. 5b).
+        let mut pool_evals = 0u64;
+        if let Some((pk, ps)) = layer.pool {
+            let px = ((x2 - pk) / ps + 1) as u64 * ((y2 - pk) / ps + 1) as u64;
+            let pool = sg.program(&OpDesc::Maxpool { n: pk * pk });
+            cycles += zb * px * pool.schedule.cycles() as u64;
+            pool_evals = pool.schedule.neuron_evals() * px * layer.z2 as u64;
+        }
+        compute_cycles = cycles;
+        // Activity: every OFM channel executes the node program once per
+        // pixel (z2 total across batches).
+        let execs = pixels * layer.z2 as u64;
+        act.pe_neuron_evals = node.neuron_evals * execs + pool_evals;
+        act.pe_reg_accesses = node.reg_accesses * execs;
+        // Clocked-but-gated neuron-cycles across the whole array.
+        let array_neuron_cycles = compute_cycles * (cfg.num_pes as u64) * 4;
+        act.pe_gated_neuron_cycles = array_neuron_cycles.saturating_sub(act.pe_neuron_evals);
+    } else {
+        // ---- MAC path (integer layers; all YodaNN layers) ----
+        let mac =
+            if cfg.kind == ArchKind::Yodann { MacUnit::yodann() } else { MacUnit::simplified() };
+        let cycles_per_window: u64 = if layer.is_conv() {
+            // P slab passes per window; the last slab may be partial.
+            let mut c = 0u64;
+            let mut remaining = layer.z1;
+            while remaining > 0 {
+                let ifms = remaining.min(t.slab_ifms);
+                remaining -= ifms;
+                c += mac.window_cycles(layer.k.min(7), ifms);
+            }
+            c
+        } else {
+            // FC: element-wise products at the same 2·k²-per-cycle datapath
+            // rate (§V-A: "we estimate the throughput and power by
+            // performing an element-wise matrix multiplication").
+            (layer.z1 as u64).div_ceil(18) + 1
+        };
+        compute_cycles = zb * pixels * cycles_per_window;
+        let active_units = layer.z2.min(t.ofm_batch) as u64;
+        let unit_cycles = compute_cycles * active_units;
+        match (cfg.kind, layer.is_binary()) {
+            (ArchKind::Yodann, true) => act.mac_bin_cycles = unit_cycles,
+            (ArchKind::Yodann, false) => act.mac_int_cycles = unit_cycles,
+            (ArchKind::Tulip, _) => act.simple_mac_cycles = unit_cycles,
+        }
+    }
+
+    let fetch_cycles = traffic.fetch_cycles;
+    let total_cycles = compute_cycles.max(fetch_cycles);
+    // Units idle while the layer is fetch-bound.
+    let idle = total_cycles - compute_cycles;
+    if t.on_pes {
+        act.pe_gated_neuron_cycles += idle * (cfg.num_pes as u64) * 4;
+    } else {
+        act.mac_idle_cycles += idle * cfg.num_macs as u64;
+    }
+    act.total_cycles = total_cycles;
+
+    LayerPerf {
+        name: layer.name.clone(),
+        binary: layer.is_binary(),
+        is_conv: layer.is_conv(),
+        ops: layer.ops(),
+        tiling: t,
+        compute_cycles,
+        fetch_cycles,
+        total_cycles,
+        activity: act,
+    }
+}
+
+/// Whole-network performance report.
+#[derive(Debug, Clone)]
+pub struct NetworkPerf {
+    pub arch: ArchKind,
+    pub network: String,
+    pub dataset: String,
+    pub layers: Vec<LayerPerf>,
+}
+
+/// Aggregate metrics over a subset of layers (Table IV = conv only,
+/// Table V = all layers).
+#[derive(Debug, Clone, Copy)]
+pub struct Aggregate {
+    pub mops: f64,
+    pub cycles: u64,
+    pub time_ms: f64,
+    pub energy_uj: f64,
+    pub gops: f64,
+    pub tops_per_w: f64,
+    pub avg_power_mw: f64,
+}
+
+impl NetworkPerf {
+    /// Run the model for a network on an architecture.
+    pub fn model(net: &Network, cfg: &ArchConfig) -> Self {
+        let mut sg = SequenceGenerator::new();
+        let layers = net.layers.iter().map(|l| layer_perf(l, cfg, &mut sg)).collect();
+        NetworkPerf {
+            arch: cfg.kind,
+            network: net.name.clone(),
+            dataset: net.dataset.clone(),
+            layers,
+        }
+    }
+
+    fn aggregate_filtered(&self, keep: impl Fn(&LayerPerf) -> bool) -> Aggregate {
+        let model = EnergyModel::default();
+        let mut act = Activity::default();
+        let mut ops = 0u64;
+        let mut cycles = 0u64;
+        for l in self.layers.iter().filter(|l| keep(l)) {
+            act.merge(&l.activity);
+            ops += l.ops;
+            cycles += l.total_cycles;
+        }
+        let time_s = model.seconds(cycles);
+        let energy = model.energy(&act);
+        let e_j = energy.total_pj() * 1e-12;
+        Aggregate {
+            mops: ops as f64 / 1e6,
+            cycles,
+            time_ms: time_s * 1e3,
+            energy_uj: e_j * 1e6,
+            gops: if time_s > 0.0 { ops as f64 / time_s / 1e9 } else { 0.0 },
+            tops_per_w: if e_j > 0.0 { ops as f64 / e_j / 1e12 } else { 0.0 },
+            avg_power_mw: if time_s > 0.0 { e_j / time_s * 1e3 } else { 0.0 },
+        }
+    }
+
+    /// Table IV scope: convolution layers only.
+    pub fn conv_aggregate(&self) -> Aggregate {
+        self.aggregate_filtered(|l| l.is_conv)
+    }
+
+    /// Table V scope: the entire network.
+    pub fn total_aggregate(&self) -> Aggregate {
+        self.aggregate_filtered(|_| true)
+    }
+
+    /// Energy breakdown over all layers (for EXPERIMENTS.md analysis).
+    pub fn energy_breakdown(&self) -> crate::energy::EnergyBreakdown {
+        let model = EnergyModel::default();
+        let mut act = Activity::default();
+        for l in &self.layers {
+            act.merge(&l.activity);
+        }
+        model.energy(&act)
+    }
+}
+
+/// Clock-anchored helper: cycles → milliseconds at the paper's 2.3 ns.
+pub fn cycles_to_ms(cycles: u64) -> f64 {
+    cycles as f64 * calib::CLOCK_NS * 1e-6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{alexnet, binarynet_cifar10};
+
+    /// The §V-C design decision quantified: an integer (12-bit) 288-input
+    /// node on a PE costs ~10x the binary node and ~200x the MAC's 17
+    /// cycles — which is exactly why TULIP routes integer layers to MACs.
+    #[test]
+    fn integer_on_pe_is_prohibitive() {
+        let mut sg = SequenceGenerator::new();
+        let binary = pe_node_cost(&mut sg, 288, 288).cycles;
+        let integer = pe_int_node_cycles(288, 12);
+        assert!(integer > 8 * binary, "int {integer} vs bin {binary}");
+        assert!(integer > 100 * 17, "int {integer} vs MAC 17 cycles");
+        // And it gets "progressively worse as the size of the operands
+        // increase" — superlinear in bits.
+        assert!(pe_int_node_cycles(288, 12) > pe_int_node_cycles(288, 4) * 2);
+    }
+
+    /// Table II anchor: the 288-input node on a TULIP-PE lands in the
+    /// regime of the paper's 441 cycles (see EXPERIMENTS.md §Table II).
+    #[test]
+    fn node_cost_288() {
+        let mut sg = SequenceGenerator::new();
+        let c = pe_node_cost(&mut sg, 288, 288);
+        assert!(c.cycles >= 300 && c.cycles <= 550, "{}", c.cycles);
+        assert_eq!(c.passes, 1);
+    }
+
+    /// Chunked node: fan-in larger than one slab accumulates per Fig. 4(c).
+    #[test]
+    fn node_cost_chunked() {
+        let mut sg = SequenceGenerator::new();
+        let whole = pe_node_cost(&mut sg, 288, 288);
+        let chunked = pe_node_cost(&mut sg, 1152, 288);
+        assert_eq!(chunked.passes, 4);
+        // Chunked cost ≈ 4 tree passes + 3 accumulates + compare: strictly
+        // more than 4× the single tree, bounded by 4× the full node.
+        assert!(chunked.cycles > 3 * whole.cycles);
+        assert!(chunked.cycles < 5 * whole.cycles);
+    }
+
+    /// The model is deterministic and the sequence-generator cache works
+    /// across layers.
+    #[test]
+    fn model_deterministic() {
+        let net = binarynet_cifar10();
+        let a = NetworkPerf::model(&net, &ArchConfig::tulip());
+        let b = NetworkPerf::model(&net, &ArchConfig::tulip());
+        assert_eq!(a.total_aggregate().cycles, b.total_aggregate().cycles);
+    }
+
+    /// Directional anchors from Table IV/V: TULIP beats YodaNN on energy
+    /// for conv layers by ≥ 2×, with throughput within ±40%.
+    #[test]
+    fn tulip_vs_yodann_shape() {
+        for net in [binarynet_cifar10(), alexnet()] {
+            let t = NetworkPerf::model(&net, &ArchConfig::tulip());
+            let y = NetworkPerf::model(&net, &ArchConfig::yodann());
+            let (tc, yc) = (t.conv_aggregate(), y.conv_aggregate());
+            let e_ratio = yc.energy_uj / tc.energy_uj;
+            assert!(e_ratio > 2.0, "{}: conv energy ratio {e_ratio}", net.name);
+            let perf_ratio = tc.gops / yc.gops;
+            assert!(
+                (0.6..=2.5).contains(&perf_ratio),
+                "{}: conv perf ratio {perf_ratio}",
+                net.name
+            );
+            // All-layer efficiency still favours TULIP (Table V: 2.4–2.7×).
+            let (tt, yt) = (t.total_aggregate(), y.total_aggregate());
+            assert!(yt.energy_uj / tt.energy_uj > 1.8, "{}: total", net.name);
+        }
+    }
+
+    /// FC layers are stream-bound on both architectures (§V-C).
+    #[test]
+    fn fc_layers_fetch_bound() {
+        let net = alexnet();
+        let perf = NetworkPerf::model(&net, &ArchConfig::tulip());
+        for l in perf.layers.iter().filter(|l| !l.is_conv) {
+            assert!(l.fetch_cycles > l.compute_cycles, "{}", l.name);
+        }
+    }
+
+    /// Integer layers cost the same cycles on both designs (both use MACs).
+    #[test]
+    fn integer_layers_same_cycles() {
+        let net = alexnet();
+        let t = NetworkPerf::model(&net, &ArchConfig::tulip());
+        let y = NetworkPerf::model(&net, &ArchConfig::yodann());
+        for (lt, ly) in t.layers.iter().zip(&y.layers).filter(|(l, _)| !l.binary) {
+            assert_eq!(lt.compute_cycles, ly.compute_cycles, "{}", lt.name);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! The coordinator: tiling decisions (Table III), the layer-walk
+//! performance model (Tables II/IV/V) and the paper-table report layer.
+//!
+//! This is the L3 "system contribution" layer of the reproduction: it owns
+//! how a BNN is carved into OFM batches and IFM slabs, how those map onto
+//! the PE/MAC arrays, and what the memory system does in the meantime. The
+//! cycle counts it prices come from the *same* schedule objects the
+//! bit-true engine executes, so the analytic model cannot drift from the
+//! hardware model.
+
+pub mod exec;
+pub mod report;
+pub mod tiling;
+
+pub use exec::{LayerPerf, NetworkPerf};
+pub use tiling::{table3, tiling, Tiling};

@@ -1,0 +1,197 @@
+//! Paper-table report generation: Tables II, IV and V in the exact row
+//! format the paper prints, from the analytic model.
+
+use super::exec::{Aggregate, NetworkPerf};
+use crate::baseline::MacUnit;
+use crate::bnn::Network;
+use crate::config::ArchConfig;
+use crate::coordinator::exec::pe_node_cost;
+use crate::energy::{calib, Activity, EnergyModel};
+use crate::scheduler::seqgen::SequenceGenerator;
+
+/// Table II: single-PE comparison for the 288-input neuron (3×3 × 32 IFMs).
+#[derive(Debug, Clone, Copy)]
+pub struct Table2 {
+    pub mac_area_um2: f64,
+    pub pe_area_um2: f64,
+    pub mac_power_mw: f64,
+    pub pe_power_mw: f64,
+    pub mac_cycles: u64,
+    pub pe_cycles: u64,
+    pub period_ns: f64,
+}
+
+impl Table2 {
+    pub fn compute() -> Self {
+        let mac = MacUnit::yodann();
+        let mut sg = SequenceGenerator::new();
+        let node = pe_node_cost(&mut sg, 288, 288);
+        // Average PE power over the node execution, from the energy model.
+        let act = Activity {
+            pe_neuron_evals: node.neuron_evals,
+            pe_reg_accesses: node.reg_accesses,
+            pe_gated_neuron_cycles: node.cycles * 4 - node.neuron_evals,
+            total_cycles: node.cycles,
+            ..Default::default()
+        };
+        let m = EnergyModel::default();
+        Table2 {
+            mac_area_um2: calib::MAC_AREA_UM2,
+            pe_area_um2: calib::PE_AREA_UM2,
+            mac_power_mw: calib::MAC_POWER_MW,
+            pe_power_mw: m.avg_power_mw(&act),
+            mac_cycles: mac.window_cycles(3, 32),
+            pe_cycles: node.cycles,
+            period_ns: calib::CLOCK_NS,
+        }
+    }
+
+    pub fn mac_time_ns(&self) -> f64 {
+        self.mac_cycles as f64 * self.period_ns
+    }
+
+    pub fn pe_time_ns(&self) -> f64 {
+        self.pe_cycles as f64 * self.period_ns
+    }
+
+    /// Power–delay-product advantage of the TULIP-PE (paper: 2.27×).
+    pub fn pdp_ratio(&self) -> f64 {
+        (self.mac_power_mw * self.mac_time_ns()) / (self.pe_power_mw * self.pe_time_ns())
+    }
+
+    pub fn rows(&self) -> Vec<Vec<String>> {
+        let r = |b: f64, t: f64| format!("{:.2}", b / t);
+        vec![
+            vec![
+                "Area(um^2)".into(),
+                format!("{:.3e}", self.mac_area_um2),
+                format!("{:.3e}", self.pe_area_um2),
+                r(self.mac_area_um2, self.pe_area_um2),
+            ],
+            vec![
+                "Power(mW)".into(),
+                format!("{:.2}", self.mac_power_mw),
+                format!("{:.3}", self.pe_power_mw),
+                r(self.mac_power_mw, self.pe_power_mw),
+            ],
+            vec![
+                "Cycles".into(),
+                self.mac_cycles.to_string(),
+                self.pe_cycles.to_string(),
+                r(self.mac_cycles as f64, self.pe_cycles as f64),
+            ],
+            vec![
+                "Time period(ns)".into(),
+                format!("{}", self.period_ns),
+                format!("{}", self.period_ns),
+                "1".into(),
+            ],
+            vec![
+                "Time(ns)".into(),
+                format!("{:.0}", self.mac_time_ns()),
+                format!("{:.0}", self.pe_time_ns()),
+                r(self.mac_time_ns(), self.pe_time_ns()),
+            ],
+        ]
+    }
+}
+
+/// One side-by-side network comparison (a column pair of Table IV/V).
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub network: String,
+    pub dataset: String,
+    pub yodann: Aggregate,
+    pub tulip: Aggregate,
+}
+
+impl Comparison {
+    /// Run both architecture models over `net` and aggregate at the given
+    /// scope (`conv_only` = Table IV, otherwise Table V).
+    pub fn run(net: &Network, conv_only: bool) -> Self {
+        let t = NetworkPerf::model(net, &ArchConfig::tulip());
+        let y = NetworkPerf::model(net, &ArchConfig::yodann());
+        let pick = |p: &NetworkPerf| if conv_only { p.conv_aggregate() } else { p.total_aggregate() };
+        Comparison {
+            network: net.name.clone(),
+            dataset: net.dataset.clone(),
+            yodann: pick(&y),
+            tulip: pick(&t),
+        }
+    }
+
+    /// Energy-efficiency improvement (the paper's headline ~3× conv,
+    /// 2.4–2.7× end-to-end).
+    pub fn efficiency_gain(&self) -> f64 {
+        self.tulip.tops_per_w / self.yodann.tops_per_w
+    }
+
+    /// Paper-format rows: Op(MOp), Perf(GOp/s), Energy(uJ), Time(ms),
+    /// En.Eff(TOp/s/W) with the TULIP (X) column.
+    pub fn rows(&self) -> Vec<Vec<String>> {
+        let x = |t: f64, y: f64| format!("({:.1})", t / y);
+        vec![
+            vec![
+                "Op.(MOp)".into(),
+                format!("{:.0}", self.yodann.mops),
+                format!("{:.0} {}", self.tulip.mops, x(self.tulip.mops, self.yodann.mops)),
+            ],
+            vec![
+                "Perf.(GOp/s)".into(),
+                format!("{:.1}", self.yodann.gops),
+                format!("{:.1} {}", self.tulip.gops, x(self.tulip.gops, self.yodann.gops)),
+            ],
+            vec![
+                "Energy(uJ)".into(),
+                format!("{:.1}", self.yodann.energy_uj),
+                format!(
+                    "{:.1} {}",
+                    self.tulip.energy_uj,
+                    x(self.yodann.energy_uj, self.tulip.energy_uj)
+                ),
+            ],
+            vec![
+                "Time(ms)".into(),
+                format!("{:.1}", self.yodann.time_ms),
+                format!("{:.1} {}", self.tulip.time_ms, x(self.yodann.time_ms, self.tulip.time_ms)),
+            ],
+            vec![
+                "En.Eff.(TOp/s/W)".into(),
+                format!("{:.1}", self.yodann.tops_per_w),
+                format!("{:.1} {}", self.tulip.tops_per_w, x(self.efficiency_gain(), 1.0)),
+            ],
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::binarynet_cifar10;
+
+    #[test]
+    fn table2_anchors() {
+        let t = Table2::compute();
+        assert_eq!(t.mac_cycles, 17);
+        assert!((t.mac_time_ns() - 39.1).abs() < 0.2);
+        // PE average power: our per-event energies are calibrated to the
+        // paper's Table IV/V totals, which prices the node run below Table
+        // II's 0.12 mW (the two tables are mutually inconsistent by ~2x —
+        // see energy::calib and EXPERIMENTS.md §Table II).
+        assert!(t.pe_power_mw > 0.015 && t.pe_power_mw < 0.2, "{}", t.pe_power_mw);
+        // PDP advantage: same direction as the paper's 2.27x, larger
+        // magnitude under the Table IV/V calibration.
+        assert!(t.pdp_ratio() > 1.5, "pdp {}", t.pdp_ratio());
+        assert_eq!(t.rows().len(), 5);
+    }
+
+    #[test]
+    fn comparison_runs_and_reports() {
+        let net = binarynet_cifar10();
+        let c = Comparison::run(&net, true);
+        assert!(c.efficiency_gain() > 1.5);
+        assert_eq!(c.rows().len(), 5);
+        // Op counts identical across architectures by construction.
+        assert_eq!(c.yodann.mops, c.tulip.mops);
+    }
+}

@@ -1,0 +1,165 @@
+//! Tiling: OFM batching, partial-product passes (P) and input refetch
+//! counts (Z) — the model behind Table III.
+//!
+//! §V-C: both designs keep 32 IFMs on-chip per slab. For kernels with
+//! `k ≤ 5` the MAC datapath fetches **two** IFMs per cycle, so a slab holds
+//! 64 IFMs worth of partial products (`P = ⌈z1/64⌉`); the TULIP-PEs always
+//! consume 32-IFM slabs (`P = ⌈z1/32⌉`). OFMs are produced in batches of 32
+//! (MAC path) or 256 (TULIP-PE path), and the IFMs are refetched for each
+//! batch: `Z = ⌈z2/32⌉` resp. `⌈z2/256⌉`. The total input-refetch pressure
+//! is `P × Z`, where TULIP's 8× wider binary-layer batching is what buys
+//! the 3–4× reduction the paper reports.
+
+use crate::bnn::Layer;
+use crate::config::{ArchConfig, ArchKind};
+
+/// Tiling decision for one layer on one architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tiling {
+    /// Number of partial-product passes (input-channel slabs).
+    pub p: usize,
+    /// Number of IFM-refetch rounds (OFM batches).
+    pub z: usize,
+    /// IFMs consumed per slab on the compute path.
+    pub slab_ifms: usize,
+    /// OFM channels produced per batch.
+    pub ofm_batch: usize,
+    /// True when this layer runs on TULIP-PEs (vs MACs).
+    pub on_pes: bool,
+}
+
+impl Tiling {
+    /// The paper's P×Z refetch-pressure metric (Table III).
+    pub fn refetch_pressure(&self) -> usize {
+        self.p * self.z
+    }
+}
+
+/// Compute the tiling for a layer (Table III logic).
+pub fn tiling(layer: &Layer, cfg: &ArchConfig) -> Tiling {
+    let on_pes = cfg.kind == ArchKind::Tulip && layer.is_binary() && cfg.num_pes > 0;
+    if layer.is_fc() {
+        // FC layers stream weights; the "batch" is the unit count and P is
+        // a single pass (activations fit on-chip).
+        let units = if on_pes { cfg.num_pes } else { cfg.num_macs };
+        return Tiling {
+            p: 1,
+            z: layer.z2.div_ceil(units),
+            slab_ifms: layer.z1,
+            ofm_batch: units,
+            on_pes,
+        };
+    }
+    if on_pes {
+        // TULIP-PE path: 32-IFM slabs, 256-OFM batches.
+        let slab = cfg.onchip_ifms;
+        Tiling {
+            p: layer.z1.div_ceil(slab),
+            z: layer.z2.div_ceil(cfg.num_pes),
+            slab_ifms: slab,
+            ofm_batch: cfg.num_pes,
+            on_pes,
+        }
+    } else {
+        // MAC path (YodaNN all layers; TULIP integer layers): dual-IFM
+        // fetch for k ≤ 5 doubles the slab.
+        let slab = if layer.k <= 5 { 2 * cfg.onchip_ifms } else { cfg.onchip_ifms };
+        Tiling {
+            p: layer.z1.div_ceil(slab),
+            z: layer.z2.div_ceil(cfg.num_macs),
+            slab_ifms: slab,
+            ofm_batch: cfg.num_macs,
+            on_pes,
+        }
+    }
+}
+
+/// One row of Table III.
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub layer: String,
+    pub kind: &'static str,
+    pub parts: usize,
+    pub yodann: Tiling,
+    pub tulip: Tiling,
+}
+
+/// Regenerate Table III for a network's conv layers.
+pub fn table3(net: &crate::bnn::Network) -> Vec<Table3Row> {
+    let tulip = ArchConfig::tulip();
+    let yodann = ArchConfig::yodann();
+    net.conv_layers()
+        .map(|l| Table3Row {
+            layer: l.name.clone(),
+            kind: if l.is_binary() { "Binary" } else { "Integer" },
+            parts: l.image_parts,
+            yodann: tiling(l, &yodann),
+            tulip: tiling(l, &tulip),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::alexnet;
+
+    /// Table III, verbatim: P and Z per AlexNet conv layer for both
+    /// architectures.
+    #[test]
+    fn table3_alexnet_matches_paper() {
+        let rows = table3(&alexnet());
+        // (layer, yodann (P, Z), tulip (P, Z)) from the paper.
+        let expect = [
+            ("conv1", (1, 3), (1, 3)),
+            ("conv2", (2, 8), (2, 8)),
+            ("conv3", (4, 12), (8, 2)),
+            ("conv4", (6, 12), (12, 2)),
+            ("conv5", (6, 8), (12, 1)),
+        ];
+        for (row, (name, (yp, yz), (tp, tz))) in rows.iter().zip(expect) {
+            assert_eq!(row.layer, name);
+            assert_eq!((row.yodann.p, row.yodann.z), (yp, yz), "{name} yodann");
+            assert_eq!((row.tulip.p, row.tulip.z), (tp, tz), "{name} tulip");
+        }
+        // Paper: "3X to 4X improvement in overall input-refetch (P×Z)" for
+        // binary layers.
+        for row in &rows[2..] {
+            let ratio = row.yodann.refetch_pressure() as f64 / row.tulip.refetch_pressure() as f64;
+            assert!((3.0..=4.5).contains(&ratio), "{}: {ratio}", row.layer);
+        }
+    }
+
+    /// Integer layers tile identically on both designs (both use MACs).
+    #[test]
+    fn integer_layers_identical() {
+        let rows = table3(&alexnet());
+        for row in &rows[..2] {
+            assert_eq!(
+                (row.yodann.p, row.yodann.z),
+                (row.tulip.p, row.tulip.z),
+                "{}",
+                row.layer
+            );
+            assert!(!row.tulip.on_pes);
+        }
+    }
+
+    #[test]
+    fn fc_tiling() {
+        let net = crate::bnn::binarynet_cifar10();
+        let fc = &net.layers[6]; // 8192 → 1024
+        let t = tiling(fc, &ArchConfig::tulip());
+        assert!(t.on_pes);
+        assert_eq!(t.z, 4); // 1024/256
+        let y = tiling(fc, &ArchConfig::yodann());
+        assert_eq!(y.z, 32); // 1024/32
+    }
+
+    #[test]
+    fn parts_column() {
+        let rows = table3(&alexnet());
+        assert_eq!(rows[0].parts, 4);
+        assert!(rows[1..].iter().all(|r| r.parts == 1));
+    }
+}

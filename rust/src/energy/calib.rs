@@ -1,0 +1,184 @@
+//! Calibration constants for the analytical area/power/energy model.
+//!
+//! Constants marked **[paper]** are taken verbatim from the paper's
+//! measurements (Table I, Table II, Fig. 7, §V-A). Constants marked
+//! **[fitted]** are free parameters of the memory/datapath energy model,
+//! chosen once so that the end-to-end energy split reproduces the paper's
+//! Table IV/V ratios (≈3.0× conv, 2.7×/2.4× all-layers); EXPERIMENTS.md
+//! discusses the fit and its sensitivity. Constants marked **[derived]**
+//! follow arithmetically from paper values.
+
+/// **[paper]** Clock period, ns (Table II: 17 cy → 39 ns, 441 cy → 1014 ns).
+pub const CLOCK_NS: f64 = 2.3;
+
+/// **[derived]** Clock frequency, Hz.
+pub const CLOCK_HZ: f64 = 1e9 / CLOCK_NS;
+
+// ---------------------------------------------------------------- cells --
+
+/// **[paper]** TULIP-PE area, µm² (Table II).
+pub const PE_AREA_UM2: f64 = 1.53e3;
+/// **[paper]** TULIP-PE power when fully active, mW (Table II).
+pub const PE_POWER_MW: f64 = 0.12;
+
+/// **[derived]** Energy of one fully-active PE cycle, pJ
+/// (0.12 mW × 2.3 ns = 0.276 pJ).
+pub const PE_CYCLE_PJ: f64 = PE_POWER_MW * CLOCK_NS;
+
+/// **[fitted]** Per-neuron-evaluation energy, pJ. Calibrated to the paper's
+/// Table IV/V energy totals (see the `pe_cycle_energy_consistent` test for
+/// the documented Table II / Table IV tension): the within-PE clock gating
+/// of unused neurons (§IV-E) plus VCD-level switching make the effective
+/// per-event energy lower than Table II's fully-active apportionment.
+pub const NEURON_EVAL_PJ: f64 = 0.03;
+/// **[derived]** Per register-bit access (latch read or write), pJ.
+pub const REG_BIT_PJ: f64 = 0.004;
+/// **[fitted]** Leakage + clock-tree energy of a gated neuron-cycle, pJ.
+pub const NEURON_GATED_PJ: f64 = 0.002;
+
+/// **[paper]** YodaNN fully reconfigurable MAC area, µm² (Table II).
+pub const MAC_AREA_UM2: f64 = 3.54e4;
+/// **[paper]** YodaNN MAC power, fully active (integer datapath), mW.
+pub const MAC_POWER_MW: f64 = 7.17;
+/// **[derived]** Energy per fully-active MAC cycle, pJ (16.5 pJ).
+pub const MAC_CYCLE_INT_PJ: f64 = MAC_POWER_MW * CLOCK_NS;
+/// **[fitted]** Energy per MAC cycle in binary layers with 11/12 input bits
+/// clock-gated (§V-A): 1/12 of the datapath plus non-gateable control /
+/// accumulator overhead.
+pub const MAC_CYCLE_BIN_PJ: f64 = MAC_CYCLE_INT_PJ * (1.0 / 12.0 + 0.09);
+/// **[fitted]** Idle (fully clock-gated) MAC cycle, pJ.
+pub const MAC_CYCLE_IDLE_PJ: f64 = 0.15;
+
+/// **[derived]** TULIP's simplified integer-layer MAC (§V-C): chosen so the
+/// Fig. 7 processing-area rollup closes — 256 PEs + 32 simplified MACs ≈
+/// 656K µm² ⇒ (656K − 256·1.53K)/32 ≈ 8.26K µm².
+pub const SIMPLE_MAC_AREA_UM2: f64 = 8.26e3;
+/// **[derived]** Simplified-MAC power scaled by area ratio from the full
+/// MAC (same drive/activity assumptions).
+pub const SIMPLE_MAC_POWER_MW: f64 = MAC_POWER_MW * (SIMPLE_MAC_AREA_UM2 / MAC_AREA_UM2);
+/// **[derived]** pJ per active simplified-MAC cycle.
+pub const SIMPLE_MAC_CYCLE_PJ: f64 = SIMPLE_MAC_POWER_MW * CLOCK_NS;
+
+// --------------------------------------------------------------- memory --
+
+/// **[fitted]** Off-chip access energy per bit, pJ (conservative LPDDR-class
+/// interface; both designs pay it per fetched pixel bit).
+pub const OFFCHIP_PJ_PER_BIT: f64 = 8.0;
+/// **[fitted]** Off-chip energy per *weight* bit, pJ — FC weight matrices
+/// stream sequentially (burst-friendly), cheaper per bit than the
+/// random-ish pixel refetch pattern.
+pub const WEIGHT_OFFCHIP_PJ_PER_BIT: f64 = 3.0;
+/// **[fitted]** L2 standard-cell-memory write, pJ/bit (pixel load, §IV-E).
+pub const L2_WRITE_PJ_PER_BIT: f64 = 0.30;
+/// **[fitted]** L2 → L1 transfer (read + write), pJ/bit.
+pub const L2_TO_L1_PJ_PER_BIT: f64 = 0.22;
+/// **[fitted]** L1 window-broadcast read, pJ/bit (SCM read amortized over
+/// the broadcast to all processing units).
+pub const L1_READ_PJ_PER_BIT: f64 = 0.08;
+/// **[fitted]** Kernel shift-register buffer, pJ per bit shifted.
+pub const KERNEL_SHIFT_PJ_PER_BIT: f64 = 0.03;
+/// **[fitted]** Output-buffer write, pJ/bit.
+pub const OUTBUF_PJ_PER_BIT: f64 = 0.10;
+/// **[fitted]** XNOR product generation, pJ per product bit.
+pub const XNOR_PJ_PER_BIT: f64 = 0.002;
+
+// ------------------------------------------------------------ bandwidth --
+
+/// **[fitted]** Off-chip interface bandwidth, bits per clock cycle. The
+/// paper's absolute layer times imply a narrow (sub-Gb/s) external
+/// interface — YodaNN's published evaluation is similarly I/O-bound. Fitted
+/// so YodaNN's BinaryNet-CIFAR10 conv time lands near Table IV's 21.4 ms.
+pub const OFFCHIP_BITS_PER_CYCLE: f64 = 3.05;
+/// **[fitted]** Bits per pixel transferred for integer layers (both
+/// designs are built for up-to-12-bit inputs).
+pub const INT_PIXEL_BITS: u64 = 12;
+/// **[fitted]** Bits per pixel for binary layers. The image buffers store
+/// 12-bit words; the paper's Z-driven refetch accounting (Table III) only
+/// pays off if binary pixels still occupy a full buffer slot on the
+/// external interface, which is what the YodaNN memory layout does.
+pub const BIN_PIXEL_BITS: u64 = 12;
+/// **[fitted]** Weight-stream bandwidth for FC layers, bits/cycle.
+pub const WEIGHT_BITS_PER_CYCLE: f64 = 1.0;
+
+// -------------------------------------------------------------- buffers --
+
+/// **[paper]** Fig. 7: image buffer (total / L1 / L2) area, µm².
+pub const IMG_BUFFER_AREA_UM2: f64 = 680e3;
+pub const IMG_BUFFER_L1_AREA_UM2: f64 = 233e3;
+pub const IMG_BUFFER_L2_AREA_UM2: f64 = 468e3;
+/// **[paper]** Fig. 7: kernel buffer area, µm².
+pub const KERNEL_BUFFER_AREA_UM2: f64 = 293e3;
+/// **[paper]** Fig. 7: controller area, µm².
+pub const CONTROLLER_AREA_UM2: f64 = 4.52e3;
+/// **[paper]** Fig. 7: die area, mm².
+pub const DIE_AREA_MM2: f64 = 1.8;
+/// **[paper]** Fig. 7: total processing area (PEs + MACs), µm² — the paper
+/// lists 656K (TULIP) / 647K (YodaNN-equivalent floorplan).
+pub const PROCESSING_AREA_TULIP_UM2: f64 = 656e3;
+pub const PROCESSING_AREA_YODANN_UM2: f64 = 647e3;
+/// **[paper]** Fig. 7: average power of the full TULIP chip, mW.
+pub const CHIP_POWER_MW: f64 = 23.9;
+
+/// **[paper]** On-chip IFM capacity: both designs load 32 IFMs at a time.
+pub const ONCHIP_IFMS: usize = 32;
+/// **[paper]** TULIP instantiates 256 TULIP-PEs …
+pub const TULIP_NUM_PES: usize = 256;
+/// **[paper]** … and 32 simplified MACs; YodaNN has 32 full MACs.
+pub const NUM_MACS: usize = 32;
+/// **[paper]** 8 TULIP-PEs per processing unit → 32 units.
+pub const PES_PER_UNIT: usize = 8;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_anchors_table2() {
+        assert!((17.0 * CLOCK_NS - 39.1).abs() < 0.2, "MAC: 17 cy ≈ 39 ns");
+        assert!((441.0 * CLOCK_NS - 1014.3).abs() < 0.5, "PE: 441 cy ≈ 1014 ns");
+    }
+
+    #[test]
+    fn pe_cycle_energy_consistent() {
+        assert!((PE_CYCLE_PJ - 0.276).abs() < 1e-9);
+        // The paper's Table II (0.12 mW per PE over a node run) and its
+        // Table IV (159 uJ for all of BinaryNet's conv layers) are not
+        // mutually consistent: pricing every node at Table II's energy
+        // overshoots Table IV by ~1.6x. We calibrate the per-event energies
+        // to Table IV/V (the headline claim) — a fully-active PE cycle then
+        // prices at ~50% of Table II's figure. EXPERIMENTS.md quantifies
+        // this tension.
+        let apportioned = 4.0 * NEURON_EVAL_PJ + 4.0 * REG_BIT_PJ;
+        assert!(apportioned > 0.3 * PE_CYCLE_PJ && apportioned < 0.8 * PE_CYCLE_PJ,
+            "{apportioned}");
+    }
+
+    #[test]
+    fn area_ratio_table2() {
+        let r = MAC_AREA_UM2 / PE_AREA_UM2;
+        assert!((r - 23.18).abs() < 0.15, "Table II area ratio: {r}");
+    }
+
+    #[test]
+    fn power_ratio_table2() {
+        let r = MAC_POWER_MW / PE_POWER_MW;
+        assert!((r - 59.75).abs() < 0.5, "Table II power ratio: {r}");
+    }
+
+    #[test]
+    fn processing_area_rollup_fig7() {
+        let tulip = TULIP_NUM_PES as f64 * PE_AREA_UM2 + NUM_MACS as f64 * SIMPLE_MAC_AREA_UM2;
+        assert!(
+            (tulip - PROCESSING_AREA_TULIP_UM2).abs() / PROCESSING_AREA_TULIP_UM2 < 0.01,
+            "TULIP processing area rollup: {tulip}"
+        );
+    }
+
+    #[test]
+    fn binary_mac_gating_saves_order_of_magnitude() {
+        // Gating 11/12 input bits leaves ~1/12 of the datapath plus
+        // non-gateable control/accumulator overhead: 5-8x saving.
+        assert!(MAC_CYCLE_BIN_PJ < MAC_CYCLE_INT_PJ / 5.0);
+        assert!(MAC_CYCLE_BIN_PJ > MAC_CYCLE_INT_PJ / 13.0);
+    }
+}

@@ -1,0 +1,273 @@
+//! Analytical area / power / energy model.
+//!
+//! The simulator counts *activity* (neuron evaluations, MAC cycles, memory
+//! bits moved); this module prices it with the calibrated constants of
+//! [`calib`] (paper-measured where available, fitted where the paper is
+//! silent — every constant is annotated there). Energy = Σ activity ×
+//! per-event energy; power = energy / wall-clock time; area = Σ instance
+//! areas (Fig. 7 rollup).
+
+pub mod calib;
+
+use crate::neuron::Corner;
+
+/// Activity counters accumulated by the coordinator for one layer (or a
+/// whole network). All counts are totals across every unit in the array.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Activity {
+    /// TULIP-PE neuron evaluations (non-gated neuron-cycles).
+    pub pe_neuron_evals: u64,
+    /// TULIP-PE gated neuron-cycles.
+    pub pe_gated_neuron_cycles: u64,
+    /// TULIP-PE local-register bit accesses (reads + writes).
+    pub pe_reg_accesses: u64,
+    /// Fully-reconfigurable MAC cycles on integer data.
+    pub mac_int_cycles: u64,
+    /// Fully-reconfigurable MAC cycles on binary data (11/12 bits gated).
+    pub mac_bin_cycles: u64,
+    /// Idle (clock-gated) MAC cycles.
+    pub mac_idle_cycles: u64,
+    /// Simplified-MAC active cycles (TULIP integer layers).
+    pub simple_mac_cycles: u64,
+    /// Pixel/activation bits fetched over the off-chip interface.
+    pub offchip_bits: u64,
+    /// Weight bits streamed over the off-chip interface (burst-friendly,
+    /// cheaper per bit — see calib::WEIGHT_OFFCHIP_PJ_PER_BIT).
+    pub offchip_weight_bits: u64,
+    /// Bits written into the L2 SCM.
+    pub l2_write_bits: u64,
+    /// Bits moved L2 → L1.
+    pub l2_to_l1_bits: u64,
+    /// Bits read from L1 (window broadcasts).
+    pub l1_read_bits: u64,
+    /// Kernel-buffer bits shifted.
+    pub kernel_shift_bits: u64,
+    /// Output-buffer bits written.
+    pub outbuf_bits: u64,
+    /// XNOR product bits generated.
+    pub xnor_bits: u64,
+    /// Wall-clock cycles (for power and leakage).
+    pub total_cycles: u64,
+}
+
+impl Activity {
+    pub fn merge(&mut self, o: &Activity) {
+        self.pe_neuron_evals += o.pe_neuron_evals;
+        self.pe_gated_neuron_cycles += o.pe_gated_neuron_cycles;
+        self.pe_reg_accesses += o.pe_reg_accesses;
+        self.mac_int_cycles += o.mac_int_cycles;
+        self.mac_bin_cycles += o.mac_bin_cycles;
+        self.mac_idle_cycles += o.mac_idle_cycles;
+        self.simple_mac_cycles += o.simple_mac_cycles;
+        self.offchip_bits += o.offchip_bits;
+        self.offchip_weight_bits += o.offchip_weight_bits;
+        self.l2_write_bits += o.l2_write_bits;
+        self.l2_to_l1_bits += o.l2_to_l1_bits;
+        self.l1_read_bits += o.l1_read_bits;
+        self.kernel_shift_bits += o.kernel_shift_bits;
+        self.outbuf_bits += o.outbuf_bits;
+        self.xnor_bits += o.xnor_bits;
+        self.total_cycles += o.total_cycles;
+    }
+}
+
+/// Energy breakdown in picojoules.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub pe_pj: f64,
+    pub mac_pj: f64,
+    pub memory_pj: f64,
+    pub xnor_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.pe_pj + self.mac_pj + self.memory_pj + self.xnor_pj
+    }
+
+    pub fn total_uj(&self) -> f64 {
+        self.total_pj() * 1e-6
+    }
+}
+
+/// The pricing model (corner-aware; all tables use TT).
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    pub corner: Corner,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel { corner: Corner::TT }
+    }
+}
+
+impl EnergyModel {
+    pub fn new(corner: Corner) -> Self {
+        EnergyModel { corner }
+    }
+
+    /// Price an activity record.
+    pub fn energy(&self, a: &Activity) -> EnergyBreakdown {
+        use calib::*;
+        let s = self.corner.power_derate(); // dynamic energy ∝ VDD²
+        EnergyBreakdown {
+            pe_pj: s
+                * (a.pe_neuron_evals as f64 * NEURON_EVAL_PJ
+                    + a.pe_gated_neuron_cycles as f64 * NEURON_GATED_PJ
+                    + a.pe_reg_accesses as f64 * REG_BIT_PJ),
+            mac_pj: s
+                * (a.mac_int_cycles as f64 * MAC_CYCLE_INT_PJ
+                    + a.mac_bin_cycles as f64 * MAC_CYCLE_BIN_PJ
+                    + a.mac_idle_cycles as f64 * MAC_CYCLE_IDLE_PJ
+                    + a.simple_mac_cycles as f64 * SIMPLE_MAC_CYCLE_PJ),
+            memory_pj: s
+                * (a.offchip_bits as f64 * OFFCHIP_PJ_PER_BIT
+                    + a.offchip_weight_bits as f64 * WEIGHT_OFFCHIP_PJ_PER_BIT
+                    + a.l2_write_bits as f64 * L2_WRITE_PJ_PER_BIT
+                    + a.l2_to_l1_bits as f64 * L2_TO_L1_PJ_PER_BIT
+                    + a.l1_read_bits as f64 * L1_READ_PJ_PER_BIT
+                    + a.kernel_shift_bits as f64 * KERNEL_SHIFT_PJ_PER_BIT
+                    + a.outbuf_bits as f64 * OUTBUF_PJ_PER_BIT),
+            xnor_pj: s * a.xnor_bits as f64 * XNOR_PJ_PER_BIT,
+        }
+    }
+
+    /// Wall-clock seconds for a cycle count at this corner (the clock is
+    /// kept at the TT 2.3 ns for all paper tables; corner derating of the
+    /// achievable period is reported separately by the Table I bench).
+    pub fn seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 * calib::CLOCK_NS * 1e-9
+    }
+
+    /// Average power in mW over a run.
+    pub fn avg_power_mw(&self, a: &Activity) -> f64 {
+        let e_pj = self.energy(a).total_pj();
+        let t_s = self.seconds(a.total_cycles);
+        if t_s == 0.0 {
+            0.0
+        } else {
+            e_pj * 1e-12 / t_s * 1e3
+        }
+    }
+}
+
+/// Fig. 7 area rollup for either design point.
+#[derive(Debug, Clone, Copy)]
+pub struct AreaRollup {
+    pub processing_um2: f64,
+    pub image_buffer_um2: f64,
+    pub kernel_buffer_um2: f64,
+    pub controller_um2: f64,
+}
+
+impl AreaRollup {
+    pub fn total_um2(&self) -> f64 {
+        self.processing_um2 + self.image_buffer_um2 + self.kernel_buffer_um2 + self.controller_um2
+    }
+
+    pub fn total_mm2(&self) -> f64 {
+        self.total_um2() * 1e-6
+    }
+}
+
+/// TULIP: 256 PEs + 32 simplified MACs + buffers (Fig. 7).
+pub fn tulip_area() -> AreaRollup {
+    use calib::*;
+    AreaRollup {
+        processing_um2: TULIP_NUM_PES as f64 * PE_AREA_UM2 + NUM_MACS as f64 * SIMPLE_MAC_AREA_UM2,
+        image_buffer_um2: IMG_BUFFER_AREA_UM2,
+        kernel_buffer_um2: KERNEL_BUFFER_AREA_UM2,
+        controller_um2: CONTROLLER_AREA_UM2,
+    }
+}
+
+/// YodaNN re-implemented on the same floorplan: 32 full MACs + the same
+/// buffer subsystem ("uses 32 fully reconfigurable MAC units, and occupies
+/// the same area as TULIP", §V-C).
+///
+/// Modelling note: Fig. 7 lists the processing area as 647K µm², while
+/// 32 × the Table II per-MAC area (35.4K µm²) would be 1.13M µm² — the
+/// Table II figure evidently includes per-unit input staging that is shared
+/// at the array level. We follow Fig. 7 (the floorplan is the paper's
+/// ground truth for the "same chip area" claim) and keep Table II's number
+/// for the unit-level comparison only.
+pub fn yodann_area() -> AreaRollup {
+    use calib::*;
+    AreaRollup {
+        processing_um2: PROCESSING_AREA_YODANN_UM2,
+        image_buffer_um2: IMG_BUFFER_AREA_UM2,
+        kernel_buffer_um2: KERNEL_BUFFER_AREA_UM2,
+        controller_um2: CONTROLLER_AREA_UM2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_activity_zero_energy() {
+        let m = EnergyModel::default();
+        let e = m.energy(&Activity::default());
+        assert_eq!(e.total_pj(), 0.0);
+        assert_eq!(m.avg_power_mw(&Activity::default()), 0.0);
+    }
+
+    /// A fully-active PE for 441 cycles must price close to the paper's
+    /// 0.12 mW × 1014 ns = 122 pJ (Table II).
+    #[test]
+    fn pe_energy_anchor() {
+        let m = EnergyModel::default();
+        let a = Activity {
+            pe_neuron_evals: 441 * 4,
+            pe_reg_accesses: 441 * 4,
+            total_cycles: 441,
+            ..Default::default()
+        };
+        let e = m.energy(&a).total_pj();
+        let paper = 0.12 * 1014.3; // mW × ns = pJ
+        // Calibrated to Table IV/V (see calib::NEURON_EVAL_PJ): a fully
+        // active PE prices at ~half of Table II's figure; the two tables
+        // are mutually inconsistent by ~2x (EXPERIMENTS.md §Table II).
+        assert!(e > 0.3 * paper && e < 0.8 * paper, "PE energy {e} vs paper {paper}");
+        let p = m.avg_power_mw(&a);
+        assert!(p > 0.03 && p < 0.12, "avg power {p} mW");
+    }
+
+    /// Table II: 17 fully-active integer MAC cycles ≈ 7.17 mW.
+    #[test]
+    fn mac_power_anchor() {
+        let m = EnergyModel::default();
+        let a = Activity { mac_int_cycles: 17, total_cycles: 17, ..Default::default() };
+        let p = m.avg_power_mw(&a);
+        assert!((p - 7.17).abs() < 0.01, "{p}");
+    }
+
+    #[test]
+    fn corner_scaling() {
+        let a = Activity { pe_neuron_evals: 1000, total_cycles: 1000, ..Default::default() };
+        let tt = EnergyModel::new(Corner::TT).energy(&a).total_pj();
+        let ss = EnergyModel::new(Corner::SS).energy(&a).total_pj();
+        let ff = EnergyModel::new(Corner::FF).energy(&a).total_pj();
+        assert!(ss < tt && tt < ff);
+    }
+
+    #[test]
+    fn area_rollups_match_fig7() {
+        let t = tulip_area();
+        let y = yodann_area();
+        // Both chips are ~1.8 mm² with the same buffers; processing areas
+        // within ~2% of each other by construction (§V-C).
+        assert!((t.processing_um2 - y.processing_um2).abs() / y.processing_um2 < 0.05);
+        assert!((t.total_mm2() - calib::DIE_AREA_MM2).abs() / calib::DIE_AREA_MM2 < 0.15);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Activity { offchip_bits: 5, total_cycles: 10, ..Default::default() };
+        a.merge(&Activity { offchip_bits: 7, total_cycles: 1, ..Default::default() });
+        assert_eq!(a.offchip_bits, 12);
+        assert_eq!(a.total_cycles, 11);
+    }
+}

@@ -1,0 +1,43 @@
+//! # TULIP — a configurable BNN accelerator built from programmable
+//! threshold-logic standard cells.
+//!
+//! This crate is a full-system reproduction of
+//! *"A Configurable BNN ASIC using a Network of Programmable Threshold Logic
+//! Standard Cells"* (Wagle, Khatri, Vrudhula — ICCD 2020,
+//! DOI 10.1109/ICCD50377.2020.00079).
+//!
+//! The paper's deliverable is silicon (TSMC 40nm-LP). This crate substitutes
+//! the fab with a **bit-true, cycle-level microarchitecture simulator** plus
+//! an **analytical area/power/energy model** whose per-unit constants are the
+//! paper's own measurements (Tables I/II, Fig 7). See `DESIGN.md` for the
+//! substitution argument and the experiment index.
+//!
+//! ## Layer map
+//! * **L3 (this crate)** — the TULIP system: threshold-neuron cell model
+//!   ([`neuron`]), the TULIP-PE ([`pe`]), the RPO adder-tree scheduler and
+//!   all primitive schedules ([`scheduler`]), the YodaNN baseline
+//!   ([`baseline`]), the top-level architecture ([`arch`]), the tiling /
+//!   network-walk coordinator ([`coordinator`]), energy model ([`energy`]),
+//!   BNN IR + model zoo ([`bnn`]), bit-true & analytic simulation engines
+//!   ([`sim`]), PJRT golden-model runtime ([`runtime`]) and paper-table
+//!   emitters ([`metrics`]).
+//! * **L2/L1 (python, build-time only)** — JAX golden model + Pallas
+//!   XNOR-popcount kernels, AOT-lowered to `artifacts/*.hlo.txt` and loaded
+//!   by [`runtime`] — python never runs on the request path.
+
+pub mod arch;
+pub mod baseline;
+pub mod bnn;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod metrics;
+pub mod neuron;
+pub mod pe;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,169 @@
+//! `tulip` — CLI for the TULIP reproduction.
+//!
+//! Subcommands (std-only argument parsing; clap is unavailable in the
+//! offline vendor set):
+//!
+//! ```text
+//! tulip tables [--network binarynet|alexnet]   # Tables I–V + Fig. 7
+//! tulip table <1|2|3|4|5|fig7>                 # one paper artifact
+//! tulip simulate [--network ...] [--arch tulip|yodann] [--pes N]
+//! tulip schedule <fanin> [threshold]           # RPO schedule stats
+//! tulip golden <artifact-stem>                 # load + run a golden model
+//! ```
+
+use tulip::bnn::{alexnet, binarynet_cifar10, Network};
+use tulip::config::ArchConfig;
+use tulip::coordinator::NetworkPerf;
+use tulip::metrics;
+use tulip::scheduler::adder_tree;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: tulip <tables|table|simulate|schedule|golden> [args]\n\
+         \n  tulip tables [--network binarynet|alexnet]\
+         \n  tulip table <1|2|3|4|5|fig7> [--network ...]\
+         \n  tulip simulate [--network ...] [--arch tulip|yodann] [--pes N]\
+         \n  tulip schedule <fanin> [threshold]\
+         \n  tulip golden <artifact-stem>"
+    );
+    std::process::exit(2);
+}
+
+fn flag_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn pick_network(args: &[String]) -> Network {
+    match flag_value(args, "--network").as_deref() {
+        Some("alexnet") => alexnet(),
+        Some("binarynet") | None => binarynet_cifar10(),
+        Some(other) => {
+            eprintln!("unknown network '{other}' (binarynet|alexnet)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_tables(args: &[String]) {
+    let net = pick_network(args);
+    metrics::print_table1();
+    metrics::print_table2();
+    metrics::print_table3(&tulip::bnn::alexnet());
+    metrics::print_comparison(&net, true);
+    metrics::print_comparison(&net, false);
+    metrics::print_fig7();
+}
+
+fn cmd_table(args: &[String]) {
+    let which = args.first().map(String::as_str).unwrap_or("");
+    let net = pick_network(args);
+    match which {
+        "1" => metrics::print_table1(),
+        "2" => {
+            metrics::print_table2();
+        }
+        "3" => metrics::print_table3(&tulip::bnn::alexnet()),
+        "4" => {
+            metrics::print_comparison(&net, true);
+        }
+        "5" => {
+            metrics::print_comparison(&net, false);
+        }
+        "fig7" => metrics::print_fig7(),
+        _ => usage(),
+    }
+}
+
+fn cmd_simulate(args: &[String]) {
+    let net = pick_network(args);
+    let mut cfg = match flag_value(args, "--arch").as_deref() {
+        Some("yodann") => ArchConfig::yodann(),
+        _ => ArchConfig::tulip(),
+    };
+    if let Some(p) = flag_value(args, "--pes").and_then(|v| v.parse().ok()) {
+        cfg = cfg.with_pes(p);
+    }
+    let perf = NetworkPerf::model(&net, &cfg);
+    println!("{} on {} ({} layers)", net.name, cfg.kind, perf.layers.len());
+    println!(
+        "{:<8} {:>6} {:>4} {:>4} {:>14} {:>14} {:>14}",
+        "layer", "kind", "P", "Z", "compute(cy)", "fetch(cy)", "total(cy)"
+    );
+    for l in &perf.layers {
+        println!(
+            "{:<8} {:>6} {:>4} {:>4} {:>14} {:>14} {:>14}",
+            l.name,
+            if l.binary { "bin" } else { "int" },
+            l.tiling.p,
+            l.tiling.z,
+            l.compute_cycles,
+            l.fetch_cycles,
+            l.total_cycles
+        );
+    }
+    let conv = perf.conv_aggregate();
+    let all = perf.total_aggregate();
+    println!(
+        "\nconv:  {:>8.1} MOp  {:>7.1} GOp/s  {:>9.1} uJ  {:>7.1} ms  {:>5.1} TOp/s/W",
+        conv.mops, conv.gops, conv.energy_uj, conv.time_ms, conv.tops_per_w
+    );
+    println!(
+        "all:   {:>8.1} MOp  {:>7.1} GOp/s  {:>9.1} uJ  {:>7.1} ms  {:>5.1} TOp/s/W",
+        all.mops, all.gops, all.energy_uj, all.time_ms, all.tops_per_w
+    );
+    let e = perf.energy_breakdown();
+    println!(
+        "energy split: PE {:.1} uJ | MAC {:.1} uJ | memory {:.1} uJ | XNOR {:.1} uJ",
+        e.pe_pj * 1e-6,
+        e.mac_pj * 1e-6,
+        e.memory_pj * 1e-6,
+        e.xnor_pj * 1e-6
+    );
+}
+
+fn cmd_schedule(args: &[String]) {
+    let fanin: usize = match args.first().and_then(|a| a.parse().ok()) {
+        Some(f) => f,
+        None => usage(),
+    };
+    let t: i64 = args.get(1).and_then(|a| a.parse().ok()).unwrap_or((fanin / 2) as i64);
+    let prog = adder_tree::threshold_node(fanin, t);
+    println!(
+        "threshold node: fanin={fanin} T'={t}\n  tree cycles {}  compare cycles {}  total {}\n  peak storage {} bits (of {} physical)\n  neuron evals {}  register accesses {:?}",
+        prog.tree_cycles,
+        prog.cmp_cycles,
+        prog.total_cycles(),
+        prog.peak_storage_bits,
+        tulip::pe::NUM_REGS * tulip::pe::REG_BITS,
+        prog.schedule.neuron_evals(),
+        prog.schedule.reg_accesses(),
+    );
+}
+
+fn cmd_golden(args: &[String]) {
+    let stem = match args.first().map(String::as_str) {
+        Some(s) => s,
+        None => usage(),
+    };
+    let rt = tulip::runtime::Runtime::new("artifacts").expect("PJRT client");
+    println!("platform: {}", rt.platform());
+    match rt.load(stem) {
+        Ok(model) => println!("loaded + compiled artifact '{}'", model.name),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("tables") => cmd_tables(&args[1..]),
+        Some("table") => cmd_table(&args[1..]),
+        Some("simulate") => cmd_simulate(&args[1..]),
+        Some("schedule") => cmd_schedule(&args[1..]),
+        Some("golden") => cmd_golden(&args[1..]),
+        _ => usage(),
+    }
+}

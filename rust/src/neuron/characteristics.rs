@@ -1,0 +1,162 @@
+//! Measured cell characteristics (Table I of the paper) and PVT corners.
+//!
+//! These constants are *calibration inputs* to the analytical model: the
+//! paper characterized the re-implemented 40nm hardware neuron of [21]
+//! programmed to `[2,1,1,1;T]` across SS/TT/FF corners, and reports the
+//! TT-corner area/power/delay against a conventional CMOS standard-cell
+//! equivalent of the same logic (Table I).
+
+
+/// Process/voltage/temperature corner used for characterization (§V-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Corner {
+    /// Slow-slow, 0.81 V, 125 °C.
+    SS,
+    /// Typical-typical, 0.9 V, 25 °C — the corner every table reports.
+    TT,
+    /// Fast-fast, 0.99 V, 0 °C.
+    FF,
+}
+
+impl Corner {
+    /// Supply voltage at this corner (V).
+    pub fn vdd(self) -> f64 {
+        match self {
+            Corner::SS => 0.81,
+            Corner::TT => 0.90,
+            Corner::FF => 0.99,
+        }
+    }
+
+    /// Junction temperature at this corner (°C).
+    pub fn temperature(self) -> f64 {
+        match self {
+            Corner::SS => 125.0,
+            Corner::TT => 25.0,
+            Corner::FF => 0.0,
+        }
+    }
+
+    /// First-order derating of delay relative to TT. Mixed-signal threshold
+    /// cells slow down at low VDD roughly with the alpha-power law; we use
+    /// the conventional (VDD/VDD_TT)^-1.6 fit, which reproduces the usual
+    /// ±25-30% SS/FF swing of 40nm-LP libraries.
+    pub fn delay_derate(self) -> f64 {
+        (self.vdd() / Corner::TT.vdd()).powf(-1.6)
+    }
+
+    /// First-order dynamic-power derating relative to TT: P ∝ VDD².
+    pub fn power_derate(self) -> f64 {
+        (self.vdd() / Corner::TT.vdd()).powi(2)
+    }
+
+    pub const ALL: [Corner; 3] = [Corner::SS, Corner::TT, Corner::FF];
+}
+
+impl std::fmt::Display for Corner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Corner::SS => "SS 0.81V 125C",
+            Corner::TT => "TT 0.90V 25C",
+            Corner::FF => "FF 0.99V 0C",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Area / power / delay of a standard cell at the TT corner.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellCharacteristics {
+    /// Cell area, µm².
+    pub area_um2: f64,
+    /// Average power while clocked, µW.
+    pub power_uw: f64,
+    /// Worst-case clock-to-q delay, ps.
+    pub worst_delay_ps: f64,
+}
+
+impl CellCharacteristics {
+    /// Characteristics derated to a given corner (TT values are measured;
+    /// SS/FF are first-order derated — the paper characterized all three
+    /// corners but reports only TT numbers).
+    pub fn at_corner(&self, corner: Corner) -> CellCharacteristics {
+        CellCharacteristics {
+            area_um2: self.area_um2, // area is corner-independent
+            power_uw: self.power_uw * corner.power_derate(),
+            worst_delay_ps: self.worst_delay_ps * corner.delay_derate(),
+        }
+    }
+
+    /// Energy per clocked evaluation at a given clock period (fJ):
+    /// µW × ns = 10⁻⁶ W × 10⁻⁹ s = fJ.
+    pub fn energy_per_cycle_fj(&self, period_ns: f64) -> f64 {
+        self.power_uw * period_ns
+    }
+}
+
+/// Table I, column "Hardware Neuron [21]": the mixed-signal threshold cell.
+pub const HW_NEURON: CellCharacteristics =
+    CellCharacteristics { area_um2: 15.6, power_uw: 4.46, worst_delay_ps: 384.0 };
+
+/// Table I, column "Logical Equivalent": conventional CMOS standard cells
+/// implementing the same `[2,1,1,1;T]` function + flip-flop.
+pub const CMOS_EQUIVALENT: CellCharacteristics =
+    CellCharacteristics { area_um2: 27.0, power_uw: 6.72, worst_delay_ps: 697.0 };
+
+/// Improvement factors reported in Table I (X column).
+pub fn table1_improvements() -> (f64, f64, f64) {
+    (
+        CMOS_EQUIVALENT.area_um2 / HW_NEURON.area_um2,
+        CMOS_EQUIVALENT.power_uw / HW_NEURON.power_uw,
+        CMOS_EQUIVALENT.worst_delay_ps / HW_NEURON.worst_delay_ps,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table I's X column: 1.8X area, 1.5X power, 1.8X delay.
+    #[test]
+    fn table1_ratios_match_paper() {
+        let (a, p, d) = table1_improvements();
+        assert!((a - 1.73).abs() < 0.1, "area ratio {a}");
+        assert!((p - 1.51).abs() < 0.05, "power ratio {p}");
+        assert!((d - 1.81).abs() < 0.05, "delay ratio {d}");
+    }
+
+    #[test]
+    fn corner_derating_is_monotone() {
+        let ss = HW_NEURON.at_corner(Corner::SS);
+        let tt = HW_NEURON.at_corner(Corner::TT);
+        let ff = HW_NEURON.at_corner(Corner::FF);
+        assert!(ss.worst_delay_ps > tt.worst_delay_ps);
+        assert!(tt.worst_delay_ps > ff.worst_delay_ps);
+        assert!(ss.power_uw < tt.power_uw);
+        assert!(tt.power_uw < ff.power_uw);
+        assert_eq!(ss.area_um2, tt.area_um2);
+    }
+
+    #[test]
+    fn tt_corner_is_identity() {
+        let tt = HW_NEURON.at_corner(Corner::TT);
+        assert!((tt.power_uw - HW_NEURON.power_uw).abs() < 1e-12);
+        assert!((tt.worst_delay_ps - HW_NEURON.worst_delay_ps).abs() < 1e-12);
+    }
+
+    /// The cell's worst delay must fit in the 2.3 ns clock the paper uses
+    /// even at the SS corner — otherwise Table II's timing is impossible.
+    #[test]
+    fn cell_fits_clock_at_all_corners() {
+        for c in Corner::ALL {
+            assert!(HW_NEURON.at_corner(c).worst_delay_ps < 2300.0 / 2.0);
+        }
+    }
+
+    #[test]
+    fn energy_per_cycle() {
+        // 4.46 µW × 2.3 ns ≈ 10.26 fJ
+        let e = HW_NEURON.energy_per_cycle_fj(2.3);
+        assert!((e - 10.258).abs() < 1e-2, "{e}");
+    }
+}

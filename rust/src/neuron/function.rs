@@ -1,0 +1,128 @@
+//! Arbitrary threshold functions `(W, T) = [w_1..w_n; T]` (Eq. 1) and the
+//! checks the decomposition pipeline needs: evaluation, boundedness, and
+//! the reduction of a BNN node (±1 weights) to a popcount-vs-threshold test.
+
+
+/// A threshold function `f(x) = 1 ⇔ Σ w_i x_i ≥ T` with integer weights
+/// (W.l.o.g. integer weights/threshold suffice — Muroga '71, paper fn. 1).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ThresholdFunction {
+    /// Integer weights `w_1..w_n`.
+    pub weights: Vec<i32>,
+    /// Threshold `T`.
+    pub threshold: i32,
+}
+
+impl ThresholdFunction {
+    /// Build `[w_1..w_n; T]`.
+    pub fn new(weights: Vec<i32>, threshold: i32) -> Self {
+        Self { weights, threshold }
+    }
+
+    /// The TULIP cell: `[2,1,1,1;T]`.
+    pub fn tulip_cell(threshold: i32) -> Self {
+        Self::new(vec![2, 1, 1, 1], threshold)
+    }
+
+    /// Fan-in of the function.
+    pub fn fanin(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Evaluate on a Boolean input vector (length must equal fan-in).
+    pub fn eval(&self, x: &[bool]) -> bool {
+        assert_eq!(x.len(), self.weights.len(), "fan-in mismatch");
+        self.weighted_sum(x) >= self.threshold
+    }
+
+    /// The LHS of Eq. 1, `Σ w_i x_i`.
+    pub fn weighted_sum(&self, x: &[bool]) -> i32 {
+        self.weights.iter().zip(x).map(|(w, &xi)| w * xi as i32).sum()
+    }
+
+    /// A BNN node: ±1 weights over `n` binarized activations, threshold `t`.
+    ///
+    /// With activations encoded `{0,1}` and products formed by XNOR, the
+    /// weighted sum becomes `2·popcount(xnor(x,w)) − n`, so the node is the
+    /// threshold test `popcount ≥ ⌈(t + n)/2⌉` — this is the reduction the
+    /// adder-tree scheduler implements (§III).
+    pub fn bnn_node(signed_weights: &[i8], threshold: i32) -> Self {
+        Self::new(signed_weights.iter().map(|&w| w as i32).collect(), threshold)
+    }
+
+    /// Popcount threshold equivalent for a ±1-weight node (see
+    /// [`ThresholdFunction::bnn_node`]): returns `T'` such that
+    /// `f(x) = popcount(xnor) ≥ T'`.
+    pub fn popcount_threshold(&self) -> i32 {
+        let n = self.weights.len() as i32;
+        // Σ±1·(2x−1)... derivation: with w ∈ {±1}, x ∈ {0,1},
+        // Σ w_i (2x_i − 1) over the ±1-activation view equals
+        // 2·popcount(xnor) − n; f ⇔ 2·pc − n ≥ T ⇔ pc ≥ ⌈(T+n)/2⌉.
+        (self.threshold + n + 1).div_euclid(2)
+    }
+
+    /// True when all weights are ±1 (a binary-layer node).
+    pub fn is_binary(&self) -> bool {
+        self.weights.iter().all(|&w| w == 1 || w == -1)
+    }
+}
+
+/// Popcount of XNOR(x, w) for a ±1-weight node over {0,1} activations —
+/// the quantity the adder tree accumulates.
+pub fn xnor_popcount(x: &[bool], w: &[i8]) -> u32 {
+    assert_eq!(x.len(), w.len());
+    x.iter()
+        .zip(w)
+        .map(|(&xi, &wi)| {
+            let wb = wi > 0; // +1 ↦ 1, −1 ↦ 0
+            (xi == wb) as u32
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_matches_definition() {
+        let f = ThresholdFunction::new(vec![2, 1, 1, 1], 3);
+        assert!(f.eval(&[true, true, false, false])); // 2+1 ≥ 3
+        assert!(!f.eval(&[false, true, true, false])); // 1+1 < 3
+        assert_eq!(f.fanin(), 4);
+    }
+
+    #[test]
+    fn popcount_threshold_equivalence_exhaustive() {
+        // For every small ±1-weight node, the popcount formulation must agree
+        // with the signed-sum formulation on every input.
+        let weights: [i8; 5] = [1, -1, 1, 1, -1];
+        for t in -6..=6 {
+            let f = ThresholdFunction::bnn_node(&weights, t);
+            let tp = f.popcount_threshold();
+            for m in 0u32..32 {
+                let x: Vec<bool> = (0..5).map(|i| m >> i & 1 != 0).collect();
+                // signed view: activations ±1
+                let signed: i32 = weights
+                    .iter()
+                    .zip(&x)
+                    .map(|(&w, &xi)| w as i32 * if xi { 1 } else { -1 })
+                    .sum();
+                let via_pc = xnor_popcount(&x, &weights) as i32 >= tp;
+                assert_eq!(signed >= t, via_pc, "t={t} m={m:05b}");
+            }
+        }
+    }
+
+    #[test]
+    fn xnor_popcount_basics() {
+        assert_eq!(xnor_popcount(&[true, false], &[1, -1]), 2);
+        assert_eq!(xnor_popcount(&[false, true], &[1, -1]), 0);
+    }
+
+    #[test]
+    fn binary_detection() {
+        assert!(ThresholdFunction::bnn_node(&[1, -1, 1], 0).is_binary());
+        assert!(!ThresholdFunction::tulip_cell(2).is_binary());
+    }
+}

@@ -1,0 +1,297 @@
+//! The TULIP-PE micro-op ISA — one control word per clock cycle.
+//!
+//! Fig. 3 of the paper: each of the four neurons `N1..N4` has inputs
+//! `(a, b, c, d)` with weights `[2, 1, 1, 1]` and a run-time threshold `T`
+//! driven by digital control signals. Inputs **b and c are shared buses**
+//! across all four neurons ("so that the neuron can fetch data from its
+//! local register, and broadcast it to all other neurons"); `a` and `d` are
+//! private per-neuron muxes. Inter-neuron communication and register access
+//! go through multiplexers; the reconfigurable sequence generator (§IV-E)
+//! broadcasts one control word per cycle to every PE in the array.
+//!
+//! Modelling notes (documented deviations — see DESIGN.md §6):
+//! * A "cascade of two binary neurons" implements a full adder (§III). We
+//!   model the cascade with a two-phase cycle: phase-0 neurons latch first
+//!   (carry), phase-1 neurons may sample a phase-0 neuron's *fresh* output
+//!   within the same cycle ([`Src::NFresh`]). This is the two-level
+//!   threshold network of Fig. 2(b)'s insets collapsed into one clock.
+//! * Register-to-bus muxes are combinational, so a `w`-bit ripple addition
+//!   takes exactly `w` cycles (sum bit `i` and, on the last cycle, the
+//!   carry-out are written back in the same cycle they are produced).
+
+
+/// Number of neurons in a TULIP-PE (§IV-A: four is the minimum that supports
+/// addition, comparison, maxpooling and ReLU).
+pub const NUM_NEURONS: usize = 4;
+/// Local register width per neuron (§IV-A: 16-bit local registers).
+pub const REG_BITS: usize = 16;
+/// Number of local registers (one per neuron: R1..R4).
+pub const NUM_REGS: usize = NUM_NEURONS;
+
+/// A combinational bit source for buses and private inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Src {
+    /// Constant 0 (input mux disabled).
+    Zero,
+    /// Constant 1.
+    One,
+    /// External input channel `i` (XNOR-product feed / operand stream).
+    Ext(usize),
+    /// Latched output of neuron `k` as of the *previous* edge.
+    N(usize),
+    /// Complement of [`Src::N`].
+    NInv(usize),
+    /// Same-cycle (phase-0) output of neuron `k` — the neuron cascade.
+    /// Only valid from a phase-1 neuron or a register write.
+    NFresh(usize),
+    /// Complement of [`Src::NFresh`].
+    NFreshInv(usize),
+    /// Bit `bit` of local register `reg`.
+    Reg { reg: usize, bit: usize },
+    /// Complement of [`Src::Reg`].
+    RegInv { reg: usize, bit: usize },
+}
+
+impl Src {
+    /// Does this source read a register? (→ energy accounting)
+    pub fn reads_reg(&self) -> Option<usize> {
+        match self {
+            Src::Reg { reg, .. } | Src::RegInv { reg, .. } => Some(*reg),
+            _ => None,
+        }
+    }
+
+    /// Does this source depend on a same-cycle (fresh) neuron output?
+    pub fn is_fresh(&self) -> bool {
+        matches!(self, Src::NFresh(_) | Src::NFreshInv(_))
+    }
+}
+
+/// Per-neuron control for one cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NeuronCtl {
+    /// Clock-gated: the latch holds its value and no energy is consumed
+    /// (§IV-E: "clock gating strategy whenever a part of the design is not
+    /// used").
+    pub gated: bool,
+    /// Evaluation phase: 0 = first wave (e.g. carry), 1 = may read
+    /// [`Src::NFresh`] outputs of phase-0 neurons (e.g. sum).
+    pub phase: u8,
+    /// Private input `a` (weight 2).
+    pub a: Src,
+    /// Take bus `b` (weight 1)? `false` contributes 0.
+    pub b_en: bool,
+    /// Complement the `b` bus tap for this neuron.
+    pub b_inv: bool,
+    /// Take bus `c` (weight 1)?
+    pub c_en: bool,
+    /// Complement the `c` bus tap.
+    pub c_inv: bool,
+    /// Private input `d` (weight 1).
+    pub d: Src,
+    /// Run-time threshold `T` for this cycle.
+    pub threshold: i32,
+}
+
+impl NeuronCtl {
+    /// A gated (idle) neuron.
+    pub const fn idle() -> Self {
+        NeuronCtl {
+            gated: true,
+            phase: 0,
+            a: Src::Zero,
+            b_en: false,
+            b_inv: false,
+            c_en: false,
+            c_inv: false,
+            d: Src::Zero,
+            threshold: 1,
+        }
+    }
+
+    /// An active neuron with all inputs defaulted off.
+    pub const fn active(threshold: i32) -> Self {
+        NeuronCtl { gated: false, threshold, ..Self::idle() }
+    }
+}
+
+/// Source for an end-of-cycle register write.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WSrc {
+    /// Neuron `k`'s output *after* this cycle's evaluation.
+    N(usize),
+    /// Complement of [`WSrc::N`].
+    NInv(usize),
+    /// Neuron `k`'s output as of the previous edge (write-before-update;
+    /// used to spill a carry latch while the neuron is being re-purposed).
+    NOld(usize),
+    /// External input channel `i`.
+    Ext(usize),
+    /// Register bit copy.
+    Reg { reg: usize, bit: usize },
+    Zero,
+    One,
+}
+
+/// One end-of-cycle register-bit write.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegWrite {
+    pub reg: usize,
+    pub bit: usize,
+    pub src: WSrc,
+}
+
+/// One cycle of PE control — what the sequence generator broadcasts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlWord {
+    /// Shared bus `b` driver for this cycle.
+    pub bus_b: Src,
+    /// Shared bus `c` driver.
+    pub bus_c: Src,
+    /// Per-neuron control.
+    pub neurons: [NeuronCtl; NUM_NEURONS],
+    /// End-of-cycle register writes (latch-based file: ≤ 2 bit-writes per
+    /// register per cycle — sum + carry-out on the final add cycle).
+    pub writes: Vec<RegWrite>,
+    /// Human-readable annotation for schedule visualization (Fig. 4/5).
+    pub note: Option<String>,
+}
+
+impl ControlWord {
+    /// An all-idle cycle.
+    pub fn idle() -> Self {
+        ControlWord {
+            bus_b: Src::Zero,
+            bus_c: Src::Zero,
+            neurons: [NeuronCtl::idle(); NUM_NEURONS],
+            writes: Vec::new(),
+            note: None,
+        }
+    }
+
+    /// Attach a note (builder style).
+    pub fn with_note(mut self, s: impl Into<String>) -> Self {
+        self.note = Some(s.into());
+        self
+    }
+
+    /// Structural validation of the hardware constraints this word must
+    /// respect. Returns a description of the first violation.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        // Buses are resolved before phase 0 — they may not carry fresh taps.
+        if self.bus_b.is_fresh() || self.bus_c.is_fresh() {
+            return Err("bus driven by same-cycle neuron output".into());
+        }
+        for (k, n) in self.neurons.iter().enumerate() {
+            if n.gated {
+                continue;
+            }
+            if n.phase == 0 && (n.a.is_fresh() || n.d.is_fresh()) {
+                return Err(format!("N{} is phase-0 but reads a fresh output", k + 1));
+            }
+            if let Src::NFresh(j) | Src::NFreshInv(j) = n.a {
+                if self.neurons[j].phase != 0 || self.neurons[j].gated {
+                    return Err(format!("N{} fresh-reads non-phase-0 N{}", k + 1, j + 1));
+                }
+            }
+            if let Src::NFresh(j) | Src::NFreshInv(j) = n.d {
+                if self.neurons[j].phase != 0 || self.neurons[j].gated {
+                    return Err(format!("N{} fresh-reads non-phase-0 N{}", k + 1, j + 1));
+                }
+            }
+            for s in [n.a, n.d] {
+                if let Src::Reg { reg, bit } | Src::RegInv { reg, bit } = s {
+                    if reg >= NUM_REGS || bit >= REG_BITS {
+                        return Err(format!("N{} reads out-of-range R{}[{}]", k + 1, reg + 1, bit));
+                    }
+                }
+            }
+        }
+        // ≤ 2 writes per register per cycle, no duplicate (reg,bit) targets.
+        let mut seen = std::collections::HashSet::new();
+        let mut per_reg = [0usize; NUM_REGS];
+        for w in &self.writes {
+            if w.reg >= NUM_REGS || w.bit >= REG_BITS {
+                return Err(format!("write out of range R{}[{}]", w.reg + 1, w.bit));
+            }
+            if !seen.insert((w.reg, w.bit)) {
+                return Err(format!("duplicate write to R{}[{}]", w.reg + 1, w.bit));
+            }
+            per_reg[w.reg] += 1;
+            if per_reg[w.reg] > 2 {
+                return Err(format!("more than 2 writes to R{} in one cycle", w.reg + 1));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of neurons evaluating (not clock-gated) this cycle.
+    pub fn active_neurons(&self) -> usize {
+        self.neurons.iter().filter(|n| !n.gated).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_word_validates() {
+        assert!(ControlWord::idle().validate().is_ok());
+        assert_eq!(ControlWord::idle().active_neurons(), 0);
+    }
+
+    #[test]
+    fn bus_cannot_be_fresh() {
+        let mut cw = ControlWord::idle();
+        cw.bus_b = Src::NFresh(2);
+        assert!(cw.validate().is_err());
+    }
+
+    #[test]
+    fn phase0_cannot_read_fresh() {
+        let mut cw = ControlWord::idle();
+        cw.neurons[1] = NeuronCtl { gated: false, phase: 0, a: Src::NFresh(2), ..NeuronCtl::idle() };
+        assert!(cw.validate().is_err());
+    }
+
+    #[test]
+    fn fresh_read_requires_phase0_producer() {
+        let mut cw = ControlWord::idle();
+        // N3 active phase 0, N2 phase-1 fresh-reads it: OK.
+        cw.neurons[2] = NeuronCtl::active(2);
+        cw.neurons[1] =
+            NeuronCtl { gated: false, phase: 1, a: Src::NFreshInv(2), ..NeuronCtl::idle() };
+        assert!(cw.validate().is_ok());
+        // Producer gated → invalid.
+        cw.neurons[2].gated = true;
+        assert!(cw.validate().is_err());
+    }
+
+    #[test]
+    fn duplicate_and_excess_writes_rejected() {
+        let mut cw = ControlWord::idle();
+        cw.writes = vec![
+            RegWrite { reg: 1, bit: 0, src: WSrc::N(1) },
+            RegWrite { reg: 1, bit: 0, src: WSrc::N(2) },
+        ];
+        assert!(cw.validate().is_err());
+        cw.writes = vec![
+            RegWrite { reg: 1, bit: 0, src: WSrc::N(1) },
+            RegWrite { reg: 1, bit: 1, src: WSrc::N(2) },
+            RegWrite { reg: 1, bit: 2, src: WSrc::N(3) },
+        ];
+        assert!(cw.validate().is_err());
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let mut cw = ControlWord::idle();
+        cw.writes = vec![RegWrite { reg: 0, bit: REG_BITS, src: WSrc::Zero }];
+        assert!(cw.validate().is_err());
+        let mut cw = ControlWord::idle();
+        cw.neurons[0] =
+            NeuronCtl { gated: false, a: Src::Reg { reg: 9, bit: 0 }, ..NeuronCtl::idle() };
+        assert!(cw.validate().is_err());
+    }
+}

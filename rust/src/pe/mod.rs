@@ -1,0 +1,332 @@
+//! The TULIP-PE: a fully connected network of four `[2,1,1,1;T]` threshold
+//! cells with 16-bit local registers and a shared-bus mux fabric (§IV-A,
+//! Fig. 3), executed one control word per clock.
+//!
+//! The executor is **bit-true and cycle-accurate**: every quantity the
+//! energy model consumes (neuron evaluations, gated cycles, register
+//! accesses, cycle count) is counted here, and every schedule the analytic
+//! performance model prices is exactly a `Vec<ControlWord>` that this
+//! executor can run — so the perf model and the bit-true model cannot
+//! drift apart (asserted by tests in `sim::`).
+
+pub mod isa;
+pub mod registers;
+
+pub use isa::{ControlWord, NeuronCtl, RegWrite, Src, WSrc, NUM_NEURONS, NUM_REGS, REG_BITS};
+pub use registers::RegisterFile;
+
+use crate::neuron::HwNeuron;
+
+/// Activity counters for the energy model.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PeStats {
+    /// Total clock cycles stepped.
+    pub cycles: u64,
+    /// Neuron evaluations (non-gated neuron-cycles).
+    pub neuron_evals: u64,
+    /// Gated neuron-cycles (leakage-only).
+    pub gated_neuron_cycles: u64,
+    /// Register bit-reads.
+    pub reg_reads: u64,
+    /// Register bit-writes.
+    pub reg_writes: u64,
+}
+
+impl PeStats {
+    /// Merge counters (e.g. across PEs).
+    pub fn merge(&mut self, other: &PeStats) {
+        self.cycles += other.cycles;
+        self.neuron_evals += other.neuron_evals;
+        self.gated_neuron_cycles += other.gated_neuron_cycles;
+        self.reg_reads += other.reg_reads;
+        self.reg_writes += other.reg_writes;
+    }
+}
+
+/// One TULIP processing element.
+#[derive(Debug, Clone)]
+pub struct TulipPe {
+    neurons: [HwNeuron; NUM_NEURONS],
+    regs: RegisterFile,
+    stats: PeStats,
+}
+
+impl Default for TulipPe {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TulipPe {
+    pub fn new() -> Self {
+        TulipPe {
+            neurons: [HwNeuron::new(); NUM_NEURONS],
+            regs: RegisterFile::new(),
+            stats: PeStats::default(),
+        }
+    }
+
+    /// Latched output of neuron `k` (0-based; `N1` is `k = 0`).
+    pub fn neuron_out(&self, k: usize) -> bool {
+        self.neurons[k].output()
+    }
+
+    /// Mutable access to the register file (test setup / operand loading —
+    /// architecturally this is the path from the XNOR array / input buffers).
+    pub fn regs_mut(&mut self) -> &mut RegisterFile {
+        &mut self.regs
+    }
+
+    pub fn regs(&self) -> &RegisterFile {
+        &self.regs
+    }
+
+    pub fn stats(&self) -> PeStats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = PeStats::default();
+        self.regs.reset_counters();
+    }
+
+    /// Resolve a combinational source. `fresh` carries the already-updated
+    /// phase-0 outputs (`None` while resolving buses / phase-0 inputs).
+    #[inline(always)]
+    fn resolve(
+        regs: &mut RegisterFile,
+        src: Src,
+        ext: &[bool],
+        old: &[bool; NUM_NEURONS],
+        fresh: Option<&[bool; NUM_NEURONS]>,
+    ) -> bool {
+        match src {
+            Src::Zero => false,
+            Src::One => true,
+            Src::Ext(i) => {
+                assert!(i < ext.len(), "ext channel {i} not driven (have {})", ext.len());
+                ext[i]
+            }
+            Src::N(k) => old[k],
+            Src::NInv(k) => !old[k],
+            Src::NFresh(k) => fresh.expect("fresh read before phase 0 complete")[k],
+            Src::NFreshInv(k) => !fresh.expect("fresh read before phase 0 complete")[k],
+            Src::Reg { reg, bit } => regs.read(reg, bit),
+            Src::RegInv { reg, bit } => !regs.read(reg, bit),
+        }
+    }
+
+    /// Execute one control word with the given external input bits.
+    ///
+    /// Cycle semantics (see `isa.rs` module docs):
+    /// 1. buses resolve combinationally (registers / old outputs / ext);
+    /// 2. phase-0 neurons evaluate and latch;
+    /// 3. phase-1 neurons evaluate (may sample fresh phase-0 outputs) and
+    ///    latch;
+    /// 4. register writes commit (may sample fresh outputs or, via
+    ///    [`WSrc::NOld`], the pre-cycle outputs).
+    pub fn step(&mut self, cw: &ControlWord, ext: &[bool]) {
+        debug_assert!(cw.validate().is_ok(), "invalid control word: {:?}", cw.validate());
+        let old: [bool; NUM_NEURONS] = std::array::from_fn(|k| self.neurons[k].output());
+
+        let bus_b = Self::resolve(&mut self.regs, cw.bus_b, ext, &old, None);
+        let bus_c = Self::resolve(&mut self.regs, cw.bus_c, ext, &old, None);
+
+        // Phase 0.
+        let mut next = old;
+        for (k, n) in cw.neurons.iter().enumerate() {
+            if n.gated || n.phase != 0 {
+                continue;
+            }
+            let a = Self::resolve(&mut self.regs, n.a, ext, &old, None);
+            let d = Self::resolve(&mut self.regs, n.d, ext, &old, None);
+            let b = n.b_en && (bus_b ^ n.b_inv);
+            let c = n.c_en && (bus_c ^ n.c_inv);
+            next[k] = self.neurons[k].clock(a, b, c, d, n.threshold);
+            self.stats.neuron_evals += 1;
+        }
+        let after_p0 = next;
+
+        // Phase 1 (the cascade).
+        for (k, n) in cw.neurons.iter().enumerate() {
+            if n.gated {
+                self.stats.gated_neuron_cycles += 1;
+                continue;
+            }
+            if n.phase == 0 {
+                continue;
+            }
+            let a = Self::resolve(&mut self.regs, n.a, ext, &old, Some(&after_p0));
+            let d = Self::resolve(&mut self.regs, n.d, ext, &old, Some(&after_p0));
+            let b = n.b_en && (bus_b ^ n.b_inv);
+            let c = n.c_en && (bus_c ^ n.c_inv);
+            next[k] = self.neurons[k].clock(a, b, c, d, n.threshold);
+            self.stats.neuron_evals += 1;
+        }
+
+        // Register writes.
+        for w in &cw.writes {
+            let v = match w.src {
+                WSrc::N(k) => next[k],
+                WSrc::NInv(k) => !next[k],
+                WSrc::NOld(k) => old[k],
+                WSrc::Ext(i) => {
+                    assert!(i < ext.len(), "ext channel {i} not driven");
+                    ext[i]
+                }
+                WSrc::Reg { reg, bit } => self.regs.read(reg, bit),
+                WSrc::Zero => false,
+                WSrc::One => true,
+            };
+            self.regs.write(w.reg, w.bit, v);
+        }
+
+        let (r, w) = self.regs.access_counts();
+        self.stats.reg_reads = r;
+        self.stats.reg_writes = w;
+        self.stats.cycles += 1;
+    }
+
+    /// Run a schedule. `ext_stream[cycle]` supplies the external input bits
+    /// for each cycle (empty slice for cycles with no external operands).
+    pub fn run(&mut self, schedule: &[ControlWord], ext_stream: &[Vec<bool>]) {
+        static EMPTY: Vec<bool> = Vec::new();
+        for (i, cw) in schedule.iter().enumerate() {
+            let ext = ext_stream.get(i).unwrap_or(&EMPTY);
+            self.step(cw, ext);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A single-cycle full adder: N3 = carry (phase 0), N2 = sum (phase 1,
+    /// reads the fresh carry) — the "cascade of two binary neurons" of §III.
+    fn fa_word(x: Src, y: Src, cin: Src) -> ControlWord {
+        let mut cw = ControlWord::idle();
+        cw.bus_b = x;
+        cw.bus_c = y;
+        // N3 (index 2): carry = maj(x, y, cin) = [b + c + d ≥ 2]
+        cw.neurons[2] = NeuronCtl {
+            gated: false,
+            phase: 0,
+            a: Src::Zero,
+            b_en: true,
+            b_inv: false,
+            c_en: true,
+            c_inv: false,
+            d: cin,
+            threshold: 2,
+        };
+        // N2 (index 1): sum = [2·¬carry + x + y + cin ≥ 3]
+        cw.neurons[1] = NeuronCtl {
+            gated: false,
+            phase: 1,
+            a: Src::NFreshInv(2),
+            b_en: true,
+            b_inv: false,
+            c_en: true,
+            c_inv: false,
+            d: cin,
+            threshold: 3,
+        };
+        cw
+    }
+
+    /// Exhaustive: the two-neuron cascade is a full adder.
+    #[test]
+    fn cascade_full_adder_exhaustive() {
+        for m in 0u32..8 {
+            let (x, y, cin) = (m & 1 != 0, m & 2 != 0, m & 4 != 0);
+            let mut pe = TulipPe::new();
+            let cw = fa_word(Src::Ext(0), Src::Ext(1), Src::Ext(2));
+            pe.step(&cw, &[x, y, cin]);
+            let sum = pe.neuron_out(1);
+            let carry = pe.neuron_out(2);
+            let total = x as u32 + y as u32 + cin as u32;
+            assert_eq!(carry as u32 * 2 + sum as u32, total, "m={m:03b}");
+        }
+    }
+
+    /// Ripple addition through the carry latch: d = N3's own old output.
+    #[test]
+    fn ripple_add_via_carry_latch() {
+        // 4-bit x = 0b1011 (11), y = 0b0110 (6) → 17 = 0b10001.
+        let x = [true, true, false, true];
+        let y = [false, true, true, false];
+        let mut pe = TulipPe::new();
+        let mut sum_bits = Vec::new();
+        for i in 0..4 {
+            let mut cw = fa_word(Src::Ext(0), Src::Ext(1), if i == 0 { Src::Zero } else { Src::N(2) });
+            cw.writes = vec![RegWrite { reg: 0, bit: i, src: WSrc::N(1) }];
+            pe.step(&cw, &[x[i], y[i]]);
+            sum_bits.push(pe.neuron_out(1));
+        }
+        let carry_out = pe.neuron_out(2);
+        let got = sum_bits.iter().enumerate().map(|(i, &b)| (b as u32) << i).sum::<u32>()
+            + ((carry_out as u32) << 4);
+        assert_eq!(got, 17);
+        assert_eq!(pe.regs().peek_field(0, 0, 4), 17 & 0xf);
+    }
+
+    #[test]
+    fn gated_neuron_holds_and_counts() {
+        let mut pe = TulipPe::new();
+        let mut cw = ControlWord::idle();
+        cw.neurons[0] = NeuronCtl::active(0); // T=0 → latch 1
+        pe.step(&cw, &[]);
+        assert!(pe.neuron_out(0));
+        // Now gate it and try to force 0 — it must hold.
+        let cw2 = ControlWord::idle();
+        pe.step(&cw2, &[]);
+        assert!(pe.neuron_out(0));
+        assert_eq!(pe.stats().neuron_evals, 1);
+        assert_eq!(pe.stats().gated_neuron_cycles, 3 + 4);
+        assert_eq!(pe.stats().cycles, 2);
+    }
+
+    #[test]
+    fn nold_write_spills_pre_cycle_value() {
+        let mut pe = TulipPe::new();
+        // Cycle 1: N1 latches 1.
+        let mut cw = ControlWord::idle();
+        cw.neurons[0] = NeuronCtl::active(0);
+        pe.step(&cw, &[]);
+        // Cycle 2: N1 latches 0 while its OLD value (1) spills to R2[0].
+        let mut cw = ControlWord::idle();
+        cw.neurons[0] = NeuronCtl::active(6); // unreachable → 0
+        cw.writes = vec![RegWrite { reg: 1, bit: 0, src: WSrc::NOld(0) }];
+        pe.step(&cw, &[]);
+        assert!(!pe.neuron_out(0));
+        assert!(pe.regs().peek(1, 0));
+    }
+
+    #[test]
+    fn bus_inversion_per_neuron() {
+        let mut pe = TulipPe::new();
+        let mut cw = ControlWord::idle();
+        cw.bus_b = Src::One;
+        // N1 takes b inverted (0), N2 takes b straight (1); T = 1 each.
+        cw.neurons[0] =
+            NeuronCtl { gated: false, b_en: true, b_inv: true, ..NeuronCtl::active(1) };
+        cw.neurons[1] = NeuronCtl { gated: false, b_en: true, ..NeuronCtl::active(1) };
+        pe.step(&cw, &[]);
+        assert!(!pe.neuron_out(0));
+        assert!(pe.neuron_out(1));
+    }
+
+    #[test]
+    fn ext_write_and_reg_copy() {
+        let mut pe = TulipPe::new();
+        let mut cw = ControlWord::idle();
+        cw.writes = vec![RegWrite { reg: 0, bit: 3, src: WSrc::Ext(0) }];
+        pe.step(&cw, &[true]);
+        assert!(pe.regs().peek(0, 3));
+        let mut cw = ControlWord::idle();
+        cw.writes = vec![RegWrite { reg: 3, bit: 7, src: WSrc::Reg { reg: 0, bit: 3 } }];
+        pe.step(&cw, &[]);
+        assert!(pe.regs().peek(3, 7));
+    }
+}

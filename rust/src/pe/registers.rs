@@ -1,0 +1,132 @@
+//! The per-neuron 16-bit local registers (§IV-A).
+//!
+//! "The local registers are constructed using latches. As opposed to global
+//! registers, the local registers allow the neurons to access temporarily
+//! stored data faster, and also reduce the power consumption per read/write
+//! access." Each register is a bank of 16 individually-enabled latches, so
+//! distinct bits may be read and written in the same cycle; the executor
+//! enforces ≤ 2 bit-writes per register per cycle (see `isa.rs`).
+
+use super::isa::{NUM_REGS, REG_BITS};
+
+/// Latch-based register file: 4 × 16 bits with access counters for the
+/// energy model.
+#[derive(Debug, Clone, Default)]
+pub struct RegisterFile {
+    regs: [u16; NUM_REGS],
+    reads: u64,
+    writes: u64,
+}
+
+impl RegisterFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Read one bit (counted).
+    #[inline]
+    pub fn read(&mut self, reg: usize, bit: usize) -> bool {
+        debug_assert!(reg < NUM_REGS && bit < REG_BITS);
+        self.reads += 1;
+        self.regs[reg] >> bit & 1 != 0
+    }
+
+    /// Peek without counting (testing / visualization).
+    #[inline]
+    pub fn peek(&self, reg: usize, bit: usize) -> bool {
+        self.regs[reg] >> bit & 1 != 0
+    }
+
+    /// Write one bit (counted).
+    #[inline]
+    pub fn write(&mut self, reg: usize, bit: usize, v: bool) {
+        debug_assert!(reg < NUM_REGS && bit < REG_BITS);
+        self.writes += 1;
+        if v {
+            self.regs[reg] |= 1 << bit;
+        } else {
+            self.regs[reg] &= !(1 << bit);
+        }
+    }
+
+    /// Read a `width`-bit little-endian field of register `reg` starting at
+    /// `lsb` (not counted — used by tests and the functional checker).
+    pub fn peek_field(&self, reg: usize, lsb: usize, width: usize) -> u32 {
+        assert!(lsb + width <= REG_BITS);
+        (self.regs[reg] as u32 >> lsb) & ((1u32 << width) - 1)
+    }
+
+    /// Overwrite a field (test setup).
+    pub fn poke_field(&mut self, reg: usize, lsb: usize, width: usize, value: u32) {
+        assert!(lsb + width <= REG_BITS, "field out of range");
+        assert!(width == 32 || value < (1u32 << width), "value too wide");
+        let mask = (((1u32 << width) - 1) << lsb) as u16;
+        self.regs[reg] = (self.regs[reg] & !mask) | (((value as u16) << lsb) & mask);
+    }
+
+    /// Raw register values.
+    pub fn raw(&self) -> [u16; NUM_REGS] {
+        self.regs
+    }
+
+    /// (reads, writes) access counters.
+    pub fn access_counts(&self) -> (u64, u64) {
+        (self.reads, self.writes)
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.reads = 0;
+        self.writes = 0;
+    }
+
+    /// Clear contents and counters.
+    pub fn clear(&mut self) {
+        *self = Self::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_rw_roundtrip() {
+        let mut rf = RegisterFile::new();
+        rf.write(2, 5, true);
+        assert!(rf.read(2, 5));
+        assert!(!rf.read(2, 4));
+        rf.write(2, 5, false);
+        assert!(!rf.peek(2, 5));
+        assert_eq!(rf.access_counts(), (2, 2));
+    }
+
+    #[test]
+    fn field_poke_peek() {
+        let mut rf = RegisterFile::new();
+        rf.poke_field(1, 3, 5, 0b10110);
+        assert_eq!(rf.peek_field(1, 3, 5), 0b10110);
+        assert_eq!(rf.peek_field(1, 0, 3), 0);
+        // neighbouring bits untouched
+        rf.poke_field(1, 0, 3, 0b111);
+        assert_eq!(rf.peek_field(1, 3, 5), 0b10110);
+    }
+
+    #[test]
+    #[should_panic]
+    fn field_out_of_range_panics() {
+        let mut rf = RegisterFile::new();
+        rf.poke_field(0, 10, 8, 0);
+    }
+
+    #[test]
+    fn counters_reset() {
+        let mut rf = RegisterFile::new();
+        rf.write(0, 0, true);
+        rf.read(0, 0);
+        rf.reset_counters();
+        assert_eq!(rf.access_counts(), (0, 0));
+        assert!(rf.peek(0, 0), "contents survive counter reset");
+        rf.clear();
+        assert!(!rf.peek(0, 0));
+    }
+}

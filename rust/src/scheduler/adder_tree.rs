@@ -1,0 +1,570 @@
+//! Adder-tree decomposition of a large-fanin threshold function (§III) and
+//! its reverse post-order (RPO) schedule on a TULIP-PE (Fig. 2b).
+//!
+//! The weighted sum `S = Σ w_i x_i` of a BNN node (reduced to a popcount of
+//! XNOR products, see `neuron::function`) is decomposed into a balanced
+//! binary tree whose leaves sum three product bits (one full-adder cycle)
+//! and whose internal nodes perform bit-serial additions of the partial
+//! sums. The RPO walk schedules a node only after both subtrees complete,
+//! which minimizes peak intermediate storage (§III-B: `m_i = (i²+3i)/2+2`).
+//!
+//! Register allocation follows the paper's Fig. 4(b) discipline: the two
+//! operands of every addition live in **different local registers** (one
+//! read port per register file) and the destination is a third register;
+//! freed fields are reused immediately, so the whole schedule for nodes up
+//! to ≥ 1023 inputs fits the 4 × 16-bit local registers.
+
+use super::ops::{self, CMP_N};
+use super::{Loc, Schedule};
+use crate::pe::{NUM_REGS, REG_BITS};
+
+/// A node of the adder tree.
+#[derive(Debug, Clone)]
+pub struct TreeNode {
+    /// Leaf: the product indices it sums (1..=3). Internal: empty.
+    pub products: Vec<usize>,
+    /// Children (internal nodes only).
+    pub children: Option<(usize, usize)>,
+    /// Output width in bits.
+    pub width: usize,
+    /// Tree level (leaves = 0). A promoted odd node keeps its level.
+    pub level: usize,
+}
+
+/// The decomposition of an `n`-input popcount into bounded-fanin adds.
+#[derive(Debug, Clone)]
+pub struct AdderTree {
+    pub nodes: Vec<TreeNode>,
+    pub root: usize,
+    /// Number of 1-bit inputs (products).
+    pub n: usize,
+}
+
+impl AdderTree {
+    /// Build the balanced decomposition for `n ≥ 1` product bits: `⌈n/3⌉`
+    /// leaves, then pairwise combination per level (an odd node is promoted
+    /// unchanged, so ragged sizes are handled exactly).
+    pub fn build(n: usize) -> Self {
+        assert!(n >= 1, "adder tree needs at least one input");
+        let mut nodes = Vec::new();
+        // Leaves: chunks of 3 product bits (1 full-adder cycle each).
+        let mut leaves: Vec<usize> = Vec::new();
+        let mut next_product = 0usize;
+        while next_product < n {
+            let take = (n - next_product).min(3);
+            let products: Vec<usize> = (next_product..next_product + take).collect();
+            next_product += take;
+            nodes.push(TreeNode {
+                width: if take == 1 { 1 } else { 2 },
+                products,
+                children: None,
+                level: 0,
+            });
+            leaves.push(nodes.len() - 1);
+        }
+        // Recursive left-complete split: the left child covers the largest
+        // power-of-two prefix. Unlike pairwise-with-promotion, this keeps
+        // every intermediate result short-lived (it is consumed as soon as
+        // its sibling completes), which is what lets the RPO schedule fit
+        // the 4 × 16-bit register file even for ragged leaf counts.
+        fn combine(nodes: &mut Vec<TreeNode>, leaves: &[usize]) -> usize {
+            if leaves.len() == 1 {
+                return leaves[0];
+            }
+            let mut split = 1usize;
+            while split * 2 < leaves.len() {
+                split *= 2;
+            }
+            let l = combine(nodes, &leaves[..split]);
+            let r = combine(nodes, &leaves[split..]);
+            let width = nodes[l].width.max(nodes[r].width) + 1;
+            let level = nodes[l].level.max(nodes[r].level) + 1;
+            nodes.push(TreeNode { products: Vec::new(), children: Some((l, r)), width, level });
+            nodes.len() - 1
+        }
+        let root = combine(&mut nodes, &leaves);
+        AdderTree { nodes, root, n }
+    }
+
+    /// Cycle count of the RPO schedule for the summation (leaves: 1 cycle;
+    /// internal node: `max(w_l, w_r)` cycles). This is the closed form the
+    /// analytic performance model uses; `sim` asserts it equals bit-true
+    /// execution.
+    pub fn sum_cycles(&self) -> u64 {
+        self.nodes
+            .iter()
+            .map(|nd| match nd.children {
+                None => 1,
+                Some((l, r)) => self.nodes[l].width.max(self.nodes[r].width) as u64,
+            })
+            .sum()
+    }
+
+    /// Width of the root partial sum in bits.
+    pub fn root_width(&self) -> usize {
+        self.nodes[self.root].width
+    }
+
+    /// Number of tree levels (`⌊log2⌋` of the leaf count, §III-B).
+    pub fn levels(&self) -> usize {
+        self.nodes[self.root].level
+    }
+}
+
+/// Best-fit contiguous allocator over the 4 × 16-bit local registers.
+#[derive(Debug, Clone)]
+pub struct RegAlloc {
+    /// Bit `i` of `used[r]` set ⇒ R(r+1)[i] is live.
+    used: [u16; NUM_REGS],
+    /// High-water mark of live bits (storage-analysis instrumentation).
+    peak_bits: usize,
+    live_bits: usize,
+}
+
+impl Default for RegAlloc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RegAlloc {
+    pub fn new() -> Self {
+        RegAlloc { used: [0; NUM_REGS], peak_bits: 0, live_bits: 0 }
+    }
+
+    /// Allocate a contiguous `width`-bit field in any register not listed
+    /// in `exclude`. Policy: **first-fit at the lowest address** of the
+    /// least-loaded admissible register. Low-address packing keeps the free
+    /// space of each register contiguous at the top, which is what lets the
+    /// 1023-input Fig. 2(b) schedule fit the 4 × 16-bit file (best-fit
+    /// fragments the file and fails around N ≈ 700).
+    pub fn alloc(&mut self, width: usize, exclude: &[usize]) -> Option<(usize, usize)> {
+        assert!(width >= 1 && width <= REG_BITS);
+        let mut best: Option<(usize, usize, u32)> = None; // (reg, lsb, load)
+        for reg in 0..NUM_REGS {
+            if exclude.contains(&reg) {
+                continue;
+            }
+            let load = self.used[reg].count_ones();
+            let mut bit = 0;
+            while bit < REG_BITS {
+                if self.used[reg] >> bit & 1 != 0 {
+                    bit += 1;
+                    continue;
+                }
+                let start = bit;
+                while bit < REG_BITS && self.used[reg] >> bit & 1 == 0 {
+                    bit += 1;
+                }
+                let hole = bit - start;
+                if hole >= width {
+                    let better = match best {
+                        None => true,
+                        Some((_, blsb, bload)) => (load, start) < (bload, blsb),
+                    };
+                    if better {
+                        best = Some((reg, start, load));
+                    }
+                    break; // first fit within this register
+                }
+            }
+        }
+        let (reg, lsb, _) = best?;
+        let mask = (((1u32 << width) - 1) << lsb) as u16;
+        self.used[reg] |= mask;
+        self.live_bits += width;
+        self.peak_bits = self.peak_bits.max(self.live_bits);
+        Some((reg, lsb))
+    }
+
+    /// Allocate `width` contiguous bits in a *specific* register (first fit
+    /// at the lowest address), or `None` if it has no adequate hole.
+    pub fn alloc_in(&mut self, reg: usize, width: usize) -> Option<(usize, usize)> {
+        assert!(width >= 1 && width <= REG_BITS && reg < NUM_REGS);
+        let mut bit = 0;
+        while bit < REG_BITS {
+            if self.used[reg] >> bit & 1 != 0 {
+                bit += 1;
+                continue;
+            }
+            let start = bit;
+            while bit < REG_BITS && self.used[reg] >> bit & 1 == 0 {
+                bit += 1;
+            }
+            if bit - start >= width {
+                let mask = (((1u32 << width) - 1) << start) as u16;
+                self.used[reg] |= mask;
+                self.live_bits += width;
+                self.peak_bits = self.peak_bits.max(self.live_bits);
+                return Some((reg, start));
+            }
+        }
+        None
+    }
+
+    /// Re-mark a specific field as live (backtracking undo).
+    pub fn mark(&mut self, reg: usize, lsb: usize, width: usize) {
+        let mask = (((1u32 << width) - 1) << lsb) as u16;
+        debug_assert_eq!(self.used[reg] & mask, 0, "mark over live bits");
+        self.used[reg] |= mask;
+        self.live_bits += width;
+        self.peak_bits = self.peak_bits.max(self.live_bits);
+    }
+
+    /// Release a field.
+    pub fn free(&mut self, reg: usize, lsb: usize, width: usize) {
+        let mask = (((1u32 << width) - 1) << lsb) as u16;
+        debug_assert_eq!(self.used[reg] & mask, mask, "double free");
+        self.used[reg] &= !mask;
+        self.live_bits -= width;
+    }
+
+    pub fn free_loc(&mut self, loc: Loc) {
+        if let Loc::Reg { reg, lsb, width } = loc {
+            self.free(reg, lsb, width);
+        }
+    }
+
+    /// Peak simultaneously-live bits observed.
+    pub fn peak_bits(&self) -> usize {
+        self.peak_bits
+    }
+
+    pub fn live_bits(&self) -> usize {
+        self.live_bits
+    }
+}
+
+/// A fully scheduled threshold node: the Fig. 2(b) program for one BNN
+/// neuron of arbitrary fan-in.
+#[derive(Debug, Clone)]
+pub struct ThresholdNodeSchedule {
+    /// Complete control-word program (tree summation + final comparison).
+    pub schedule: Schedule,
+    /// Neuron whose latch holds `f = [S ≥ T']` after the last cycle.
+    pub out_neuron: usize,
+    /// Where the root partial sum `S` resides.
+    pub sum_loc: Loc,
+    /// Cycles spent in the adder tree.
+    pub tree_cycles: u64,
+    /// Cycles spent in the final threshold comparison.
+    pub cmp_cycles: u64,
+    /// Peak local-register bits live during the schedule.
+    pub peak_storage_bits: usize,
+}
+
+impl ThresholdNodeSchedule {
+    pub fn total_cycles(&self) -> u64 {
+        self.schedule.cycles() as u64
+    }
+}
+
+/// Emit the RPO schedule computing the popcount of `n` product bits,
+/// leaving the sum in a register. Returns the schedule, the sum location
+/// and the allocator (for storage statistics).
+pub fn sum_tree(n: usize) -> (Schedule, Loc, RegAlloc) {
+    let tree = AdderTree::build(n);
+    let order = rpo_order(&tree);
+    let (placement, alloc) = plan_placements(&tree, &order)
+        .unwrap_or_else(|| panic!("register allocation infeasible for n={n}"));
+    let mut sched = Schedule::new();
+    for &(id, _) in &order {
+        let node = &tree.nodes[id];
+        let (reg, lsb) = placement[id];
+        match node.children {
+            None => sched.extend(ops::leaf(&node.products, reg, lsb)),
+            Some((l, r)) => {
+                let lloc = loc_of(&tree, &placement, l);
+                let rloc = loc_of(&tree, &placement, r);
+                sched.extend(ops::add(lloc, rloc, reg, lsb, ops::SUM_N, ops::CARRY_N));
+            }
+        }
+    }
+    let root_loc = loc_of(&tree, &placement, tree.root);
+    (sched, root_loc, alloc)
+}
+
+fn loc_of(tree: &AdderTree, placement: &[(usize, usize)], id: usize) -> Loc {
+    let (reg, lsb) = placement[id];
+    Loc::Reg { reg, lsb, width: tree.nodes[id].width }
+}
+
+/// Reverse post-order (left, right, node) with each node's sibling id.
+fn rpo_order(tree: &AdderTree) -> Vec<(usize, Option<usize>)> {
+    let mut order = Vec::with_capacity(tree.nodes.len());
+    fn walk(
+        tree: &AdderTree,
+        id: usize,
+        sibling: Option<usize>,
+        order: &mut Vec<(usize, Option<usize>)>,
+    ) {
+        if let Some((l, r)) = tree.nodes[id].children {
+            walk(tree, l, Some(r), order);
+            walk(tree, r, Some(l), order);
+        }
+        order.push((id, sibling));
+    }
+    walk(tree, tree.root, None, &mut order);
+    order
+}
+
+/// Register placement for every tree node by backtracking search over the
+/// RPO completion order.
+///
+/// Hardware rules (one read port per register, Fig. 4b discipline):
+/// * a node's destination register differs from both operand registers;
+/// * sibling results live in different registers (the parent reads both in
+///   the same cycle);
+/// * fields are contiguous within one 16-bit register.
+///
+/// Candidates are tried colored-register-first (children of register `r` →
+/// `(r+1)`, `(r+2)` mod 4 — the assignment that satisfies the port rules by
+/// construction), so the search almost never backtracks; the backtracking
+/// is the completeness net for deep ragged trees. The plan is computed once
+/// per distinct fan-in and cached by the sequence generator (§IV-E).
+fn plan_placements(
+    tree: &AdderTree,
+    order: &[(usize, Option<usize>)],
+) -> Option<(Vec<(usize, usize)>, RegAlloc)> {
+    // Deterministic color per node: root 0; children of color c → c+1, c+2.
+    let mut color = vec![0usize; tree.nodes.len()];
+    fn colorize(tree: &AdderTree, id: usize, c: usize, color: &mut [usize]) {
+        color[id] = c;
+        if let Some((l, r)) = tree.nodes[id].children {
+            colorize(tree, l, (c + 1) % NUM_REGS, color);
+            colorize(tree, r, (c + 2) % NUM_REGS, color);
+        }
+    }
+    colorize(tree, tree.root, 0, &mut color);
+
+    let mut placement: Vec<Option<(usize, usize)>> = vec![None; tree.nodes.len()];
+    let mut alloc = RegAlloc::new();
+    let mut steps = 0usize;
+    const STEP_CAP: usize = 2_000_000;
+
+    fn rec(
+        tree: &AdderTree,
+        order: &[(usize, Option<usize>)],
+        i: usize,
+        color: &[usize],
+        placement: &mut Vec<Option<(usize, usize)>>,
+        alloc: &mut RegAlloc,
+        steps: &mut usize,
+    ) -> bool {
+        if i == order.len() {
+            return true;
+        }
+        let (id, sibling) = order[i];
+        let node = &tree.nodes[id];
+        let mut excl: Vec<usize> = Vec::with_capacity(3);
+        if let Some((l, r)) = node.children {
+            excl.push(placement[l].unwrap().0);
+            excl.push(placement[r].unwrap().0);
+        }
+        if let Some(s) = sibling {
+            if let Some((sreg, _)) = placement[s] {
+                excl.push(sreg);
+            }
+        }
+        // Candidate registers: preferred color first, then the rest.
+        let pref = color[id];
+        let mut cands = [pref, 0, 1, 2, 3];
+        let mut len = 1;
+        for r in 0..NUM_REGS {
+            if r != pref {
+                cands[len] = r;
+                len += 1;
+            }
+        }
+        for &reg in &cands[..len] {
+            if excl.contains(&reg) {
+                continue;
+            }
+            *steps += 1;
+            if *steps > STEP_CAP {
+                return false;
+            }
+            let Some((_, lsb)) = alloc.alloc_in(reg, node.width) else { continue };
+            placement[id] = Some((reg, lsb));
+            // The operands die once the destination is written.
+            if let Some((l, r)) = node.children {
+                let (lr, ll) = placement[l].unwrap();
+                let (rr, rl) = placement[r].unwrap();
+                alloc.free(lr, ll, tree.nodes[l].width);
+                alloc.free(rr, rl, tree.nodes[r].width);
+                if rec(tree, order, i + 1, color, placement, alloc, steps) {
+                    return true;
+                }
+                // Undo child frees.
+                alloc.mark(lr, ll, tree.nodes[l].width);
+                alloc.mark(rr, rl, tree.nodes[r].width);
+            } else if rec(tree, order, i + 1, color, placement, alloc, steps) {
+                return true;
+            }
+            alloc.free(reg, lsb, node.width);
+            placement[id] = None;
+        }
+        false
+    }
+
+    if rec(tree, order, 0, &color, &mut placement, &mut alloc, &mut steps) {
+        Some((placement.into_iter().map(|p| p.unwrap()).collect(), alloc))
+    } else {
+        None
+    }
+}
+
+/// The complete program for a BNN node with `n` XNOR products and popcount
+/// threshold `t_popcount` (see `ThresholdFunction::popcount_threshold`):
+/// adder tree in RPO, then the sequential comparison `S ≥ T'` (Fig. 5a).
+pub fn threshold_node(n: usize, t_popcount: i64) -> ThresholdNodeSchedule {
+    let (mut sched, sum_loc, alloc) = sum_tree(n);
+    let tree_cycles = sched.cycles() as u64;
+    let cmp = ops::ge_const(sum_loc, t_popcount, CMP_N);
+    let cmp_cycles = cmp.cycles() as u64;
+    sched.extend(cmp);
+    ThresholdNodeSchedule {
+        schedule: sched,
+        out_neuron: CMP_N,
+        sum_loc,
+        tree_cycles,
+        cmp_cycles,
+        peak_storage_bits: alloc.peak_bits(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::TulipPe;
+
+    fn random_bits(n: usize, seed: u64) -> Vec<bool> {
+        // Small deterministic LCG; avoids pulling rand into unit tests.
+        let mut state = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                state >> 33 & 1 != 0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tree_shape_288() {
+        let t = AdderTree::build(288);
+        // 96 leaves, then 48+24+12+6+3 → (2 +) … pairwise with promotion.
+        let leaves = t.nodes.iter().filter(|n| n.children.is_none()).count();
+        assert_eq!(leaves, 96);
+        assert_eq!(t.root_width() >= 9, true, "must hold values up to 288");
+    }
+
+    /// The popcount computed through the full bit-true PE execution equals
+    /// `count_ones` for a spread of sizes, including ragged ones.
+    #[test]
+    fn sum_tree_equals_popcount() {
+        for &n in &[1usize, 2, 3, 4, 5, 7, 9, 17, 31, 48, 96, 100, 288] {
+            for seed in 0..3u64 {
+                let bits = random_bits(n, seed + 1);
+                let (sched, loc, _) = sum_tree(n);
+                assert!(sched.validate().is_ok(), "n={n}");
+                let mut pe = TulipPe::new();
+                sched.run_on(&mut pe, &bits);
+                let expect = bits.iter().filter(|&&b| b).count() as u32;
+                if let Loc::Reg { reg, lsb, width } = loc {
+                    assert_eq!(pe.regs().peek_field(reg, lsb, width), expect, "n={n} seed={seed}");
+                } else {
+                    panic!("sum not in register");
+                }
+            }
+        }
+    }
+
+    /// Full threshold node: f = [popcount ≥ T'] bit-true for many (n, T').
+    #[test]
+    fn threshold_node_bit_true() {
+        for &n in &[3usize, 9, 27, 100, 288] {
+            for &t in &[0i64, 1, (n / 2) as i64, n as i64, n as i64 + 5] {
+                let prog = threshold_node(n, t);
+                assert!(prog.schedule.validate().is_ok());
+                let bits = random_bits(n, n as u64 * 31 + t as u64 + 7);
+                let mut pe = TulipPe::new();
+                prog.schedule.run_on(&mut pe, &bits);
+                let pc = bits.iter().filter(|&&b| b).count() as i64;
+                assert_eq!(pe.neuron_out(prog.out_neuron), pc >= t, "n={n} t={t}");
+            }
+        }
+    }
+
+    /// Table II anchor: cycle count for the 288-input node (3×3 kernel,
+    /// 32 IFMs). The paper reports 441 under its microarchitecture; our
+    /// Fig.4-faithful schedule lands in the same regime (documented in
+    /// EXPERIMENTS.md §Table II) — assert the invariant bounds.
+    #[test]
+    fn cycles_288_in_expected_regime() {
+        let prog = threshold_node(288, 145);
+        let c = prog.total_cycles();
+        assert!(c >= 300 && c <= 600, "288-input node took {c} cycles");
+        assert_eq!(prog.tree_cycles, AdderTree::build(288).sum_cycles());
+    }
+
+    /// §III-B storage: peak live bits follow the O(log²N) law. The paper's
+    /// closed form `(⌊lg N⌋² + ⌊lg N⌋)/2 + 1` counts pending operands only;
+    /// our exact accounting adds the transient coexistence of a node's
+    /// destination with its operands (≤ root width), so the bound is the
+    /// paper's plus one destination field.
+    #[test]
+    fn storage_within_paper_bound() {
+        for &n in &[6usize, 12, 24, 48, 96, 192, 288, 384, 768, 1023] {
+            let (_, loc, alloc) = sum_tree(n);
+            let lg = (n as f64).log2().floor() as usize;
+            let bound = (lg * lg + lg) / 2 + 1 + loc.width();
+            assert!(
+                alloc.peak_bits() <= bound,
+                "n={n}: peak {} > bound {}",
+                alloc.peak_bits(),
+                bound
+            );
+            assert!(alloc.peak_bits() <= NUM_REGS * REG_BITS, "exceeds physical registers");
+        }
+    }
+
+    /// The Fig. 2(b) example: a 1023-input threshold function fits the
+    /// 4×16-bit local registers.
+    #[test]
+    fn fig2_1023_inputs_fit() {
+        let prog = threshold_node(1023, 512);
+        assert!(prog.peak_storage_bits <= 64);
+        let bits = random_bits(1023, 99);
+        let mut pe = TulipPe::new();
+        prog.schedule.run_on(&mut pe, &bits);
+        let pc = bits.iter().filter(|&&b| b).count() as i64;
+        assert_eq!(pe.neuron_out(prog.out_neuron), pc >= 512);
+    }
+
+    #[test]
+    fn allocator_best_fit_and_free() {
+        let mut a = RegAlloc::new();
+        let (r0, l0) = a.alloc(16, &[]).unwrap();
+        assert_eq!((r0, l0), (0, 0));
+        let (r1, _) = a.alloc(4, &[0]).unwrap();
+        assert_ne!(r1, 0);
+        a.free(r1, 0, 4);
+        assert_eq!(a.live_bits(), 16);
+        // exclusion of all regs → None
+        assert!(a.alloc(1, &[0, 1, 2, 3]).is_none());
+        // width larger than any hole → None
+        let mut b = RegAlloc::new();
+        for r in 0..NUM_REGS {
+            b.alloc(16, &(0..r).collect::<Vec<_>>()).unwrap();
+        }
+        assert!(b.alloc(1, &[]).is_none());
+    }
+
+    #[test]
+    fn sum_cycles_matches_bit_true_execution() {
+        for &n in &[5usize, 48, 288] {
+            let (sched, _, _) = sum_tree(n);
+            assert_eq!(sched.cycles() as u64, AdderTree::build(n).sum_cycles(), "n={n}");
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Carry-lookahead extension — the paper's footnote 3 (§III):
+//!
+//! > "This can be changed to implement a two-bit or three-bit
+//! > carry-lookahead addition. Doing so would simply require a binary
+//! > neuron with a different set of weights, and could increase the
+//! > throughput at the expense of a small increase in area and power. We
+//! > plan to address this in future work."
+//!
+//! The enabling identity: the carry out of a `g`-bit group is itself a
+//! threshold function of the group's operand bits and the incoming carry —
+//! for `g = 2`, `c_out = [2·x1 + 2·y1 + x0 + y0 + c_in ≥ 4]` (weights
+//! `[2,2,1,1,1; 4]`), because the weighted sum *is* `x + y + c_in` of the
+//! 2-bit group. Generally a `g`-bit group needs weights
+//! `[2^{g-1}, 2^{g-1}, …, 1, 1, 1]` and threshold `2^g` — a wider
+//! LIN/RIN differential network, hence the paper's "small increase in area
+//! and power".
+//!
+//! We model the extension **analytically** (the evaluated silicon uses the
+//! 1-bit cell; this module is the ablation for the design choice DESIGN.md
+//! calls out): a `w`-bit ripple addition drops from `w` to `⌈w/g⌉` cycles,
+//! leaf cycles are unchanged, and the cell energy/area scale by the fitted
+//! per-group factors below.
+
+use super::adder_tree::AdderTree;
+
+/// Adder scheme for the TULIP-PE datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdderScheme {
+    /// The evaluated design: full-adder cascade, 1 bit/cycle.
+    RippleFa,
+    /// Two-bit carry-lookahead cells (`[2,2,1,1,1; T]`).
+    Cla2,
+    /// Three-bit carry-lookahead cells (`[4,4,2,2,1,1,1; T]`).
+    Cla3,
+}
+
+impl AdderScheme {
+    /// Bits retired per addition cycle.
+    pub fn group_bits(self) -> usize {
+        match self {
+            AdderScheme::RippleFa => 1,
+            AdderScheme::Cla2 => 2,
+            AdderScheme::Cla3 => 3,
+        }
+    }
+
+    /// Cell-area factor vs the `[2,1,1,1]` cell. The mixed-signal cell's
+    /// area is dominated by the LIN/RIN input networks, which grow with
+    /// the total input weight (5 → 7 → 15): fitted linearly in Σw.
+    pub fn cell_area_factor(self) -> f64 {
+        match self {
+            AdderScheme::RippleFa => 1.0,
+            AdderScheme::Cla2 => 1.0 + (7.0 - 5.0) / 5.0 * 0.8,   // ≈ 1.32
+            AdderScheme::Cla3 => 1.0 + (15.0 - 5.0) / 5.0 * 0.8,  // ≈ 2.6
+        }
+    }
+
+    /// Per-evaluation energy factor (same Σw argument; dynamic energy of
+    /// the differential networks scales with the switched weight).
+    pub fn cell_energy_factor(self) -> f64 {
+        match self {
+            AdderScheme::RippleFa => 1.0,
+            AdderScheme::Cla2 => 1.35,
+            AdderScheme::Cla3 => 2.1,
+        }
+    }
+
+    pub const ALL: [AdderScheme; 3] = [AdderScheme::RippleFa, AdderScheme::Cla2, AdderScheme::Cla3];
+}
+
+impl std::fmt::Display for AdderScheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdderScheme::RippleFa => write!(f, "ripple-FA"),
+            AdderScheme::Cla2 => write!(f, "CLA-2"),
+            AdderScheme::Cla3 => write!(f, "CLA-3"),
+        }
+    }
+}
+
+/// Adder-tree summation cycles under a scheme: leaves stay 1 cycle (one
+/// full-adder evaluation already retires a 3-input group); each internal
+/// `max(w_l, w_r)`-bit addition retires `g` bits/cycle.
+pub fn tree_cycles(n: usize, scheme: AdderScheme) -> u64 {
+    let tree = AdderTree::build(n);
+    let g = scheme.group_bits() as u64;
+    tree.nodes
+        .iter()
+        .map(|nd| match nd.children {
+            None => 1,
+            Some((l, r)) => {
+                let w = tree.nodes[l].width.max(tree.nodes[r].width) as u64;
+                w.div_ceil(g)
+            }
+        })
+        .sum()
+}
+
+/// Full threshold-node cycles (tree + comparison; the sequential
+/// comparator also retires `g` bits/cycle with lookahead cells).
+pub fn node_cycles(n: usize, scheme: AdderScheme) -> u64 {
+    let root_w = AdderTree::build(n).root_width() as u64;
+    tree_cycles(n, scheme) + root_w.div_ceil(scheme.group_bits() as u64)
+}
+
+/// Ablation row: cycles, PE-energy factor and PE-area factor for one node.
+#[derive(Debug, Clone, Copy)]
+pub struct ClaAblation {
+    pub scheme: AdderScheme,
+    pub node_cycles: u64,
+    pub speedup_vs_fa: f64,
+    pub area_factor: f64,
+    /// Energy per node relative to ripple-FA: fewer cycles × costlier
+    /// evaluations.
+    pub energy_factor: f64,
+}
+
+/// Compute the ablation for an `n`-input node.
+pub fn ablation(n: usize) -> Vec<ClaAblation> {
+    let base = node_cycles(n, AdderScheme::RippleFa) as f64;
+    AdderScheme::ALL
+        .iter()
+        .map(|&s| {
+            let c = node_cycles(n, s);
+            ClaAblation {
+                scheme: s,
+                node_cycles: c,
+                speedup_vs_fa: base / c as f64,
+                area_factor: s.cell_area_factor(),
+                energy_factor: (c as f64 / base) * s.cell_energy_factor(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::adder_tree::threshold_node;
+
+    /// Ripple-FA cycles from this module equal the real generated schedule
+    /// (the analytic formula and the control-word emitter agree).
+    #[test]
+    fn ripple_matches_generated_schedule() {
+        for &n in &[9usize, 48, 288, 1023] {
+            let sched = threshold_node(n, (n / 2) as i64);
+            assert_eq!(
+                node_cycles(n, AdderScheme::RippleFa),
+                sched.total_cycles(),
+                "n={n}"
+            );
+        }
+    }
+
+    /// CLA-2 roughly halves addition cycles; CLA-3 roughly thirds them
+    /// (leaves bound the gain from above).
+    #[test]
+    fn lookahead_speedups_bounded() {
+        for &n in &[288usize, 1023] {
+            let rows = ablation(n);
+            assert!(rows[1].speedup_vs_fa > 1.4 && rows[1].speedup_vs_fa < 2.0, "{:?}", rows[1]);
+            assert!(rows[2].speedup_vs_fa > 1.7 && rows[2].speedup_vs_fa < 3.0, "{:?}", rows[2]);
+            // Monotone: more lookahead, fewer cycles.
+            assert!(rows[0].node_cycles > rows[1].node_cycles);
+            assert!(rows[1].node_cycles > rows[2].node_cycles);
+        }
+    }
+
+    /// The paper's framing: "increase the throughput at the expense of a
+    /// small increase in area and power" — energy per node must not
+    /// balloon (CLA-2 stays within ~±10% of FA energy in this model).
+    #[test]
+    fn cla2_energy_near_parity() {
+        let rows = ablation(288);
+        assert!(rows[1].energy_factor < 1.1, "{:?}", rows[1]);
+        assert!(rows[1].area_factor < 1.5);
+    }
+
+    /// The 2-bit group carry identity the whole extension rests on:
+    /// c_out = [2x1 + 2y1 + x0 + y0 + cin >= 4], exhaustively.
+    #[test]
+    fn group_carry_is_threshold_function() {
+        for m in 0u32..32 {
+            let (x0, y0, x1, y1, cin) =
+                (m & 1 != 0, m & 2 != 0, m & 4 != 0, m & 8 != 0, m & 16 != 0);
+            let x = (x1 as u32) * 2 + x0 as u32;
+            let y = (y1 as u32) * 2 + y0 as u32;
+            let carry_out = x + y + cin as u32 >= 4;
+            let weighted =
+                2 * x1 as u32 + 2 * y1 as u32 + x0 as u32 + y0 as u32 + cin as u32;
+            assert_eq!(carry_out, weighted >= 4, "m={m:05b}");
+        }
+    }
+}

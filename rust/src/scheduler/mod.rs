@@ -1,0 +1,219 @@
+//! Scheduling — decomposing BNN operations onto a TULIP-PE.
+//!
+//! §III–IV of the paper: a threshold function with large fan-in is
+//! decomposed into a balanced **adder tree** of bounded-fanin nodes, the
+//! tree is walked in **reverse post-order (RPO)** to minimize intermediate
+//! storage, and every node — additions, the accumulator, the sequential
+//! comparator, batch-norm, maxpool and ReLU — is a short sequence of
+//! control words for the same four-neuron PE.
+//!
+//! * [`ops`] — builders for every primitive schedule (Fig. 4/5).
+//! * [`adder_tree`] — tree construction, RPO walk, register allocation, and
+//!   the complete threshold-node schedule (Fig. 2b).
+//! * [`storage`] — the closed-form storage analysis of §III-B.
+//! * [`seqgen`] — the reconfigurable sequence generator (schedule cache).
+
+pub mod adder_tree;
+pub mod cla;
+pub mod ops;
+pub mod seqgen;
+pub mod storage;
+
+use crate::pe::{ControlWord, TulipPe};
+
+/// What an external input channel must carry on a given cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExtSpec {
+    /// Bit `i` of the caller's product / operand vector.
+    Product(usize),
+    /// A literal bit (constant operands, padding).
+    Lit(bool),
+}
+
+/// A complete PE schedule: the control-word stream plus a per-cycle map of
+/// what each external channel consumes. Produced by the builders in this
+/// module; executed bit-true by [`TulipPe::step`] and priced analytically by
+/// `sim::perf` — both from the *same* object.
+#[derive(Debug, Clone, Default)]
+pub struct Schedule {
+    /// One control word per cycle.
+    pub words: Vec<ControlWord>,
+    /// `ext_map[cycle][channel]` — demand on external channels. Shorter
+    /// rows mean the remaining channels are unused that cycle.
+    pub ext_map: Vec<Vec<ExtSpec>>,
+}
+
+impl Schedule {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of cycles.
+    pub fn cycles(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Append one word with its external demand.
+    pub fn push(&mut self, word: ControlWord, ext: Vec<ExtSpec>) {
+        self.words.push(word);
+        self.ext_map.push(ext);
+    }
+
+    /// Concatenate another schedule.
+    pub fn extend(&mut self, other: Schedule) {
+        self.words.extend(other.words);
+        self.ext_map.extend(other.ext_map);
+    }
+
+    /// Remap every [`ExtSpec::Product`] index through `f` (used when a node
+    /// schedule built for local product indices is embedded into a layer-
+    /// global product vector).
+    pub fn remap_products(&mut self, f: impl Fn(usize) -> usize) {
+        for row in &mut self.ext_map {
+            for e in row {
+                if let ExtSpec::Product(i) = e {
+                    *i = f(*i);
+                }
+            }
+        }
+    }
+
+    /// Validate every control word against the hardware constraints.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        for (i, w) in self.words.iter().enumerate() {
+            w.validate().map_err(|e| format!("cycle {i}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Execute bit-true on a PE, materializing external inputs from a
+    /// product/operand bit vector.
+    ///
+    /// Hot path (§Perf): external-channel rows are bounded by the PE's
+    /// physical input fan-out, so they materialize into a stack buffer —
+    /// this loop performs no heap allocation.
+    pub fn run_on(&self, pe: &mut TulipPe, products: &[bool]) {
+        const MAX_EXT: usize = 8;
+        let mut ext_buf = [false; MAX_EXT];
+        for (word, row) in self.words.iter().zip(&self.ext_map) {
+            debug_assert!(row.len() <= MAX_EXT, "ext row wider than physical channels");
+            for (slot, e) in ext_buf.iter_mut().zip(row) {
+                *slot = match *e {
+                    ExtSpec::Product(i) => {
+                        assert!(i < products.len(), "product index {i} out of range");
+                        products[i]
+                    }
+                    ExtSpec::Lit(b) => b,
+                };
+            }
+            pe.step(word, &ext_buf[..row.len()]);
+        }
+    }
+
+    /// Highest product index demanded (+1), i.e. the product-vector length
+    /// this schedule expects.
+    pub fn product_arity(&self) -> usize {
+        self.ext_map
+            .iter()
+            .flatten()
+            .filter_map(|e| match e {
+                ExtSpec::Product(i) => Some(i + 1),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total non-gated neuron evaluations (analytic energy, no execution).
+    pub fn neuron_evals(&self) -> u64 {
+        self.words.iter().map(|w| w.active_neurons() as u64).sum()
+    }
+
+    /// Total register bit accesses (reads via srcs/buses + writes).
+    pub fn reg_accesses(&self) -> (u64, u64) {
+        let mut reads = 0u64;
+        let mut writes = 0u64;
+        for w in &self.words {
+            for bus in [w.bus_b, w.bus_c] {
+                if bus.reads_reg().is_some() {
+                    reads += 1;
+                }
+            }
+            for n in &w.neurons {
+                if n.gated {
+                    continue;
+                }
+                for s in [n.a, n.d] {
+                    if s.reads_reg().is_some() {
+                        reads += 1;
+                    }
+                }
+            }
+            writes += w.writes.len() as u64;
+        }
+        (reads, writes)
+    }
+}
+
+/// Where a multi-bit operand lives, for the schedule builders.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Loc {
+    /// `width` bits in register `reg` starting at `lsb` (little-endian).
+    Reg { reg: usize, lsb: usize, width: usize },
+    /// A compile-time constant (e.g. the threshold in a comparison).
+    Const { value: u32, width: usize },
+    /// Streamed from external channels: bit `i` arrives on channel
+    /// `channel` at the cycle that consumes it, as product index
+    /// `base + i`.
+    Stream { channel: usize, base: usize, width: usize },
+}
+
+impl Loc {
+    pub fn width(&self) -> usize {
+        match *self {
+            Loc::Reg { width, .. } | Loc::Const { width, .. } | Loc::Stream { width, .. } => width,
+        }
+    }
+
+    /// Register id if register-resident.
+    pub fn reg(&self) -> Option<usize> {
+        match *self {
+            Loc::Reg { reg, .. } => Some(reg),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::TulipPe;
+
+    #[test]
+    fn empty_schedule_noops() {
+        let s = Schedule::new();
+        assert_eq!(s.cycles(), 0);
+        assert!(s.validate().is_ok());
+        let mut pe = TulipPe::new();
+        s.run_on(&mut pe, &[]);
+        assert_eq!(pe.stats().cycles, 0);
+    }
+
+    #[test]
+    fn product_arity_tracks_max_index() {
+        let mut s = Schedule::new();
+        s.push(ControlWord::idle(), vec![ExtSpec::Product(4), ExtSpec::Lit(true)]);
+        s.push(ControlWord::idle(), vec![ExtSpec::Product(7)]);
+        assert_eq!(s.product_arity(), 8);
+        s.remap_products(|i| i + 10);
+        assert_eq!(s.product_arity(), 18);
+    }
+
+    #[test]
+    fn loc_accessors() {
+        let l = Loc::Reg { reg: 2, lsb: 3, width: 5 };
+        assert_eq!(l.width(), 5);
+        assert_eq!(l.reg(), Some(2));
+        assert_eq!(Loc::Const { value: 3, width: 2 }.reg(), None);
+    }
+}

@@ -1,0 +1,544 @@
+//! Primitive TULIP-PE schedules (Fig. 4 and Fig. 5 of the paper).
+//!
+//! Every BNN operation — addition, accumulation, comparison (and with it
+//! batch normalization), max-pooling and ReLU — is generated here as a
+//! sequence of control words for the *same* `[2,1,1,1;T]` cell, which is
+//! the paper's central claim ("exactly one such cell is needed to implement
+//! all necessary primitive functions in a BNN").
+//!
+//! Cycle-count contracts (used verbatim by the analytic performance model —
+//! `sim::perf` asserts they match bit-true execution):
+//!
+//! | op                        | cycles                    |
+//! |---------------------------|---------------------------|
+//! | 3-input leaf add          | 1                         |
+//! | `w`-bit + `w`-bit add     | `w` (result `w+1` bits)   |
+//! | accumulate step           | `max(w_acc, w_x)`         |
+//! | `w`-bit compare           | `w`                       |
+//! | `n`-input maxpool (OR)    | `1 + ⌈max(0,n−4)/3⌉`      |
+//! | `w`-bit ReLU              | `2w`                      |
+
+use super::{ExtSpec, Loc, Schedule};
+use crate::pe::{ControlWord, NeuronCtl, RegWrite, Src, WSrc};
+
+/// Default neuron roles, matching Fig. 4(a): N2 computes sums, N3 carries.
+pub const SUM_N: usize = 1;
+/// See [`SUM_N`].
+pub const CARRY_N: usize = 2;
+/// Comparator verdict neuron (Fig. 5a uses a single 3-input function).
+pub const CMP_N: usize = 0;
+/// AND neuron for ReLU's final masking step.
+pub const AND_N: usize = 3;
+
+/// Place `spec` on external channel `ch` of a row, padding gaps.
+fn set_ext(row: &mut Vec<ExtSpec>, ch: usize, spec: ExtSpec) {
+    while row.len() <= ch {
+        row.push(ExtSpec::Lit(false));
+    }
+    row[ch] = spec;
+}
+
+/// The bus source for bit `i` of an operand, plus its external demand.
+fn bit_src(loc: &Loc, i: usize, row: &mut Vec<ExtSpec>) -> Src {
+    if i >= loc.width() {
+        return Src::Zero;
+    }
+    match *loc {
+        Loc::Reg { reg, lsb, .. } => Src::Reg { reg, bit: lsb + i },
+        Loc::Const { value, .. } => {
+            if value >> i & 1 != 0 {
+                Src::One
+            } else {
+                Src::Zero
+            }
+        }
+        Loc::Stream { channel, base, .. } => {
+            set_ext(row, channel, ExtSpec::Product(base + i));
+            Src::Ext(channel)
+        }
+    }
+}
+
+/// Bit-serial ripple addition (Fig. 4a): `dst[0..w] = x + y`, `w = max
+/// widths`, result is `w+1` bits at `(dst_reg, dst_lsb)`.
+///
+/// Per cycle `i`: the shared buses carry `x_i`/`y_i`; the carry neuron
+/// (phase 0) computes `c_i = maj(x_i, y_i, c_{i−1})` through its own output
+/// latch; the sum neuron (phase 1) computes
+/// `s_i = [2·¬c_i + x_i + y_i + c_{i−1} ≥ 3]` via the neuron cascade. The
+/// final cycle writes both `s_{w−1}` and the carry-out.
+pub fn add(x: Loc, y: Loc, dst_reg: usize, dst_lsb: usize, sum_n: usize, carry_n: usize) -> Schedule {
+    assert_ne!(sum_n, carry_n, "sum and carry need distinct neurons");
+    if let (Some(rx), Some(ry)) = (x.reg(), y.reg()) {
+        assert_ne!(rx, ry, "operands must live in distinct registers (one read port each)");
+    }
+    for src in [&x, &y] {
+        if let Some(r) = src.reg() {
+            // dst may share a register with a source only on disjoint bits;
+            // the tree allocator never does this, but enforce safety here.
+            if r == dst_reg {
+                if let Loc::Reg { lsb, width, .. } = *src {
+                    let w = x.width().max(y.width());
+                    assert!(
+                        dst_lsb + w + 1 <= lsb || lsb + width <= dst_lsb,
+                        "destination overlaps a source field"
+                    );
+                }
+            }
+        }
+    }
+    let w = x.width().max(y.width());
+    assert!(w > 0);
+    let mut sched = Schedule::new();
+    for i in 0..w {
+        let mut row = Vec::new();
+        let bx = bit_src(&x, i, &mut row);
+        let by = bit_src(&y, i, &mut row);
+        let cin = if i == 0 { Src::Zero } else { Src::N(carry_n) };
+        let mut cw = ControlWord::idle();
+        cw.bus_b = bx;
+        cw.bus_c = by;
+        cw.neurons[carry_n] = NeuronCtl {
+            gated: false,
+            phase: 0,
+            a: Src::Zero,
+            b_en: true,
+            b_inv: false,
+            c_en: true,
+            c_inv: false,
+            d: cin,
+            threshold: 2,
+        };
+        cw.neurons[sum_n] = NeuronCtl {
+            gated: false,
+            phase: 1,
+            a: Src::NFreshInv(carry_n),
+            b_en: true,
+            b_inv: false,
+            c_en: true,
+            c_inv: false,
+            d: cin,
+            threshold: 3,
+        };
+        cw.writes.push(RegWrite { reg: dst_reg, bit: dst_lsb + i, src: WSrc::N(sum_n) });
+        if i == w - 1 {
+            cw.writes.push(RegWrite { reg: dst_reg, bit: dst_lsb + w, src: WSrc::N(carry_n) });
+        }
+        sched.push(cw.with_note(format!("add bit {i}")), row);
+    }
+    sched
+}
+
+/// Leaf node of the adder tree: sum of up to three 1-bit products in a
+/// single cycle (the top inset of Fig. 2b — one full-adder evaluation).
+/// Result is 2 bits (or 1 bit for a single product) at `(dst_reg, dst_lsb)`.
+pub fn leaf(products: &[usize], dst_reg: usize, dst_lsb: usize) -> Schedule {
+    assert!((1..=3).contains(&products.len()));
+    let mut sched = Schedule::new();
+    let mut row = Vec::new();
+    for (ch, &p) in products.iter().enumerate() {
+        set_ext(&mut row, ch, ExtSpec::Product(p));
+    }
+    let mut cw = ControlWord::idle();
+    if products.len() == 1 {
+        // Pass-through: one product bit straight into the register.
+        cw.writes.push(RegWrite { reg: dst_reg, bit: dst_lsb, src: WSrc::Ext(0) });
+        sched.push(cw.with_note("leaf copy"), row);
+        return sched;
+    }
+    cw.bus_b = Src::Ext(0);
+    cw.bus_c = Src::Ext(1);
+    let third = if products.len() == 3 { Src::Ext(2) } else { Src::Zero };
+    cw.neurons[CARRY_N] = NeuronCtl {
+        gated: false,
+        phase: 0,
+        a: Src::Zero,
+        b_en: true,
+        b_inv: false,
+        c_en: true,
+        c_inv: false,
+        d: third,
+        threshold: 2,
+    };
+    cw.neurons[SUM_N] = NeuronCtl {
+        gated: false,
+        phase: 1,
+        a: Src::NFreshInv(CARRY_N),
+        b_en: true,
+        b_inv: false,
+        c_en: true,
+        c_inv: false,
+        d: third,
+        threshold: 3,
+    };
+    cw.writes.push(RegWrite { reg: dst_reg, bit: dst_lsb, src: WSrc::N(SUM_N) });
+    cw.writes.push(RegWrite { reg: dst_reg, bit: dst_lsb + 1, src: WSrc::N(CARRY_N) });
+    sched.push(cw.with_note(format!("leaf of {}", products.len())), row);
+    sched
+}
+
+/// Accumulation step (Fig. 4c): `dst = acc + x`. Identical datapath to
+/// [`add`]; the Fig. 4(c) alternation of the accumulator between R2 and R4
+/// is a register-allocation policy, applied by the caller (see
+/// `coordinator`). The result is `max(w_acc, w_x) + 1` bits.
+pub fn accumulate(acc: Loc, x: Loc, dst_reg: usize, dst_lsb: usize) -> Schedule {
+    add(acc, x, dst_reg, dst_lsb, SUM_N, CARRY_N)
+}
+
+/// Sequential comparator (Fig. 5a): after `w` cycles the verdict neuron
+/// holds `x > y`. Bits stream LSB→MSB; per cycle
+/// `out_i = [x_i + ¬y_i + out_{i−1} ≥ 2]` — a 3-input threshold function
+/// ("the first implementation of a sequential comparator that uses 3-input
+/// neurons").
+pub fn compare_gt(x: Loc, y: Loc, out_n: usize) -> Schedule {
+    if let (Some(rx), Some(ry)) = (x.reg(), y.reg()) {
+        assert_ne!(rx, ry, "comparator operands share a register read port");
+    }
+    let w = x.width().max(y.width());
+    assert!(w > 0);
+    let mut sched = Schedule::new();
+    for i in 0..w {
+        let mut row = Vec::new();
+        let bx = bit_src(&x, i, &mut row);
+        let by = bit_src(&y, i, &mut row);
+        let mut cw = ControlWord::idle();
+        cw.bus_b = bx;
+        cw.bus_c = by;
+        cw.neurons[out_n] = NeuronCtl {
+            gated: false,
+            phase: 0,
+            a: Src::Zero,
+            b_en: true,
+            b_inv: false,
+            c_en: true,
+            c_inv: true, // ¬y_i
+            d: if i == 0 { Src::Zero } else { Src::N(out_n) },
+            threshold: 2,
+        };
+        sched.push(cw.with_note(format!("cmp bit {i}")), row);
+    }
+    sched
+}
+
+/// `x ≥ t` against a compile-time constant — the thresholding of Eq. 1 and
+/// the paper's batch normalization ("realized by subtracting the value of
+/// the bias from the threshold T", §IV-D). Degenerate thresholds collapse
+/// to a single constant-latch cycle.
+pub fn ge_const(x: Loc, t: i64, out_n: usize) -> Schedule {
+    let w = x.width();
+    let max_val = (1i64 << w) - 1;
+    let mut sched = Schedule::new();
+    if t <= 0 || t > max_val {
+        // Unconditionally true (T' ≤ 0) or false (T' > max representable).
+        let mut cw = ControlWord::idle();
+        cw.neurons[out_n] =
+            NeuronCtl { gated: false, threshold: if t <= 0 { 0 } else { 6 }, ..NeuronCtl::idle() };
+        sched.push(cw.with_note(format!("const {}", t <= 0)), Vec::new());
+        return sched;
+    }
+    // x ≥ t ⇔ x > t − 1.
+    sched.extend(compare_gt(x, Loc::Const { value: (t - 1) as u32, width: w }, out_n));
+    sched
+}
+
+/// Max-pooling (Fig. 5b): in a BNN this is an OR over the pooling window.
+/// A single neuron ORs up to four window bits in the first cycle
+/// (`[2a + b + c + d ≥ 1]`) and folds three more per subsequent cycle
+/// through its own latch.
+pub fn maxpool_or(products: &[usize], out_n: usize) -> Schedule {
+    assert!(!products.is_empty());
+    let mut sched = Schedule::new();
+    let mut it = products.iter().copied().peekable();
+    let mut first = true;
+    while it.peek().is_some() || first {
+        let mut row = Vec::new();
+        let mut cw = ControlWord::idle();
+        let take = |row: &mut Vec<ExtSpec>, ch: usize, it: &mut std::iter::Peekable<std::iter::Copied<std::slice::Iter<usize>>>| -> Src {
+            match it.next() {
+                Some(p) => {
+                    set_ext(row, ch, ExtSpec::Product(p));
+                    Src::Ext(ch)
+                }
+                None => Src::Zero,
+            }
+        };
+        let a = take(&mut row, 0, &mut it);
+        let b = take(&mut row, 1, &mut it);
+        let c = take(&mut row, 2, &mut it);
+        let d = if first { take(&mut row, 3, &mut it) } else { Src::N(out_n) };
+        cw.bus_b = b;
+        cw.bus_c = c;
+        cw.neurons[out_n] = NeuronCtl {
+            gated: false,
+            phase: 0,
+            a,
+            b_en: !matches!(b, Src::Zero),
+            b_inv: false,
+            c_en: !matches!(c, Src::Zero),
+            c_inv: false,
+            d,
+            threshold: 1,
+        };
+        sched.push(cw.with_note("maxpool OR"), row);
+        first = false;
+        if it.peek().is_none() {
+            break;
+        }
+    }
+    sched
+}
+
+/// ReLU (§IV-D): compare the register-resident input against `t`, then AND
+/// the comparator verdict with each input bit (`[1,1;2]` realized as
+/// `b + d ≥ 2`), writing the masked value to `dst`.
+pub fn relu(x: Loc, t: i64, dst_reg: usize, dst_lsb: usize) -> Schedule {
+    let xr = x.reg().expect("ReLU input must be register-resident");
+    assert_ne!(xr, dst_reg, "ReLU in-place not supported (read/write port clash)");
+    let w = x.width();
+    let mut sched = ge_const(x, t, CMP_N);
+    for i in 0..w {
+        let mut row = Vec::new();
+        let bx = bit_src(&x, i, &mut row);
+        let mut cw = ControlWord::idle();
+        cw.bus_b = bx;
+        cw.neurons[AND_N] = NeuronCtl {
+            gated: false,
+            phase: 0,
+            a: Src::Zero,
+            b_en: true,
+            b_inv: false,
+            c_en: false,
+            c_inv: false,
+            d: Src::N(CMP_N),
+            threshold: 2,
+        };
+        cw.writes.push(RegWrite { reg: dst_reg, bit: dst_lsb + i, src: WSrc::N(AND_N) });
+        sched.push(cw.with_note(format!("relu AND bit {i}")), row);
+    }
+    sched
+}
+
+/// Stream a `w`-bit operand from an input channel into a register, one bit
+/// per cycle (operand loading from the image/kernel buffers).
+pub fn load_stream(channel: usize, base: usize, w: usize, dst_reg: usize, dst_lsb: usize) -> Schedule {
+    let mut sched = Schedule::new();
+    for i in 0..w {
+        let mut row = Vec::new();
+        set_ext(&mut row, channel, ExtSpec::Product(base + i));
+        let mut cw = ControlWord::idle();
+        cw.writes.push(RegWrite { reg: dst_reg, bit: dst_lsb + i, src: WSrc::Ext(channel) });
+        sched.push(cw.with_note(format!("load bit {i}")), row);
+    }
+    sched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::TulipPe;
+
+    fn bits_of(v: u32, w: usize) -> Vec<bool> {
+        (0..w).map(|i| v >> i & 1 != 0).collect()
+    }
+
+    /// add(): exhaustive over all 4-bit operand pairs.
+    #[test]
+    fn add_exhaustive_4bit() {
+        for xv in 0u32..16 {
+            for yv in 0u32..16 {
+                let mut pe = TulipPe::new();
+                pe.regs_mut().poke_field(0, 0, 4, xv);
+                pe.regs_mut().poke_field(3, 0, 4, yv);
+                let s = add(
+                    Loc::Reg { reg: 0, lsb: 0, width: 4 },
+                    Loc::Reg { reg: 3, lsb: 0, width: 4 },
+                    1,
+                    0,
+                    SUM_N,
+                    CARRY_N,
+                );
+                assert_eq!(s.cycles(), 4);
+                assert!(s.validate().is_ok());
+                s.run_on(&mut pe, &[]);
+                assert_eq!(pe.regs().peek_field(1, 0, 5), xv + yv, "{xv}+{yv}");
+            }
+        }
+    }
+
+    /// Mixed widths: 6-bit + 3-bit.
+    #[test]
+    fn add_mixed_widths() {
+        let mut pe = TulipPe::new();
+        pe.regs_mut().poke_field(0, 2, 6, 55);
+        pe.regs_mut().poke_field(2, 0, 3, 7);
+        let s = add(
+            Loc::Reg { reg: 0, lsb: 2, width: 6 },
+            Loc::Reg { reg: 2, lsb: 0, width: 3 },
+            1,
+            4,
+            SUM_N,
+            CARRY_N,
+        );
+        assert_eq!(s.cycles(), 6);
+        s.run_on(&mut pe, &[]);
+        assert_eq!(pe.regs().peek_field(1, 4, 7), 62);
+    }
+
+    /// Streamed operands (products) work through the ext map.
+    #[test]
+    fn add_from_stream() {
+        let mut pe = TulipPe::new();
+        let s = add(
+            Loc::Stream { channel: 0, base: 0, width: 4 },
+            Loc::Stream { channel: 1, base: 4, width: 4 },
+            2,
+            0,
+            SUM_N,
+            CARRY_N,
+        );
+        let mut prod = bits_of(9, 4);
+        prod.extend(bits_of(13, 4));
+        s.run_on(&mut pe, &prod);
+        assert_eq!(pe.regs().peek_field(2, 0, 5), 22);
+    }
+
+    #[test]
+    fn leaf_sums_three_products() {
+        for m in 0u32..8 {
+            let mut pe = TulipPe::new();
+            let s = leaf(&[0, 1, 2], 1, 0);
+            assert_eq!(s.cycles(), 1);
+            s.run_on(&mut pe, &bits_of(m, 3));
+            assert_eq!(pe.regs().peek_field(1, 0, 2), m.count_ones(), "m={m:03b}");
+        }
+    }
+
+    #[test]
+    fn leaf_of_two_and_one() {
+        for m in 0u32..4 {
+            let mut pe = TulipPe::new();
+            leaf(&[0, 1], 0, 3).run_on(&mut pe, &bits_of(m, 2));
+            assert_eq!(pe.regs().peek_field(0, 3, 2), m.count_ones());
+        }
+        let mut pe = TulipPe::new();
+        leaf(&[0], 2, 5).run_on(&mut pe, &[true]);
+        assert_eq!(pe.regs().peek_field(2, 5, 1), 1);
+    }
+
+    /// compare_gt: exhaustive over all 4-bit pairs.
+    #[test]
+    fn compare_exhaustive_4bit() {
+        for xv in 0u32..16 {
+            for yv in 0u32..16 {
+                let mut pe = TulipPe::new();
+                pe.regs_mut().poke_field(0, 0, 4, xv);
+                pe.regs_mut().poke_field(1, 0, 4, yv);
+                let s = compare_gt(
+                    Loc::Reg { reg: 0, lsb: 0, width: 4 },
+                    Loc::Reg { reg: 1, lsb: 0, width: 4 },
+                    CMP_N,
+                );
+                assert_eq!(s.cycles(), 4);
+                s.run_on(&mut pe, &[]);
+                assert_eq!(pe.neuron_out(CMP_N), xv > yv, "{xv} > {yv}");
+            }
+        }
+    }
+
+    /// ge_const covers the batch-norm thresholding path, incl. degenerate T.
+    #[test]
+    fn ge_const_thresholds() {
+        for t in [-3i64, 0, 1, 7, 15, 16, 99] {
+            for xv in 0u32..16 {
+                let mut pe = TulipPe::new();
+                pe.regs_mut().poke_field(2, 0, 4, xv);
+                let s = ge_const(Loc::Reg { reg: 2, lsb: 0, width: 4 }, t, CMP_N);
+                s.run_on(&mut pe, &[]);
+                assert_eq!(pe.neuron_out(CMP_N), (xv as i64) >= t, "x={xv} t={t}");
+            }
+        }
+    }
+
+    /// maxpool: OR over windows of 1..=12 bits, all patterns for small n.
+    #[test]
+    fn maxpool_or_matches_or() {
+        for n in 1usize..=12 {
+            let products: Vec<usize> = (0..n).collect();
+            let s = maxpool_or(&products, CMP_N);
+            let expected_cycles = if n <= 4 { 1 } else { 1 + (n - 4).div_ceil(3) };
+            assert_eq!(s.cycles(), expected_cycles, "n={n}");
+            for pattern in [0u32, 1, 1 << (n - 1), (1 << n) - 1, 0b1010 & ((1 << n) - 1)] {
+                let mut pe = TulipPe::new();
+                s.run_on(&mut pe, &bits_of(pattern, n));
+                assert_eq!(pe.neuron_out(CMP_N), pattern != 0, "n={n} pat={pattern:b}");
+            }
+        }
+    }
+
+    /// Fig. 5(b): a 2×2 pooling window is a single cycle.
+    #[test]
+    fn maxpool_2x2_single_cycle() {
+        assert_eq!(maxpool_or(&[0, 1, 2, 3], CMP_N).cycles(), 1);
+    }
+
+    /// ReLU: output = x when x ≥ t else 0.
+    #[test]
+    fn relu_masks_below_threshold() {
+        for t in [0i64, 3, 9, 100] {
+            for xv in 0u32..16 {
+                let mut pe = TulipPe::new();
+                pe.regs_mut().poke_field(0, 0, 4, xv);
+                let s = relu(Loc::Reg { reg: 0, lsb: 0, width: 4 }, t, 1, 0);
+                s.run_on(&mut pe, &[]);
+                let expect = if (xv as i64) >= t { xv } else { 0 };
+                assert_eq!(pe.regs().peek_field(1, 0, 4), expect, "x={xv} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn load_stream_roundtrip() {
+        let mut pe = TulipPe::new();
+        let s = load_stream(0, 0, 8, 3, 4);
+        assert_eq!(s.cycles(), 8);
+        s.run_on(&mut pe, &bits_of(0xA5, 8));
+        assert_eq!(pe.regs().peek_field(3, 4, 8), 0xA5);
+    }
+
+    /// Accumulation (Fig. 4c): repeated adds alternating registers.
+    #[test]
+    fn accumulate_alternating_registers() {
+        let mut pe = TulipPe::new();
+        // acc in R2 (reg 1), inputs arrive in R1 (reg 0); alternate dst
+        // between R4 (reg 3) and R2 (reg 1) per Fig. 4(c).
+        let inputs = [5u32, 9, 3, 14, 7];
+        let mut acc_loc = Loc::Reg { reg: 1, lsb: 0, width: 4 };
+        pe.regs_mut().poke_field(1, 0, 4, 0);
+        let mut total = 0u32;
+        for (step, &v) in inputs.iter().enumerate() {
+            pe.regs_mut().poke_field(0, 0, 4, v);
+            let dst = if step % 2 == 0 { 3 } else { 1 };
+            let w = acc_loc.width().max(4);
+            let s = accumulate(acc_loc, Loc::Reg { reg: 0, lsb: 0, width: 4 }, dst, 0);
+            assert_eq!(s.cycles(), w);
+            s.run_on(&mut pe, &[]);
+            total += v;
+            acc_loc = Loc::Reg { reg: dst, lsb: 0, width: (w + 1).min(10) };
+            let got = pe.regs().peek_field(dst, 0, acc_loc.width());
+            assert_eq!(got, total, "after step {step}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "distinct registers")]
+    fn add_same_register_operands_panics() {
+        let _ = add(
+            Loc::Reg { reg: 0, lsb: 0, width: 4 },
+            Loc::Reg { reg: 0, lsb: 8, width: 4 },
+            1,
+            0,
+            SUM_N,
+            CARRY_N,
+        );
+    }
+}

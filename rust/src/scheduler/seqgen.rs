@@ -1,0 +1,189 @@
+//! The reconfigurable sequence generator (§IV-E).
+//!
+//! "For the TULIP-PEs, a reconfigurable sequence generator is used. This
+//! sequence generator follows the RPO schedule, and controls the local
+//! registers and the multiplexers of the TULIP-PEs. The control signals are
+//! broadcast to all the processing units."
+//!
+//! In the simulator this is a **schedule factory with a cache**: control
+//! streams are generated once per distinct operation descriptor and
+//! broadcast (shared by reference) to every PE in the array. The cache is
+//! also the L3 hot-path optimization — schedule generation is O(N) work
+//! that would otherwise sit inside the per-window loop.
+
+
+use super::ops;
+use super::{Loc, Schedule};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Descriptor of an operation the controller can sequence.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum OpDesc {
+    /// `n`-input popcount-and-threshold node (binary conv / FC neuron).
+    ThresholdNode { n: usize, t_popcount: i64 },
+    /// `n`-input popcount only (partial pass of a multi-pass accumulation).
+    SumTree { n: usize },
+    /// OR-maxpool over `n` window bits.
+    Maxpool { n: usize },
+    /// `w`-bit ReLU with threshold `t`.
+    Relu { w: usize, t: i64 },
+}
+
+/// The sequence generator: generates + caches control-word programs.
+#[derive(Debug, Default)]
+pub struct SequenceGenerator {
+    cache: HashMap<OpDesc, Arc<CachedProgram>>,
+    hits: u64,
+    misses: u64,
+}
+
+/// A cached program together with the metadata the runners need.
+#[derive(Debug)]
+pub struct CachedProgram {
+    pub schedule: Schedule,
+    /// Neuron holding the 1-bit result (threshold node / maxpool), if any.
+    pub out_neuron: Option<usize>,
+    /// Register field holding the multi-bit result, if any.
+    pub out_loc: Option<Loc>,
+}
+
+impl SequenceGenerator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get (or build) the program for an operation.
+    pub fn program(&mut self, desc: &OpDesc) -> Arc<CachedProgram> {
+        if let Some(p) = self.cache.get(desc) {
+            self.hits += 1;
+            return Arc::clone(p);
+        }
+        self.misses += 1;
+        let prog = Arc::new(self.build(desc));
+        self.cache.insert(desc.clone(), Arc::clone(&prog));
+        prog
+    }
+
+    fn build(&mut self, desc: &OpDesc) -> CachedProgram {
+        match *desc {
+            OpDesc::ThresholdNode { n, t_popcount } => {
+                // §Perf: a conv layer has one distinct threshold per OFM
+                // channel but a single tree shape, and tree planning (the
+                // backtracking register allocator) dominates generation.
+                // Share the cached sum-tree program across thresholds and
+                // append only the sequential comparison — generation per
+                // extra channel drops from a full re-plan to a clone+append.
+                let base = self.program(&OpDesc::SumTree { n });
+                let sum_loc = base.out_loc.expect("sum tree leaves its result in a register");
+                // Clone without the visualization notes: cached programs
+                // are executed thousands of times but never pretty-printed,
+                // and the per-word String clones dominate the copy cost.
+                let mut schedule = Schedule {
+                    words: base
+                        .schedule
+                        .words
+                        .iter()
+                        .map(|w| crate::pe::ControlWord { note: None, ..w.clone() })
+                        .collect(),
+                    ext_map: base.schedule.ext_map.clone(),
+                };
+                let cmp = ops::ge_const(sum_loc, t_popcount, ops::CMP_N);
+                schedule.extend(cmp);
+                CachedProgram {
+                    schedule,
+                    out_neuron: Some(ops::CMP_N),
+                    out_loc: Some(sum_loc),
+                }
+            }
+            OpDesc::SumTree { n } => {
+                let (schedule, loc, _) = super::adder_tree::sum_tree(n);
+                CachedProgram { schedule, out_neuron: None, out_loc: Some(loc) }
+            }
+            OpDesc::Maxpool { n } => {
+                let products: Vec<usize> = (0..n).collect();
+                let schedule = ops::maxpool_or(&products, ops::CMP_N);
+                CachedProgram { schedule, out_neuron: Some(ops::CMP_N), out_loc: None }
+            }
+            OpDesc::Relu { w, t } => {
+                // Input in R1[0..w], output to R2[0..w].
+                let x = Loc::Reg { reg: 0, lsb: 0, width: w };
+                let schedule = ops::relu(x, t, 1, 0);
+                CachedProgram {
+                    schedule,
+                    out_neuron: None,
+                    out_loc: Some(Loc::Reg { reg: 1, lsb: 0, width: w }),
+                }
+            }
+        }
+    }
+
+    /// Cycle count for an op (cached; the analytic model's entry point).
+    pub fn cycles(&mut self, desc: &OpDesc) -> u64 {
+        self.program(desc).schedule.cycles() as u64
+    }
+
+    /// (cache hits, misses) — exercised by the hot-path bench.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_hits_on_repeat() {
+        let mut sg = SequenceGenerator::new();
+        let d = OpDesc::ThresholdNode { n: 48, t_popcount: 20 };
+        let p1 = sg.program(&d);
+        let p2 = sg.program(&d);
+        assert!(Arc::ptr_eq(&p1, &p2));
+        // Building the threshold node also populated the shared sum-tree
+        // entry (one extra miss); the repeat is a pure hit.
+        assert_eq!(sg.cache_stats(), (1, 2));
+    }
+
+    /// §Perf: two thresholds over the same fan-in share the sum-tree plan —
+    /// the second ThresholdNode build hits the SumTree cache.
+    #[test]
+    fn thresholds_share_tree_plan() {
+        let mut sg = SequenceGenerator::new();
+        let a = sg.program(&OpDesc::ThresholdNode { n: 96, t_popcount: 40 });
+        let (h0, m0) = sg.cache_stats();
+        let b = sg.program(&OpDesc::ThresholdNode { n: 96, t_popcount: 60 });
+        let (h1, m1) = sg.cache_stats();
+        assert_eq!(m1 - m0, 1, "only the new threshold entry misses");
+        assert_eq!(h1 - h0, 1, "the sum tree is a cache hit");
+        // Same tree prefix, different comparison epilogues.
+        assert_eq!(a.schedule.cycles(), b.schedule.cycles());
+        assert_ne!(a.schedule.words, b.schedule.words);
+    }
+
+    #[test]
+    fn distinct_descriptors_distinct_programs() {
+        let mut sg = SequenceGenerator::new();
+        let a = sg.program(&OpDesc::SumTree { n: 12 });
+        let b = sg.program(&OpDesc::SumTree { n: 13 });
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_ne!(a.schedule.cycles(), 0);
+    }
+
+    #[test]
+    fn cycles_consistent_with_program() {
+        let mut sg = SequenceGenerator::new();
+        let d = OpDesc::Maxpool { n: 9 };
+        let c = sg.cycles(&d);
+        assert_eq!(c, sg.program(&d).schedule.cycles() as u64);
+        assert_eq!(c, 1 + (9u64 - 4).div_ceil(3));
+    }
+
+    #[test]
+    fn relu_program_shape() {
+        let mut sg = SequenceGenerator::new();
+        let p = sg.program(&OpDesc::Relu { w: 8, t: 5 });
+        assert_eq!(p.schedule.cycles(), 16);
+        assert_eq!(p.out_loc, Some(Loc::Reg { reg: 1, lsb: 0, width: 8 }));
+    }
+}

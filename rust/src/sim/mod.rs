@@ -1,0 +1,14 @@
+//! Simulation engines.
+//!
+//! * [`cycle`] — **bit-true, cycle-accurate**: every output bit is produced
+//!   by stepping TULIP-PEs through real control words. Used for
+//!   correctness (vs the rust functional reference and the JAX golden
+//!   model) and for validating the analytic model.
+//! * [`perf`] — consistency layer: asserts that the analytic cycle/energy
+//!   counts used by the coordinator equal what bit-true execution measures
+//!   on sampled workloads (the two are built from the same `Schedule`
+//!   objects, so this pins the construction).
+
+pub mod cycle;
+pub mod perf;
+pub mod trace;

@@ -1,0 +1,70 @@
+//! Consistency layer between the analytic performance model
+//! (`coordinator::exec`) and bit-true execution (`sim::cycle`).
+//!
+//! Both derive from the same `Schedule` objects, so per-node cycle counts
+//! and activity counters must agree exactly; these helpers measure both
+//! sides and are exercised by tests and the `hotpath` bench.
+
+use crate::coordinator::exec::{pe_node_cost, NodeCost};
+use crate::pe::TulipPe;
+use crate::scheduler::seqgen::{OpDesc, SequenceGenerator};
+use crate::util::Rng;
+
+/// Measure a threshold node bit-true: run it on a fresh PE with random
+/// products and return (cycles, neuron_evals, reg_accesses).
+pub fn measure_node_bit_true(n: usize, t_popcount: i64, seed: u64) -> (u64, u64, u64) {
+    let mut sg = SequenceGenerator::new();
+    let prog = sg.program(&OpDesc::ThresholdNode { n, t_popcount });
+    let mut rng = Rng::seed_from_u64(seed);
+    let products: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.5)).collect();
+    let mut pe = TulipPe::new();
+    prog.schedule.run_on(&mut pe, &products);
+    let s = pe.stats();
+    (s.cycles, s.neuron_evals, s.reg_reads + s.reg_writes)
+}
+
+/// Analytic counterpart via the coordinator's node-cost model.
+pub fn predict_node(n: usize) -> NodeCost {
+    let mut sg = SequenceGenerator::new();
+    pe_node_cost(&mut sg, n, n)
+}
+
+/// Assert agreement for a fan-in (used by tests; returns the cost for
+/// reporting). The threshold is chosen non-degenerate so the comparison
+/// schedule is exercised.
+pub fn check_consistency(n: usize) -> NodeCost {
+    let predicted = predict_node(n);
+    let (cycles, evals, _regs) = measure_node_bit_true(n, (n / 2) as i64, 7);
+    assert_eq!(predicted.cycles, cycles, "cycle mismatch at n={n}");
+    assert_eq!(predicted.neuron_evals, evals, "eval mismatch at n={n}");
+    predicted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The analytic model's cycles/evals equal bit-true execution for a
+    /// spread of fan-ins — the invariant that pins the whole table pipeline
+    /// to the hardware model.
+    #[test]
+    fn analytic_equals_bit_true() {
+        for &n in &[9usize, 27, 72, 144, 288, 576] {
+            let c = check_consistency(n);
+            assert!(c.cycles > 0);
+        }
+    }
+
+    /// Register accesses: the schedule's static count equals the executed
+    /// count (reads via buses/inputs + writes).
+    #[test]
+    fn reg_access_static_matches_dynamic() {
+        let mut sg = SequenceGenerator::new();
+        for &n in &[27usize, 288] {
+            let prog = sg.program(&OpDesc::ThresholdNode { n, t_popcount: (n / 2) as i64 });
+            let (r, w) = prog.schedule.reg_accesses();
+            let (_, _, dynamic) = measure_node_bit_true(n, (n / 2) as i64, 3);
+            assert_eq!(r + w, dynamic, "n={n}");
+        }
+    }
+}

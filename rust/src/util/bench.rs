@@ -1,0 +1,114 @@
+//! Micro-benchmark harness (criterion is not available in the offline
+//! vendor set). Warm-up + repeated timed runs, reporting median and spread;
+//! used by every `rust/benches/*.rs` target (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        self.median.as_secs_f64() * 1e9
+    }
+}
+
+/// Run `f` repeatedly, auto-scaling iterations so each sample takes ≥ 20 ms,
+/// and report the median of `samples` samples. `f` should return something
+/// observable to keep the optimizer honest (the value is black-boxed).
+pub fn bench<T>(name: &str, samples: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warm-up and iteration scaling.
+    let mut iters: u64 = 1;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        let dt = t0.elapsed();
+        if dt >= Duration::from_millis(20) || iters >= 1 << 24 {
+            break;
+        }
+        iters = (iters * 2).max((iters as f64 * 0.025 / dt.as_secs_f64().max(1e-9)) as u64);
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(samples);
+    for _ in 0..samples.max(3) {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        // Divide in f64 nanoseconds — Duration division truncates sub-ns
+        // per-iteration times to zero for very cheap bodies.
+        let per_iter_ns = t0.elapsed().as_secs_f64() * 1e9 / iters as f64;
+        times.push(Duration::from_nanos(per_iter_ns.max(0.0) as u64).max(Duration::from_nanos(
+            if per_iter_ns > 0.0 && per_iter_ns < 1.0 { 1 } else { 0 },
+        )));
+    }
+    times.sort();
+    let res = BenchResult {
+        name: name.to_string(),
+        median: times[times.len() / 2],
+        min: times[0],
+        max: times[times.len() - 1],
+        iters_per_sample: iters,
+    };
+    println!(
+        "bench {:40} median {:>12.1?}  (min {:?}, max {:?}, {} iters/sample)",
+        res.name, res.median, res.min, res.max, res.iters_per_sample
+    );
+    res
+}
+
+/// Pretty-print a paper-style table: header + rows of (label, cells).
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, c) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_timing() {
+        let r = bench("noop-ish", 3, || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.median_ns() > 0.0);
+        assert!(r.min <= r.median && r.median <= r.max);
+    }
+
+    #[test]
+    fn print_table_does_not_panic() {
+        print_table("t", &["a", "bb"], &[vec!["1".into(), "2".into()]]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Std-only utilities: deterministic RNG, a micro-bench harness and a
+//! property-testing loop. The build environment vendors only the `xla`
+//! crate's dependency set, so `rand`/`criterion`/`proptest` are replaced by
+//! these small, self-contained equivalents (documented in DESIGN.md).
+
+pub mod bench;
+pub mod prop;
+pub mod rng;
+
+pub use rng::Rng;

@@ -1,0 +1,45 @@
+//! Property-testing loop (proptest is not available in the offline vendor
+//! set). Runs a property over `cases` pseudo-random inputs with a fixed
+//! seed, printing the failing case before panicking so failures reproduce.
+
+use super::rng::Rng;
+
+/// Default number of cases per property (matches proptest's default).
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `prop` over `cases` inputs drawn by `gen`. On failure the input's
+/// `Debug` form and case index are printed, then the assertion propagates.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T),
+) {
+    let mut rng = Rng::seed_from_u64(0xBADC0FFEE0DDF00D ^ name.len() as u64);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&input)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} with input: {input:?}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("add-commutes", 64, |r| (r.gen_range_i64(-100, 100), r.gen_range_i64(-100, 100)), |&(a, b)| {
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics_with_case() {
+        forall("always-false", 8, |r| r.gen_index(10), |_| panic!("boom"));
+    }
+}

@@ -1,0 +1,121 @@
+//! Golden-model cross-checks: the JAX/Pallas artifacts (compiled once by
+//! `make artifacts`, loaded here via PJRT) must agree **bit-for-bit** with
+//! both the rust functional reference and the bit-true PE simulation.
+//!
+//! Tests skip gracefully (with a notice) when artifacts are absent so
+//! `cargo test` works before `make artifacts`.
+
+use tulip::arch::unit::PeArray;
+use tulip::bnn::layer::LayerKind;
+use tulip::bnn::reference;
+use tulip::bnn::tensor::{BinWeights, BitTensor};
+use tulip::bnn::{tiny_bnn, Layer};
+use tulip::runtime::{literal_bits, literal_i32, Runtime};
+use tulip::scheduler::seqgen::SequenceGenerator;
+use tulip::sim::cycle;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let rt = Runtime::new("artifacts").expect("PJRT client");
+    if !rt.has_artifact("tiny_bnn") {
+        eprintln!("skipping golden tests: run `make artifacts` first");
+        return None;
+    }
+    Some(rt)
+}
+
+/// Weight literals in the (z2, fanin) layout both sides share.
+fn weight_literal(w: &BinWeights) -> xla::Literal {
+    let data: Vec<i32> = w.data.iter().map(|&v| v as i32).collect();
+    literal_i32(&data, &[w.z2, w.fanin]).unwrap()
+}
+
+fn threshold_literal(w: &BinWeights) -> xla::Literal {
+    let t: Vec<i32> = w.thresholds.iter().map(|&v| v as i32).collect();
+    literal_i32(&t, &[w.z2]).unwrap()
+}
+
+/// Single binary conv layer: JAX golden == rust functional reference.
+#[test]
+fn binconv_layer_golden_matches_reference() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = rt.load("binconv_layer").unwrap();
+    let layer = Layer::conv("c", LayerKind::ConvBin, (16, 16, 8), 3, 1, 1, 8, None);
+    for seed in [1u64, 7, 42] {
+        let input = BitTensor::random(16, 16, 8, seed);
+        let weights = BinWeights::random(8, layer.fanin(), seed + 100);
+        let x = literal_bits(&input.data, &[16, 16, 8]).unwrap();
+        let out = model
+            .run_i32(&[x, weight_literal(&weights), threshold_literal(&weights)])
+            .unwrap();
+        let expect = reference::conv_bin(&input, &layer, &weights);
+        let expect_i32: Vec<i32> = expect.data.iter().map(|&b| b as i32).collect();
+        assert_eq!(out, expect_i32, "seed {seed}");
+    }
+}
+
+/// FC head: JAX golden scores == rust popcount scores.
+#[test]
+fn fc_head_golden_matches_reference() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = rt.load("fc_head").unwrap();
+    let layer = Layer::fc("f", LayerKind::FcBin, 256, 4);
+    for seed in [3u64, 9] {
+        let input: Vec<bool> = {
+            let t = BitTensor::random(16, 16, 1, seed);
+            t.data
+        };
+        let weights = BinWeights::random(4, 256, seed + 5);
+        let x = literal_bits(&input, &[256]).unwrap();
+        let out = model.run_i32(&[x, weight_literal(&weights)]).unwrap();
+        let expect: Vec<i32> =
+            reference::fc_scores(&input, &layer, &weights).iter().map(|&s| s as i32).collect();
+        assert_eq!(out, expect, "seed {seed}");
+    }
+}
+
+/// The full TinyBNN: golden forward == rust functional forward == bit-true
+/// PE-simulated forward. Three independent implementations, one answer.
+#[test]
+fn tiny_bnn_three_way_agreement() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = rt.load("tiny_bnn").unwrap();
+    let net = tiny_bnn(16, 8, 4);
+    let seed = 2026u64;
+    let input = BitTensor::random(16, 16, 8, seed);
+    let weights: Vec<BinWeights> = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), seed + i as u64 + 1))
+        .collect();
+
+    // 1) JAX golden via PJRT.
+    let golden = model
+        .run_i32(&[
+            literal_bits(&input.data, &[16, 16, 8]).unwrap(),
+            weight_literal(&weights[0]),
+            threshold_literal(&weights[0]),
+            weight_literal(&weights[1]),
+            threshold_literal(&weights[1]),
+            weight_literal(&weights[2]),
+        ])
+        .unwrap();
+
+    // 2) Rust functional reference.
+    let reference: Vec<i32> =
+        reference::forward_scores(&net, &input, &weights).iter().map(|&s| s as i32).collect();
+    assert_eq!(golden, reference, "golden vs functional");
+
+    // 3) Bit-true PE simulation (every activation through real control
+    //    words on the 4-neuron PEs).
+    let mut array = PeArray::new(2, 4);
+    let mut sg = SequenceGenerator::new();
+    let c1 = cycle::conv_bin_cycle(&mut array, &mut sg, &input, &net.layers[0], &weights[0]);
+    let p1 = cycle::maxpool_cycle(&mut array, &mut sg, &c1.output, 2, 2);
+    let c2 = cycle::conv_bin_cycle(&mut array, &mut sg, &p1.output, &net.layers[1], &weights[1]);
+    let p2 = cycle::maxpool_cycle(&mut array, &mut sg, &c2.output, 2, 2);
+    let (_, scores, _) =
+        cycle::fc_bin_cycle(&mut array, &mut sg, &p2.output.flatten(), &net.layers[2], &weights[2]);
+    let bit_true: Vec<i32> = scores.iter().map(|&s| s as i32).collect();
+    assert_eq!(golden, bit_true, "golden vs bit-true PE simulation");
+}

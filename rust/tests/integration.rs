@@ -1,0 +1,285 @@
+//! Cross-module integration tests: bit-true PE array vs functional
+//! reference at layer and network scope, analytic-vs-bit-true consistency,
+//! tiling/coordination invariants, and property tests over the scheduler
+//! (std-only `forall` harness — proptest is unavailable offline).
+
+use tulip::arch::unit::PeArray;
+use tulip::bnn::layer::LayerKind;
+use tulip::bnn::tensor::{BinWeights, BitTensor};
+use tulip::bnn::{alexnet, binarynet_cifar10, reference, tiny_bnn, Layer};
+use tulip::config::ArchConfig;
+use tulip::coordinator::{tiling, NetworkPerf};
+use tulip::pe::TulipPe;
+use tulip::scheduler::adder_tree::{sum_tree, threshold_node};
+use tulip::scheduler::seqgen::{OpDesc, SequenceGenerator};
+use tulip::scheduler::{ops, Loc};
+use tulip::sim::cycle;
+use tulip::util::prop::forall;
+use tulip::util::Rng;
+
+/// Property: for arbitrary fan-in and product bits, the full threshold-node
+/// program equals popcount ≥ T'.
+#[test]
+fn prop_threshold_node_equals_popcount_threshold() {
+    forall(
+        "threshold-node",
+        60,
+        |r| {
+            let n = 1 + r.gen_index(500);
+            let t = r.gen_range_i64(-2, n as i64 + 2);
+            let bits: Vec<bool> = (0..n).map(|_| r.gen_bool(0.5)).collect();
+            (n, t, bits)
+        },
+        |(n, t, bits)| {
+            let prog = threshold_node(*n, *t);
+            prog.schedule.validate().unwrap();
+            let mut pe = TulipPe::new();
+            prog.schedule.run_on(&mut pe, bits);
+            let pc = bits.iter().filter(|&&b| b).count() as i64;
+            assert_eq!(pe.neuron_out(prog.out_neuron), pc >= *t);
+        },
+    );
+}
+
+/// Property: RPO peak storage stays within the physical register file for
+/// every fan-in up to the paper's 1023-input example.
+#[test]
+fn prop_storage_fits_registers() {
+    forall(
+        "storage-bound",
+        40,
+        |r| 2 + r.gen_index(1022),
+        |&n| {
+            let (_, _, alloc) = sum_tree(n);
+            assert!(alloc.peak_bits() <= 64, "n={n} peak={}", alloc.peak_bits());
+        },
+    );
+}
+
+/// Property: the sequential comparator is exactly `x > y` for arbitrary
+/// widths and values.
+#[test]
+fn prop_comparator_gt() {
+    forall(
+        "comparator",
+        120,
+        |r| {
+            let w = 1 + r.gen_index(12);
+            let x = r.gen_range_i64(0, (1 << w) - 1) as u32;
+            let y = r.gen_range_i64(0, (1 << w) - 1) as u32;
+            (w, x, y)
+        },
+        |&(w, x, y)| {
+            let mut pe = TulipPe::new();
+            pe.regs_mut().poke_field(0, 0, w, x);
+            pe.regs_mut().poke_field(1, 0, w, y);
+            let s = ops::compare_gt(
+                Loc::Reg { reg: 0, lsb: 0, width: w },
+                Loc::Reg { reg: 1, lsb: 0, width: w },
+                ops::CMP_N,
+            );
+            s.run_on(&mut pe, &[]);
+            assert_eq!(pe.neuron_out(ops::CMP_N), x > y, "{x} > {y} (w={w})");
+        },
+    );
+}
+
+/// Property: accumulation across chunks equals the total popcount — the
+/// Fig. 4(c) path the coordinator uses for fan-ins beyond one tree.
+#[test]
+fn prop_chunked_accumulation() {
+    forall(
+        "chunked-acc",
+        30,
+        |r| {
+            let chunks = 2 + r.gen_index(3);
+            let per = 3 + r.gen_index(60);
+            let bits: Vec<bool> = (0..chunks * per).map(|_| r.gen_bool(0.5)).collect();
+            (per, bits)
+        },
+        |(per, bits)| {
+            // Emulate the chunked flow functionally: popcount of each chunk
+            // via a PE sum-tree, accumulated in software (the analytic
+            // model prices the accumulate adds; numerics are chunk sums).
+            let mut total = 0u32;
+            for chunk in bits.chunks(*per) {
+                let (sched, loc, _) = sum_tree(chunk.len());
+                let mut pe = TulipPe::new();
+                sched.run_on(&mut pe, chunk);
+                if let Loc::Reg { reg, lsb, width } = loc {
+                    total += pe.regs().peek_field(reg, lsb, width);
+                } else {
+                    panic!("sum not in register");
+                }
+            }
+            assert_eq!(total as usize, bits.iter().filter(|&&b| b).count());
+        },
+    );
+}
+
+/// Bit-true layer conv on the PE array == functional reference, randomized
+/// geometry (stride/padding/channels).
+#[test]
+fn prop_conv_bit_true_random_geometry() {
+    forall(
+        "conv-geometry",
+        10,
+        |r| {
+            let size = 4 + r.gen_index(5);
+            let c = 1 + r.gen_index(4);
+            let z2 = 1 + r.gen_index(6);
+            let stride = 1 + r.gen_index(2);
+            let pad = r.gen_index(2);
+            (size, c, z2, stride, pad, r.next_u64())
+        },
+        |&(size, c, z2, stride, pad, seed)| {
+            if size + 2 * pad < 3 {
+                return;
+            }
+            let layer =
+                Layer::conv("t", LayerKind::ConvBin, (size, size, c), 3, stride, pad, z2, None);
+            let input = BitTensor::random(size, size, c, seed);
+            let weights = BinWeights::random(z2, layer.fanin(), seed ^ 0xABCD);
+            let mut array = PeArray::new(1, 4);
+            let mut sg = SequenceGenerator::new();
+            let got = cycle::conv_bin_cycle(&mut array, &mut sg, &input, &layer, &weights);
+            assert_eq!(got.output, reference::conv_bin(&input, &layer, &weights));
+        },
+    );
+}
+
+/// Whole tiny network, bit-true on the PE array == functional forward.
+#[test]
+fn tiny_network_bit_true_forward() {
+    let net = tiny_bnn(8, 4, 3);
+    let seed = 77u64;
+    let input = BitTensor::random(8, 8, 4, seed);
+    let weights: Vec<BinWeights> = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), seed + i as u64))
+        .collect();
+    let expect = reference::forward_scores(&net, &input, &weights);
+
+    let mut array = PeArray::new(2, 4);
+    let mut sg = SequenceGenerator::new();
+    let c1 = cycle::conv_bin_cycle(&mut array, &mut sg, &input, &net.layers[0], &weights[0]);
+    let p1 = cycle::maxpool_cycle(&mut array, &mut sg, &c1.output, 2, 2);
+    let c2 = cycle::conv_bin_cycle(&mut array, &mut sg, &p1.output, &net.layers[1], &weights[1]);
+    let p2 = cycle::maxpool_cycle(&mut array, &mut sg, &c2.output, 2, 2);
+    let (_, scores, _) =
+        cycle::fc_bin_cycle(&mut array, &mut sg, &p2.output.flatten(), &net.layers[2], &weights[2]);
+    assert_eq!(scores, expect);
+}
+
+/// Tiling invariants: every OFM channel is produced exactly once; batch
+/// sizes never exceed the array; P·Z covers exactly z1 slabs × z2 batches.
+#[test]
+fn prop_tiling_covers_everything() {
+    forall(
+        "tiling-coverage",
+        80,
+        |r| {
+            let z1 = 1 + r.gen_index(600);
+            let z2 = 1 + r.gen_index(600);
+            let k = [1, 3, 5, 7][r.gen_index(4)];
+            let binary = r.gen_bool(0.5);
+            (z1, z2, k, binary)
+        },
+        |&(z1, z2, k, binary)| {
+            let kind = if binary { LayerKind::ConvBin } else { LayerKind::ConvInt };
+            let layer = Layer::conv("t", kind, (8, 8, z1), k, 1, k / 2, z2, None);
+            for cfg in [ArchConfig::tulip(), ArchConfig::yodann()] {
+                let t = tiling(&layer, &cfg);
+                assert!(t.p >= 1 && t.z >= 1);
+                // Slabs cover all input channels exactly once.
+                assert!(t.p * t.slab_ifms >= z1, "slab coverage");
+                assert!((t.p - 1) * t.slab_ifms < z1, "no empty slab");
+                // Batches cover all output channels exactly once.
+                assert!(t.z * t.ofm_batch >= z2, "batch coverage");
+                assert!((t.z - 1) * t.ofm_batch < z2, "no empty batch");
+            }
+        },
+    );
+}
+
+/// Scalability (§I: "throughput can simply be increased linearly by adding
+/// PEs"): doubling the PEs must not slow any binary layer down and must
+/// speed up compute-bound ones.
+#[test]
+fn pe_scaling_monotone() {
+    let net = binarynet_cifar10();
+    let base = NetworkPerf::model(&net, &ArchConfig::tulip());
+    let doubled = NetworkPerf::model(&net, &ArchConfig::tulip().with_pes(512));
+    for (a, b) in base.layers.iter().zip(&doubled.layers) {
+        assert!(b.compute_cycles <= a.compute_cycles, "{}", a.name);
+    }
+    assert!(doubled.conv_aggregate().cycles <= base.conv_aggregate().cycles);
+}
+
+/// Cross-arch op-count identity and Table IV/V scope arithmetic.
+#[test]
+fn aggregates_are_consistent() {
+    for net in [binarynet_cifar10(), alexnet()] {
+        let t = NetworkPerf::model(&net, &ArchConfig::tulip());
+        let conv = t.conv_aggregate();
+        let all = t.total_aggregate();
+        assert!(all.mops > conv.mops);
+        assert!(all.cycles >= conv.cycles);
+        assert!((conv.mops - net.conv_mops()).abs() < 1e-6);
+        assert!((all.mops - net.total_mops()).abs() < 1e-6);
+    }
+}
+
+/// Failure injection: a corrupted HLO artifact must produce a clean error,
+/// not a crash.
+#[test]
+fn corrupted_artifact_clean_error() {
+    let dir = std::env::temp_dir().join("tulip-corrupt-artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "HloModule garbage {{{").unwrap();
+    let rt = tulip::runtime::Runtime::new(&dir).unwrap();
+    assert!(rt.load("bad").is_err());
+}
+
+/// Determinism: two full model runs give identical cycle counts and the
+/// same per-layer breakdown (no hidden global state in the seqgen cache).
+#[test]
+fn model_runs_are_reproducible() {
+    let net = alexnet();
+    let a = NetworkPerf::model(&net, &ArchConfig::tulip());
+    let b = NetworkPerf::model(&net, &ArchConfig::tulip());
+    for (x, y) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(x.total_cycles, y.total_cycles);
+        assert_eq!(x.activity, y.activity);
+    }
+}
+
+/// Seeds propagate: different seeds give different tensors, same seed same
+/// tensor (the synthetic-workload determinism contract).
+#[test]
+fn synthetic_workload_determinism() {
+    let mut r = Rng::seed_from_u64(1);
+    let _ = r.next_u64();
+    assert_eq!(BitTensor::random(6, 6, 3, 5), BitTensor::random(6, 6, 3, 5));
+    assert_ne!(BitTensor::random(6, 6, 3, 5), BitTensor::random(6, 6, 3, 6));
+    let w = BinWeights::random(3, 27, 9);
+    assert_eq!(w.data, BinWeights::random(3, 27, 9).data);
+}
+
+/// The sequence-generator cache is shared across layers with equal node
+/// descriptors (the L3 hot-path optimization): modelling AlexNet touches
+/// few distinct programs.
+#[test]
+fn seqgen_cache_effective() {
+    let mut sg = SequenceGenerator::new();
+    for _ in 0..100 {
+        let _ = sg.program(&OpDesc::ThresholdNode { n: 288, t_popcount: 144 });
+    }
+    let (hits, misses) = sg.cache_stats();
+    // 2 misses: the threshold-node entry plus the shared sum-tree it is
+    // built from (§Perf: thresholds share the tree plan).
+    assert_eq!(misses, 2);
+    assert_eq!(hits, 99);
+}
