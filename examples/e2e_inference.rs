@@ -57,7 +57,12 @@ fn main() {
         .enumerate()
         .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 1000 + i as u64))
         .collect();
-    println!("network: {} ({} layers, {:.2} MOp/inference)", net.name, net.layers.len(), net.total_mops());
+    println!(
+        "network: {} ({} layers, {:.2} MOp/inference)",
+        net.name,
+        net.layers.len(),
+        net.total_mops()
+    );
 
     // ---- Path A: JAX golden model via PJRT (the serving path) ----------
     let t0 = Instant::now();
@@ -88,7 +93,8 @@ fn main() {
         let input = BitTensor::random(16, 16, 8, img as u64);
         let c1 = cycle::conv_bin_cycle(&mut array, &mut sg, &input, &net.layers[0], &weights[0]);
         let p1 = cycle::maxpool_cycle(&mut array, &mut sg, &c1.output, 2, 2);
-        let c2 = cycle::conv_bin_cycle(&mut array, &mut sg, &p1.output, &net.layers[1], &weights[1]);
+        let c2 =
+            cycle::conv_bin_cycle(&mut array, &mut sg, &p1.output, &net.layers[1], &weights[1]);
         let p2 = cycle::maxpool_cycle(&mut array, &mut sg, &c2.output, 2, 2);
         let (_, scores, fc_cy) = cycle::fc_bin_cycle(
             &mut array,

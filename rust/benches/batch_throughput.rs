@@ -1,0 +1,109 @@
+//! Batched-inference throughput: images/sec by batch size and worker
+//! count, against the single-image serial baseline — with a bit-identical
+//! determinism check (batching and threading never change results).
+//!
+//! Acceptance shape: on a multi-core host the batched multi-thread
+//! throughput should reach ≥ 3× the single-image serial throughput; the
+//! final line prints the measured ratio.
+//!
+//! Run: `cargo bench --bench batch_throughput`
+
+use std::time::Instant;
+use tulip::bnn::tensor::{BinWeights, BitTensor};
+use tulip::bnn::{tiny_bnn, Network};
+use tulip::coordinator::{BatchExecutor, BatchRequest};
+use tulip::util::bench::print_table;
+
+fn weights_for(net: &Network) -> Vec<BinWeights> {
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 1000 + i as u64))
+        .collect()
+}
+
+fn make_exec(threads: usize) -> BatchExecutor {
+    let net = tiny_bnn(16, 8, 4);
+    let weights = weights_for(&net);
+    // 8 PEs per worker: plenty for the tiny net's widest layer and cheap
+    // to replicate per thread. All executors share the global program
+    // cache, exactly like production serving would.
+    BatchExecutor::new(net, weights).unwrap().with_array(2, 4).with_threads(threads)
+}
+
+fn main() {
+    const TOTAL: u64 = 64;
+    let images: Vec<BitTensor> = (0..TOTAL).map(|i| BitTensor::random(16, 16, 8, i)).collect();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("host parallelism: {cores} cores, workload: {TOTAL} images of 16x16x8, TinyBNN");
+
+    // Warm the shared program cache once: schedule planning is a
+    // per-process cost, not a per-batch cost.
+    let warm = make_exec(1);
+    warm.run(&BatchRequest::new(vec![images[0].clone()])).unwrap();
+
+    // --- Serial baseline: one image per request, one worker --------------
+    let serial_exec = make_exec(1);
+    let t0 = Instant::now();
+    let mut serial_scores: Vec<Vec<i64>> = Vec::with_capacity(images.len());
+    for (i, img) in images.iter().enumerate() {
+        serial_scores.push(serial_exec.run_one(i, img).unwrap().scores);
+    }
+    let serial_dt = t0.elapsed();
+    let serial_ips = images.len() as f64 / serial_dt.as_secs_f64();
+    println!(
+        "serial baseline: {:.2} images/s ({:.1} ms total, single worker, batch=1)",
+        serial_ips,
+        serial_dt.as_secs_f64() * 1e3
+    );
+
+    // --- Sweep: batch size × worker count --------------------------------
+    let mut rows = Vec::new();
+    let mut best_ips = 0.0f64;
+    let mut thread_counts = vec![1usize, 2, 4];
+    if !thread_counts.contains(&cores) {
+        thread_counts.push(cores);
+    }
+    for &threads in &thread_counts {
+        let exec = make_exec(threads);
+        for &batch in &[8usize, 32, TOTAL as usize] {
+            let req = BatchRequest::new(images[..batch].to_vec());
+            let t0 = Instant::now();
+            let result = exec.run(&req).unwrap();
+            let dt = t0.elapsed();
+            let ips = batch as f64 / dt.as_secs_f64();
+            if threads > 1 {
+                best_ips = best_ips.max(ips);
+            }
+            // Determinism: every configuration reproduces the serial scores.
+            for (i, r) in result.images.iter().enumerate() {
+                assert_eq!(r.scores, serial_scores[i], "threads={threads} batch={batch} image={i}");
+            }
+            rows.push(vec![
+                threads.to_string(),
+                batch.to_string(),
+                format!("{:.1}", dt.as_secs_f64() * 1e3),
+                format!("{:.2}", ips),
+                format!("{:.2}X", ips / serial_ips),
+            ]);
+        }
+    }
+    print_table(
+        "Batched bit-true inference (outputs verified bit-identical to serial)",
+        &["threads", "batch", "wall (ms)", "images/s", "vs serial"],
+        &rows,
+    );
+
+    let ratio = best_ips / serial_ips;
+    println!(
+        "\nbest multi-thread batched throughput: {best_ips:.2} images/s = {ratio:.2}X serial \
+         ({})",
+        if ratio >= 3.0 {
+            "PASS: >= 3X"
+        } else if cores < 4 {
+            "host has < 4 cores; 3X target needs a multi-core runner"
+        } else {
+            "below the 3X target — investigate"
+        }
+    );
+}

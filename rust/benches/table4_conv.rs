@@ -19,8 +19,28 @@ struct PaperRow {
 
 fn main() {
     let paper = [
-        ("BinaryNet", PaperRow { energy_y: 472.6, energy_t: 159.1, time_y: 21.4, time_t: 20.6, eff_y: 2.2, eff_t: 6.4 }),
-        ("AlexNet", PaperRow { energy_y: 678.8, energy_t: 224.5, time_y: 28.1, time_t: 25.9, eff_y: 3.0, eff_t: 9.1 }),
+        (
+            "BinaryNet",
+            PaperRow {
+                energy_y: 472.6,
+                energy_t: 159.1,
+                time_y: 21.4,
+                time_t: 20.6,
+                eff_y: 2.2,
+                eff_t: 6.4,
+            },
+        ),
+        (
+            "AlexNet",
+            PaperRow {
+                energy_y: 678.8,
+                energy_t: 224.5,
+                time_y: 28.1,
+                time_t: 25.9,
+                eff_y: 3.0,
+                eff_t: 9.1,
+            },
+        ),
     ];
 
     for (net, p) in [binarynet_cifar10(), alexnet()].into_iter().zip(&paper) {
@@ -28,13 +48,22 @@ fn main() {
         let (_, row) = p;
         println!(
             "paper:   Y {:.1} uJ / {:.1} ms / {:.1} TOp/s/W | T {:.1} uJ / {:.1} ms / {:.1} TOp/s/W  (gain {:.1}X)",
-            row.energy_y, row.time_y, row.eff_y, row.energy_t, row.time_t, row.eff_t,
+            row.energy_y,
+            row.time_y,
+            row.eff_y,
+            row.energy_t,
+            row.time_t,
+            row.eff_t,
             row.eff_t / row.eff_y
         );
         println!(
             "ours:    Y {:.1} uJ / {:.1} ms / {:.1} TOp/s/W | T {:.1} uJ / {:.1} ms / {:.1} TOp/s/W  (gain {:.1}X)",
-            c.yodann.energy_uj, c.yodann.time_ms, c.yodann.tops_per_w,
-            c.tulip.energy_uj, c.tulip.time_ms, c.tulip.tops_per_w,
+            c.yodann.energy_uj,
+            c.yodann.time_ms,
+            c.yodann.tops_per_w,
+            c.tulip.energy_uj,
+            c.tulip.time_ms,
+            c.tulip.tops_per_w,
             c.efficiency_gain()
         );
         println!(

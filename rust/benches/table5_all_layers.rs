@@ -25,8 +25,12 @@ fn main() {
         );
         println!(
             "ours:    Y {:.1} uJ / {:.1} ms / {:.1} TOp/s/W | T {:.1} uJ / {:.1} ms / {:.1} TOp/s/W  (gain {:.1}X)\n",
-            c.yodann.energy_uj, c.yodann.time_ms, c.yodann.tops_per_w,
-            c.tulip.energy_uj, c.tulip.time_ms, c.tulip.tops_per_w,
+            c.yodann.energy_uj,
+            c.yodann.time_ms,
+            c.yodann.tops_per_w,
+            c.tulip.energy_uj,
+            c.tulip.time_ms,
+            c.tulip.tops_per_w,
             c.efficiency_gain()
         );
         let _ = name;

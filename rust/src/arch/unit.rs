@@ -31,7 +31,10 @@ pub struct ProcessingUnit {
 impl ProcessingUnit {
     /// The paper's unit: 8 PEs + 1 simplified MAC.
     pub fn new(pes_per_unit: usize) -> Self {
-        ProcessingUnit { pes: (0..pes_per_unit).map(|_| TulipPe::new()).collect(), mac: MacUnit::simplified() }
+        ProcessingUnit {
+            pes: (0..pes_per_unit).map(|_| TulipPe::new()).collect(),
+            mac: MacUnit::simplified(),
+        }
     }
 
     /// Merged PE activity counters.
@@ -95,6 +98,15 @@ impl PeArray {
             .filter(|i| channel_base + i < weights.z2)
             .map(|i| xnor_products(window, weights.filter(channel_base + i)))
             .collect()
+    }
+
+    /// Reset every PE's activity counters (per-image accounting in the
+    /// batched engine; register contents and latches are left alone, as in
+    /// the hardware, where only the energy counters are external).
+    pub fn reset_stats(&mut self) {
+        for u in &mut self.units {
+            u.reset_stats();
+        }
     }
 
     /// Total PE activity across the array.

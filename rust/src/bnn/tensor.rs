@@ -110,7 +110,12 @@ impl IntTensor {
     pub fn random(h: usize, w: usize, c: usize, bits: u32, seed: u64) -> Self {
         let mut rng = Rng::seed_from_u64(seed);
         let max = (1i32 << bits.min(12)) - 1;
-        IntTensor { h, w, c, data: (0..h * w * c).map(|_| rng.gen_range_i64(0, max as i64) as i32).collect() }
+        IntTensor {
+            h,
+            w,
+            c,
+            data: (0..h * w * c).map(|_| rng.gen_range_i64(0, max as i64) as i32).collect(),
+        }
     }
 
     #[inline]

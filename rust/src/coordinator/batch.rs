@@ -1,0 +1,501 @@
+//! Batched, data-parallel inference — the serving layer over the bit-true
+//! engine.
+//!
+//! The paper's chip owes its throughput to a SIMD array of TULIP-PEs all
+//! executing one broadcast control stream (§IV-E); a serving deployment of
+//! the simulator owes its throughput to the same structure one level up:
+//! **one shared [`ProgramCache`]** (schedules planned once per process) and
+//! **many worker threads**, each owning a private PE array + sequence
+//! generator and walking whole images independently. Workers share nothing
+//! mutable — the cache hands out `Arc`s — so batching is deterministic by
+//! construction: a [`BatchResult`] is bit-identical whether the batch ran
+//! on one thread or sixteen, and its aggregate cycle/energy accounting is
+//! exactly the sum of the per-image single-run numbers.
+//!
+//! ```no_run
+//! use tulip::bnn::tensor::{BinWeights, BitTensor};
+//! use tulip::bnn::tiny_bnn;
+//! use tulip::coordinator::{BatchExecutor, BatchRequest};
+//!
+//! let net = tiny_bnn(16, 8, 4);
+//! let weights: Vec<BinWeights> = net
+//!     .layers
+//!     .iter()
+//!     .enumerate()
+//!     .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 1000 + i as u64))
+//!     .collect();
+//! let exec = BatchExecutor::new(net, weights).unwrap();
+//! let req = BatchRequest::new((0..32).map(|i| BitTensor::random(16, 16, 8, i)).collect());
+//! let result = exec.run(&req).unwrap();
+//! println!("{:?} energy {:.1} nJ", result.classes(), result.energy().total_pj() * 1e-3);
+//! ```
+
+use crate::arch::unit::PeArray;
+use crate::bnn::tensor::{BinWeights, BitTensor};
+use crate::bnn::Network;
+use crate::config::ArchConfig;
+use crate::coordinator::exec::NetworkPerf;
+use crate::energy::{calib, Activity, EnergyBreakdown, EnergyModel};
+use crate::pe::PeStats;
+use crate::scheduler::seqgen::SequenceGenerator;
+use crate::scheduler::ProgramCache;
+use crate::sim::cycle::forward_bin_cycle;
+use crate::Result;
+use anyhow::ensure;
+use rayon::prelude::*;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A batch of images to classify (HWC binary tensors matching the
+/// network's input layer).
+#[derive(Debug, Clone, Default)]
+pub struct BatchRequest {
+    pub images: Vec<BitTensor>,
+}
+
+impl BatchRequest {
+    pub fn new(images: Vec<BitTensor>) -> Self {
+        BatchRequest { images }
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+}
+
+/// Index of the maximum score; ties resolve to the lowest index, so the
+/// classification is deterministic and thread-order independent.
+pub fn argmax(scores: &[i64]) -> usize {
+    assert!(!scores.is_empty(), "argmax of empty score vector");
+    let mut best = 0;
+    for (i, &s) in scores.iter().enumerate() {
+        if s > scores[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Map PE activity counters + simulated cycles into the energy model's
+/// record (single definition shared by the per-image and batch views, so
+/// the two can never drift).
+fn pe_activity(stats: &PeStats, cycles: u64) -> Activity {
+    Activity {
+        pe_neuron_evals: stats.neuron_evals,
+        pe_reg_accesses: stats.reg_reads + stats.reg_writes,
+        pe_gated_neuron_cycles: stats.gated_neuron_cycles,
+        total_cycles: cycles,
+        ..Default::default()
+    }
+}
+
+/// Outcome for one image of a batch.
+#[derive(Debug, Clone)]
+pub struct ImageResult {
+    /// Position in the originating [`BatchRequest`].
+    pub index: usize,
+    /// Raw final-layer popcount scores.
+    pub scores: Vec<i64>,
+    /// `argmax(scores)` — the predicted class.
+    pub class: usize,
+    /// Simulated chip cycles for this image alone.
+    pub cycles: u64,
+    /// PE activity for this image alone.
+    pub stats: PeStats,
+}
+
+impl ImageResult {
+    /// This image's activity record for the energy model.
+    pub fn activity(&self) -> Activity {
+        pe_activity(&self.stats, self.cycles)
+    }
+
+    /// Energy priced at the calibrated model.
+    pub fn energy(&self) -> EnergyBreakdown {
+        EnergyModel::default().energy(&self.activity())
+    }
+}
+
+/// Result of a batch execution: per-image results in request order plus
+/// exact aggregates (every aggregate equals the sum of its per-image
+/// parts — asserted by `tests/batch.rs`).
+#[derive(Debug, Clone)]
+pub struct BatchResult {
+    pub images: Vec<ImageResult>,
+    /// Simulated chip cycles summed over the batch.
+    pub cycles: u64,
+    /// PE activity summed over the batch.
+    pub stats: PeStats,
+    /// Host wall-clock time the batch took (all workers).
+    pub wall: Duration,
+}
+
+impl BatchResult {
+    /// Aggregate activity record (sum of per-image records).
+    pub fn activity(&self) -> Activity {
+        pe_activity(&self.stats, self.cycles)
+    }
+
+    /// Aggregate energy priced at the calibrated model.
+    pub fn energy(&self) -> EnergyBreakdown {
+        EnergyModel::default().energy(&self.activity())
+    }
+
+    /// Predicted class per image, in request order.
+    pub fn classes(&self) -> Vec<usize> {
+        self.images.iter().map(|r| r.class).collect()
+    }
+
+    /// Host-side simulator throughput.
+    pub fn images_per_sec(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s > 0.0 {
+            self.images.len() as f64 / s
+        } else {
+            0.0
+        }
+    }
+
+    /// Simulated on-chip latency per image, µs at the paper's 2.3 ns clock
+    /// (averaged over the batch).
+    pub fn simulated_us_per_image(&self) -> f64 {
+        if self.images.is_empty() {
+            return 0.0;
+        }
+        self.cycles as f64 / self.images.len() as f64 * calib::CLOCK_NS * 1e-3
+    }
+}
+
+/// The batch executor: a frozen binary network + weights, a shared program
+/// cache, and a rayon-sharded bit-true backend. Construct once, serve many
+/// batches; the executor is `Sync`, so one instance can serve concurrent
+/// callers. A dedicated worker pool (when requested via
+/// [`BatchExecutor::with_threads`]) is built once at configuration time,
+/// not per batch.
+pub struct BatchExecutor {
+    net: Network,
+    weights: Vec<BinWeights>,
+    cache: Arc<ProgramCache>,
+    units: usize,
+    pes_per_unit: usize,
+    /// `None` ⇒ rayon's global pool.
+    pool: Option<rayon::ThreadPool>,
+}
+
+impl std::fmt::Debug for BatchExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BatchExecutor")
+            .field("network", &self.net.name)
+            .field("layers", &self.net.layers.len())
+            .field("units", &self.units)
+            .field("pes_per_unit", &self.pes_per_unit)
+            .field("dedicated_pool", &self.pool.is_some())
+            .finish()
+    }
+}
+
+impl BatchExecutor {
+    /// Build an executor for a fully binary network ending in an FC
+    /// classifier head. Shapes are validated once, here, not per batch.
+    pub fn new(net: Network, weights: Vec<BinWeights>) -> Result<Self> {
+        ensure!(net.layers.len() == weights.len(), "one weight set per layer");
+        ensure!(
+            net.layers.iter().all(|l| l.is_binary()),
+            "batched bit-true serving covers binary networks only (§V-C routes integer layers to MACs)"
+        );
+        ensure!(
+            net.layers.last().is_some_and(|l| l.is_fc()),
+            "network must end in an FC classifier head"
+        );
+        for (l, w) in net.layers.iter().zip(&weights) {
+            ensure!(
+                w.z2 == l.z2 && w.fanin == l.fanin(),
+                "weight shape mismatch at layer '{}': ({}, {}) vs ({}, {})",
+                l.name,
+                w.z2,
+                w.fanin,
+                l.z2,
+                l.fanin()
+            );
+        }
+        net.validate().map_err(anyhow::Error::msg)?;
+        Ok(BatchExecutor {
+            net,
+            weights,
+            cache: ProgramCache::global(),
+            units: calib::NUM_MACS,
+            pes_per_unit: calib::PES_PER_UNIT,
+            pool: None,
+        })
+    }
+
+    /// Share a specific program cache (default: the process-global cache).
+    pub fn with_cache(mut self, cache: Arc<ProgramCache>) -> Self {
+        self.cache = cache;
+        self
+    }
+
+    /// Per-worker PE-array geometry (default: the paper's 32 × 8 = 256).
+    pub fn with_array(mut self, units: usize, pes_per_unit: usize) -> Self {
+        assert!(units >= 1 && pes_per_unit >= 1);
+        self.units = units;
+        self.pes_per_unit = pes_per_unit;
+        self
+    }
+
+    /// Worker-thread count; `0` (the default) uses rayon's global pool.
+    /// A non-zero count builds a dedicated pool **once**, here, reused by
+    /// every subsequent [`BatchExecutor::run`].
+    ///
+    /// # Panics
+    /// Panics if the dedicated pool cannot be created.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.pool = if threads == 0 {
+            None
+        } else {
+            let pool = rayon::ThreadPoolBuilder::new()
+                .num_threads(threads)
+                .build()
+                .expect("building the batch worker pool");
+            Some(pool)
+        };
+        self
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    pub fn cache_handle(&self) -> Arc<ProgramCache> {
+        Arc::clone(&self.cache)
+    }
+
+    fn classify(
+        &self,
+        array: &mut PeArray,
+        sg: &mut SequenceGenerator,
+        index: usize,
+        image: &BitTensor,
+    ) -> ImageResult {
+        let f = forward_bin_cycle(array, sg, image, &self.net, &self.weights);
+        let class = argmax(&f.scores);
+        ImageResult { index, scores: f.scores, class, cycles: f.cycles, stats: f.stats }
+    }
+
+    fn scratch(&self) -> (PeArray, SequenceGenerator) {
+        (
+            PeArray::new(self.units, self.pes_per_unit),
+            SequenceGenerator::with_cache(Arc::clone(&self.cache)),
+        )
+    }
+
+    /// Classify one image on a private scratch array — the per-image
+    /// single-run baseline batch aggregates are checked against.
+    pub fn run_one(&self, index: usize, image: &BitTensor) -> Result<ImageResult> {
+        self.check_image(index, image)?;
+        let (mut array, mut sg) = self.scratch();
+        Ok(self.classify(&mut array, &mut sg, index, image))
+    }
+
+    /// Run a batch: images are sharded across worker threads (each with
+    /// its own PE array and generator, all sharing this executor's program
+    /// cache) and results are returned in request order.
+    pub fn run(&self, req: &BatchRequest) -> Result<BatchResult> {
+        for (i, img) in req.images.iter().enumerate() {
+            self.check_image(i, img)?;
+        }
+        let t0 = Instant::now();
+        let images = self.run_sharded(req);
+        let mut stats = PeStats::default();
+        let mut cycles = 0u64;
+        for r in &images {
+            stats.merge(&r.stats);
+            cycles += r.cycles;
+        }
+        Ok(BatchResult { images, cycles, stats, wall: t0.elapsed() })
+    }
+
+    fn check_image(&self, index: usize, img: &BitTensor) -> Result<()> {
+        let l0 = &self.net.layers[0];
+        ensure!(
+            img.h == l0.y1 && img.w == l0.x1 && img.c == l0.z1,
+            "image {index}: got {}x{}x{}, network expects {}x{}x{}",
+            img.h,
+            img.w,
+            img.c,
+            l0.y1,
+            l0.x1,
+            l0.z1
+        );
+        Ok(())
+    }
+
+    fn run_sharded(&self, req: &BatchRequest) -> Vec<ImageResult> {
+        let work = || {
+            req.images
+                .par_iter()
+                .enumerate()
+                .map_init(
+                    || self.scratch(),
+                    |(array, sg), (index, image)| self.classify(array, sg, index, image),
+                )
+                .collect()
+        };
+        match &self.pool {
+            Some(pool) => pool.install(work),
+            None => work(),
+        }
+    }
+}
+
+/// Analytic (non-bit-true) batch performance: the coordinator's
+/// single-image layer-walk model scaled to a batch. Because every image of
+/// a batch walks the same schedule objects, the batched accounting is
+/// *exactly* `batch ×` the single-image analytic model — no drift between
+/// the serving path and the paper-table path.
+#[derive(Debug, Clone)]
+pub struct BatchPerf {
+    pub per_image: NetworkPerf,
+    pub batch: usize,
+}
+
+impl BatchPerf {
+    pub fn model(net: &Network, cfg: &ArchConfig, batch: usize) -> Self {
+        BatchPerf { per_image: NetworkPerf::model(net, cfg), batch }
+    }
+
+    /// Total chip cycles for the batch — exactly `batch ×` one image.
+    pub fn total_cycles(&self) -> u64 {
+        self.per_image.total_aggregate().cycles * self.batch as u64
+    }
+
+    /// Aggregate activity — exactly `batch ×` the single-image record.
+    pub fn activity(&self) -> Activity {
+        let mut a = Activity::default();
+        for l in &self.per_image.layers {
+            a.merge(&l.activity);
+        }
+        a.scaled(self.batch as u64)
+    }
+
+    /// Aggregate energy at the calibrated model.
+    pub fn energy(&self) -> EnergyBreakdown {
+        EnergyModel::default().energy(&self.activity())
+    }
+
+    /// Simulated steady-state throughput at the paper's clock (one chip,
+    /// images back to back).
+    pub fn images_per_sec(&self) -> f64 {
+        let per = EnergyModel::default().seconds(self.per_image.total_aggregate().cycles);
+        if per > 0.0 {
+            1.0 / per
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::reference;
+    use crate::bnn::tiny_bnn;
+
+    fn tiny_executor() -> BatchExecutor {
+        let net = tiny_bnn(8, 4, 3);
+        let weights: Vec<BinWeights> = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 7 + i as u64))
+            .collect();
+        BatchExecutor::new(net, weights).unwrap().with_array(1, 4)
+    }
+
+    #[test]
+    fn argmax_first_tie_wins() {
+        assert_eq!(argmax(&[1, 5, 5, 2]), 1);
+        assert_eq!(argmax(&[3]), 0);
+        assert_eq!(argmax(&[-4, -2, -9]), 1);
+    }
+
+    #[test]
+    fn batch_matches_functional_reference() {
+        let exec = tiny_executor();
+        let req = BatchRequest::new((0..5).map(|i| BitTensor::random(8, 8, 4, 40 + i)).collect());
+        let got = exec.run(&req).unwrap();
+        assert_eq!(got.images.len(), 5);
+        let net = tiny_bnn(8, 4, 3);
+        let weights: Vec<BinWeights> = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 7 + i as u64))
+            .collect();
+        for (i, r) in got.images.iter().enumerate() {
+            assert_eq!(r.index, i, "request order preserved");
+            let expect = reference::forward_scores(&net, &req.images[i], &weights);
+            assert_eq!(r.scores, expect, "image {i}");
+            assert_eq!(r.class, argmax(&expect));
+        }
+        assert!(got.cycles > 0 && got.stats.neuron_evals > 0);
+        assert!(got.energy().total_pj() > 0.0);
+    }
+
+    #[test]
+    fn executor_rejects_bad_inputs() {
+        use crate::bnn::layer::LayerKind;
+        use crate::bnn::{Layer, Network};
+        // Integer layer → rejected.
+        let net = Network {
+            name: "int".into(),
+            dataset: "t".into(),
+            layers: vec![
+                Layer::conv("c", LayerKind::ConvInt, (8, 8, 3), 3, 1, 1, 4, None),
+                Layer::fc("f", LayerKind::FcBin, 8 * 8 * 4, 2),
+            ],
+        };
+        let w: Vec<BinWeights> =
+            net.layers.iter().map(|l| BinWeights::random(l.z2, l.fanin(), 1)).collect();
+        assert!(BatchExecutor::new(net, w).is_err());
+        // Weight shape mismatch → rejected.
+        let net = tiny_bnn(8, 4, 3);
+        let mut w: Vec<BinWeights> =
+            net.layers.iter().map(|l| BinWeights::random(l.z2, l.fanin(), 1)).collect();
+        w[1] = BinWeights::random(3, 9, 1);
+        assert!(BatchExecutor::new(net, w).is_err());
+        // Wrong image geometry → rejected per request.
+        let exec = tiny_executor();
+        let req = BatchRequest::new(vec![BitTensor::random(4, 4, 4, 1)]);
+        assert!(exec.run(&req).is_err());
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let exec = tiny_executor();
+        let got = exec.run(&BatchRequest::default()).unwrap();
+        assert!(got.images.is_empty());
+        assert_eq!(got.cycles, 0);
+        assert_eq!(got.images_per_sec(), 0.0);
+        assert_eq!(got.simulated_us_per_image(), 0.0);
+    }
+
+    #[test]
+    fn batch_perf_scales_exactly() {
+        let net = crate::bnn::binarynet_cifar10();
+        let cfg = ArchConfig::tulip();
+        let single = NetworkPerf::model(&net, &cfg);
+        let bp = BatchPerf::model(&net, &cfg, 17);
+        assert_eq!(bp.total_cycles(), single.total_aggregate().cycles * 17);
+        let mut one = Activity::default();
+        for l in &single.layers {
+            one.merge(&l.activity);
+        }
+        assert_eq!(bp.activity(), one.scaled(17));
+        assert!(bp.images_per_sec() > 0.0);
+    }
+}

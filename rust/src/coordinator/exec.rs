@@ -233,10 +233,19 @@ pub struct Aggregate {
 }
 
 impl NetworkPerf {
-    /// Run the model for a network on an architecture.
+    /// Run the model for a network on an architecture. Programs come from
+    /// the process-global schedule cache (§IV-E: one sequence generator,
+    /// broadcast) — each distinct layer shape is planned once per process,
+    /// no matter how many models, batches or threads ask for it.
     pub fn model(net: &Network, cfg: &ArchConfig) -> Self {
-        let mut sg = SequenceGenerator::new();
-        let layers = net.layers.iter().map(|l| layer_perf(l, cfg, &mut sg)).collect();
+        let mut sg = SequenceGenerator::with_cache(crate::scheduler::ProgramCache::global());
+        Self::model_with(net, cfg, &mut sg)
+    }
+
+    /// Run the model with a caller-provided sequence generator (private
+    /// cache accounting, or a cache built for non-default arch params).
+    pub fn model_with(net: &Network, cfg: &ArchConfig, sg: &mut SequenceGenerator) -> Self {
+        let layers = net.layers.iter().map(|l| layer_perf(l, cfg, &mut *sg)).collect();
         NetworkPerf {
             arch: cfg.kind,
             network: net.name.clone(),

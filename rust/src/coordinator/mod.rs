@@ -8,9 +8,11 @@
 //! bit-true engine executes, so the analytic model cannot drift from the
 //! hardware model.
 
+pub mod batch;
 pub mod exec;
 pub mod report;
 pub mod tiling;
 
+pub use batch::{argmax, BatchExecutor, BatchPerf, BatchRequest, BatchResult, ImageResult};
 pub use exec::{LayerPerf, NetworkPerf};
 pub use tiling::{table3, tiling, Tiling};

@@ -111,7 +111,8 @@ impl Comparison {
     pub fn run(net: &Network, conv_only: bool) -> Self {
         let t = NetworkPerf::model(net, &ArchConfig::tulip());
         let y = NetworkPerf::model(net, &ArchConfig::yodann());
-        let pick = |p: &NetworkPerf| if conv_only { p.conv_aggregate() } else { p.total_aggregate() };
+        let pick =
+            |p: &NetworkPerf| if conv_only { p.conv_aggregate() } else { p.total_aggregate() };
         Comparison {
             network: net.name.clone(),
             dataset: net.dataset.clone(),

@@ -51,6 +51,30 @@ pub struct Activity {
 }
 
 impl Activity {
+    /// The activity of `k` identical repetitions (e.g. a batch of `k`
+    /// images through the same network): every counter scales linearly, so
+    /// the batched analytic model is exactly `k ×` the single-image model.
+    pub fn scaled(&self, k: u64) -> Activity {
+        Activity {
+            pe_neuron_evals: self.pe_neuron_evals * k,
+            pe_gated_neuron_cycles: self.pe_gated_neuron_cycles * k,
+            pe_reg_accesses: self.pe_reg_accesses * k,
+            mac_int_cycles: self.mac_int_cycles * k,
+            mac_bin_cycles: self.mac_bin_cycles * k,
+            mac_idle_cycles: self.mac_idle_cycles * k,
+            simple_mac_cycles: self.simple_mac_cycles * k,
+            offchip_bits: self.offchip_bits * k,
+            offchip_weight_bits: self.offchip_weight_bits * k,
+            l2_write_bits: self.l2_write_bits * k,
+            l2_to_l1_bits: self.l2_to_l1_bits * k,
+            l1_read_bits: self.l1_read_bits * k,
+            kernel_shift_bits: self.kernel_shift_bits * k,
+            outbuf_bits: self.outbuf_bits * k,
+            xnor_bits: self.xnor_bits * k,
+            total_cycles: self.total_cycles * k,
+        }
+    }
+
     pub fn merge(&mut self, o: &Activity) {
         self.pe_neuron_evals += o.pe_neuron_evals;
         self.pe_gated_neuron_cycles += o.pe_gated_neuron_cycles;
@@ -261,6 +285,22 @@ mod tests {
         // within ~2% of each other by construction (§V-C).
         assert!((t.processing_um2 - y.processing_um2).abs() / y.processing_um2 < 0.05);
         assert!((t.total_mm2() - calib::DIE_AREA_MM2).abs() / calib::DIE_AREA_MM2 < 0.15);
+    }
+
+    #[test]
+    fn scaled_is_repeated_merge() {
+        let a = Activity {
+            pe_neuron_evals: 3,
+            offchip_bits: 5,
+            total_cycles: 10,
+            ..Default::default()
+        };
+        let mut m = Activity::default();
+        for _ in 0..4 {
+            m.merge(&a);
+        }
+        assert_eq!(a.scaled(4), m);
+        assert_eq!(a.scaled(1), a);
     }
 
     #[test]

@@ -14,10 +14,12 @@
 //!
 //! ## Layer map
 //! * **L3 (this crate)** — the TULIP system: threshold-neuron cell model
-//!   ([`neuron`]), the TULIP-PE ([`pe`]), the RPO adder-tree scheduler and
-//!   all primitive schedules ([`scheduler`]), the YodaNN baseline
-//!   ([`baseline`]), the top-level architecture ([`arch`]), the tiling /
-//!   network-walk coordinator ([`coordinator`]), energy model ([`energy`]),
+//!   ([`neuron`]), the TULIP-PE ([`pe`]), the RPO adder-tree scheduler,
+//!   all primitive schedules and the thread-safe program cache
+//!   ([`scheduler`]), the YodaNN baseline ([`baseline`]), the top-level
+//!   architecture ([`arch`]), the tiling / network-walk coordinator and
+//!   the batched rayon-parallel inference engine ([`coordinator`]),
+//!   energy model ([`energy`]),
 //!   BNN IR + model zoo ([`bnn`]), bit-true & analytic simulation engines
 //!   ([`sim`]), PJRT golden-model runtime ([`runtime`]) and paper-table
 //!   emitters ([`metrics`]).

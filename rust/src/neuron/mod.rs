@@ -20,7 +20,9 @@
 pub mod characteristics;
 pub mod function;
 
-pub use characteristics::{table1_improvements, CellCharacteristics, Corner, CMOS_EQUIVALENT, HW_NEURON};
+pub use characteristics::{
+    table1_improvements, CellCharacteristics, Corner, CMOS_EQUIVALENT, HW_NEURON,
+};
 pub use function::ThresholdFunction;
 
 /// The programmable threshold-logic cell used by every TULIP-PE neuron:
@@ -72,8 +74,10 @@ impl HwNeuron {
     /// scheduler to initialize latches.
     #[inline]
     pub fn clock(&mut self, a: bool, b: bool, c: bool, d: bool, t: i32) -> bool {
-        let sum =
-            WEIGHT_A * a as i32 + WEIGHT_BCD * b as i32 + WEIGHT_BCD * c as i32 + WEIGHT_BCD * d as i32;
+        let sum = WEIGHT_A * a as i32
+            + WEIGHT_BCD * b as i32
+            + WEIGHT_BCD * c as i32
+            + WEIGHT_BCD * d as i32;
         self.state = sum >= t;
         self.evals += 1;
         self.state

@@ -251,7 +251,8 @@ mod tests {
     #[test]
     fn phase0_cannot_read_fresh() {
         let mut cw = ControlWord::idle();
-        cw.neurons[1] = NeuronCtl { gated: false, phase: 0, a: Src::NFresh(2), ..NeuronCtl::idle() };
+        cw.neurons[1] =
+            NeuronCtl { gated: false, phase: 0, a: Src::NFresh(2), ..NeuronCtl::idle() };
         assert!(cw.validate().is_err());
     }
 

@@ -259,7 +259,8 @@ mod tests {
         let mut pe = TulipPe::new();
         let mut sum_bits = Vec::new();
         for i in 0..4 {
-            let mut cw = fa_word(Src::Ext(0), Src::Ext(1), if i == 0 { Src::Zero } else { Src::N(2) });
+            let mut cw =
+                fa_word(Src::Ext(0), Src::Ext(1), if i == 0 { Src::Zero } else { Src::N(2) });
             cw.writes = vec![RegWrite { reg: 0, bit: i, src: WSrc::N(1) }];
             pe.step(&cw, &[x[i], y[i]]);
             sum_bits.push(pe.neuron_out(1));

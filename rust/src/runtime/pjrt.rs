@@ -1,0 +1,125 @@
+//! The real PJRT backend (feature `pjrt`): loads HLO-text artifacts,
+//! compiles them on the PJRT CPU client and executes them from rust.
+//!
+//! Interchange is **HLO text** (not serialized `HloModuleProto`): jax ≥ 0.5
+//! emits 64-bit instruction ids which the crate's xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md
+//! and DESIGN.md).
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::{Path, PathBuf};
+
+/// A loaded, compiled golden model.
+pub struct GoldenModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// The PJRT runtime: one CPU client, many compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, artifacts_dir: artifacts_dir.as_ref().to_path_buf() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Path of an artifact by stem, e.g. `"bnn_forward"` →
+    /// `artifacts/bnn_forward.hlo.txt`.
+    pub fn artifact_path(&self, stem: &str) -> PathBuf {
+        self.artifacts_dir.join(format!("{stem}.hlo.txt"))
+    }
+
+    /// Is the artifact present? (Tests skip gracefully when `make
+    /// artifacts` has not run.)
+    pub fn has_artifact(&self, stem: &str) -> bool {
+        self.artifact_path(stem).exists()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load(&self, stem: &str) -> Result<GoldenModel> {
+        let path = self.artifact_path(stem);
+        if !path.exists() {
+            bail!("artifact {} not found — run `make artifacts`", path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("PJRT compile")?;
+        Ok(GoldenModel { exe, name: stem.to_string() })
+    }
+}
+
+impl GoldenModel {
+    /// Execute on literal inputs; the python side lowers with
+    /// `return_tuple=True`, so the single output is a tuple that we
+    /// flatten.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs).context("PJRT execute")?;
+        let out = result[0][0].to_literal_sync()?;
+        let tuple = out.to_tuple()?;
+        Ok(tuple)
+    }
+
+    /// Execute and decode a single `i32` tensor output.
+    pub fn run_i32(&self, inputs: &[xla::Literal]) -> Result<Vec<i32>> {
+        let outs = self.run(inputs)?;
+        let first = outs.into_iter().next().context("empty output tuple")?;
+        Ok(first.to_vec::<i32>()?)
+    }
+}
+
+/// Build an `i32` literal of the given shape from a slice.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape/product mismatch: {dims:?} vs {}", data.len());
+    let flat = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims_i64)?)
+}
+
+/// Encode a binary tensor as the `{0,1}` i32 layout the golden model uses.
+pub fn literal_bits(bits: &[bool], dims: &[usize]) -> Result<xla::Literal> {
+    let data: Vec<i32> = bits.iter().map(|&b| b as i32).collect();
+    literal_i32(&data, dims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Literal helpers round-trip shapes (no artifacts needed).
+    #[test]
+    fn literal_helpers() {
+        let l = literal_i32(&[1, 2, 3, 4, 5, 6], &[2, 3]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(literal_i32(&[1, 2], &[3]).is_err());
+        let b = literal_bits(&[true, false, true, true], &[4]).unwrap();
+        assert_eq!(b.to_vec::<i32>().unwrap(), vec![1, 0, 1, 1]);
+    }
+
+    /// Missing artifacts fail with a helpful message rather than a crash.
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let rt = Runtime::new("/nonexistent-artifacts").unwrap();
+        assert!(!rt.has_artifact("nope"));
+        let err = match rt.load("nope") {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+        assert!(!rt.platform().is_empty());
+    }
+}

@@ -1,0 +1,87 @@
+//! Runtime stub compiled when the `pjrt` feature is off.
+//!
+//! Keeps the `runtime` surface (construction, artifact discovery, load)
+//! available so the CLI and integration tests build in environments without
+//! the vendored `xla` crate; anything that would actually need the PJRT
+//! client reports a clear error instead. The literal-conversion helpers and
+//! `GoldenModel::run*` are deliberately absent here — they are unusable
+//! without `xla::Literal`, and their callers (`tests/golden.rs`,
+//! `examples/e2e_inference.rs`) are gated on the feature.
+
+use crate::Result;
+use anyhow::bail;
+use std::path::{Path, PathBuf};
+
+/// A loaded, compiled golden model. Never constructed by the stub — `load`
+/// always errors first — but the type keeps caller code compiling.
+pub struct GoldenModel {
+    pub name: String,
+}
+
+/// Artifact bookkeeping without a PJRT client.
+pub struct Runtime {
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Root the runtime at an artifacts directory (always succeeds; only
+    /// `load` needs the real backend).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(Runtime { artifacts_dir: artifacts_dir.as_ref().to_path_buf() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        "unavailable (built without the `pjrt` feature)".to_string()
+    }
+
+    /// Path of an artifact by stem, e.g. `"bnn_forward"` →
+    /// `artifacts/bnn_forward.hlo.txt`.
+    pub fn artifact_path(&self, stem: &str) -> PathBuf {
+        self.artifacts_dir.join(format!("{stem}.hlo.txt"))
+    }
+
+    /// Is the artifact present on disk?
+    pub fn has_artifact(&self, stem: &str) -> bool {
+        self.artifact_path(stem).exists()
+    }
+
+    /// Always an error: a missing artifact reports the same message as the
+    /// real backend; a present one reports the missing feature.
+    pub fn load(&self, stem: &str) -> Result<GoldenModel> {
+        let path = self.artifact_path(stem);
+        if !path.exists() {
+            bail!("artifact {} not found — run `make artifacts`", path.display());
+        }
+        bail!(
+            "artifact {} present, but the PJRT runtime is unavailable: rebuild with \
+             `--features pjrt` (requires the vendored `xla` crate, see rust/Cargo.toml)",
+            path.display()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let rt = Runtime::new("/nonexistent-artifacts").unwrap();
+        assert!(!rt.has_artifact("nope"));
+        let err = rt.load("nope").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn present_artifact_reports_missing_feature() {
+        let dir = std::env::temp_dir().join("tulip-stub-artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("present.hlo.txt"), "HloModule m {}").unwrap();
+        let rt = Runtime::new(&dir).unwrap();
+        assert!(rt.has_artifact("present"));
+        let err = rt.load("present").unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+    }
+}

@@ -455,7 +455,7 @@ mod tests {
         // 96 leaves, then 48+24+12+6+3 → (2 +) … pairwise with promotion.
         let leaves = t.nodes.iter().filter(|n| n.children.is_none()).count();
         assert_eq!(leaves, 96);
-        assert_eq!(t.root_width() >= 9, true, "must hold values up to 288");
+        assert!(t.root_width() >= 9, "must hold values up to 288");
     }
 
     /// The popcount computed through the full bit-true PE execution equals

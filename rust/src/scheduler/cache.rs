@@ -1,0 +1,283 @@
+//! The program cache — thread-safe memoization of sequence-generator
+//! output (§IV-E brought to serving scale).
+//!
+//! The hardware has **one** reconfigurable sequence generator whose control
+//! stream is broadcast to every TULIP-PE; the simulator equivalent is one
+//! program per distinct operation descriptor, shared by `Arc` across every
+//! PE — and, since this cache is `Sync`, across every worker thread of the
+//! batched inference engine (`coordinator::batch`). Each unique layer shape
+//! is scheduled **once per process** instead of once per image per layer:
+//! schedule generation runs the backtracking register allocator
+//! (`adder_tree::plan_placements`), which is by far the most expensive
+//! per-layer setup cost.
+//!
+//! Reads take a shared `RwLock` guard (the steady state is read-only);
+//! misses build outside any lock and insert with last-writer-loses
+//! semantics so every consumer ends up broadcasting the same `Arc`, exactly
+//! like the hardware broadcasts one control stream.
+
+use super::seqgen::{CachedProgram, OpDesc};
+use super::{adder_tree, ops, Loc, Schedule};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// PE-array parameters the generated control streams depend on. Programs
+/// cached under one parameter set are only valid for identically shaped
+/// PEs, so these are part of the cache identity: callers must not share a
+/// cache between differently configured arrays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArchParams {
+    /// Neurons per PE (the `[2,1,1,1;T]` cell count, §IV-A). Must match
+    /// the compiled-in `pe::NUM_NEURONS` — checked by
+    /// [`ProgramCache::for_arch`].
+    pub num_neurons: usize,
+    /// Local register width per neuron. Must match `pe::REG_BITS` —
+    /// checked by [`ProgramCache::for_arch`].
+    pub reg_bits: usize,
+    /// Largest fan-in a single adder-tree pass may be asked to sum before
+    /// the coordinator must chunk the node (§IV-C). Enforced: asking this
+    /// cache for a sum tree or threshold node beyond the limit panics with
+    /// a pointer at the chunk-and-accumulate path instead of failing deep
+    /// inside the register allocator.
+    pub max_tree_fanin: usize,
+}
+
+impl Default for ArchParams {
+    fn default() -> Self {
+        ArchParams {
+            num_neurons: crate::pe::NUM_NEURONS,
+            reg_bits: crate::pe::REG_BITS,
+            max_tree_fanin: 1023,
+        }
+    }
+}
+
+/// Thread-safe schedule cache: `OpDesc` → generated program, keyed under
+/// one [`ArchParams`] set. Cheap to share (`Arc<ProgramCache>`); programs
+/// themselves are shared by reference, never cloned per PE.
+#[derive(Debug, Default)]
+pub struct ProgramCache {
+    params: ArchParams,
+    map: RwLock<HashMap<OpDesc, Arc<CachedProgram>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ProgramCache {
+    /// A fresh cache for the paper's PE geometry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A fresh cache for an explicit PE geometry. The schedule builders
+    /// are compiled for the paper's 4-neuron / 16-bit-register PE, so a
+    /// geometry that differs from the crate constants is rejected rather
+    /// than silently handing out default-geometry programs.
+    pub fn for_arch(params: ArchParams) -> Self {
+        assert_eq!(
+            (params.num_neurons, params.reg_bits),
+            (crate::pe::NUM_NEURONS, crate::pe::REG_BITS),
+            "schedule builders are compiled for the paper's PE geometry"
+        );
+        ProgramCache { params, ..Default::default() }
+    }
+
+    /// The process-wide shared cache (paper geometry). Every consumer that
+    /// does not need private hit/miss accounting should use this one — it
+    /// is what makes "schedule once per process" literally true across
+    /// batch workers, the analytic model and the bit-true engine.
+    pub fn global() -> Arc<ProgramCache> {
+        static GLOBAL: OnceLock<Arc<ProgramCache>> = OnceLock::new();
+        Arc::clone(GLOBAL.get_or_init(|| Arc::new(ProgramCache::new())))
+    }
+
+    /// The PE geometry this cache's programs were generated for.
+    pub fn params(&self) -> ArchParams {
+        self.params
+    }
+
+    /// Get (or build) the program for an operation descriptor.
+    pub fn program(&self, desc: &OpDesc) -> Arc<CachedProgram> {
+        if let Some(p) = self.map.read().expect("program cache poisoned").get(desc) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(p);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Build outside any lock: generation may recurse into `program`
+        // (a threshold node shares its sum-tree plan) and can take
+        // milliseconds for large fan-ins.
+        let built = Arc::new(self.build(desc));
+        let mut map = self.map.write().expect("program cache poisoned");
+        // A racing thread may have inserted meanwhile; keep the first entry
+        // so every consumer broadcasts the same `Arc`.
+        Arc::clone(&*map.entry(desc.clone()).or_insert(built))
+    }
+
+    /// Cycle count for an op (cached; the analytic model's entry point).
+    pub fn cycles(&self, desc: &OpDesc) -> u64 {
+        self.program(desc).schedule.cycles() as u64
+    }
+
+    /// (cache hits, misses) since construction. Under concurrent misses of
+    /// the same descriptor both builders count a miss; the cached program
+    /// is still unique.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Number of distinct programs cached.
+    pub fn len(&self) -> usize {
+        self.map.read().expect("program cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn build(&self, desc: &OpDesc) -> CachedProgram {
+        match *desc {
+            OpDesc::ThresholdNode { n, t_popcount } => {
+                // §Perf: a conv layer has one distinct threshold per OFM
+                // channel but a single tree shape, and tree planning (the
+                // backtracking register allocator) dominates generation.
+                // Share the cached sum-tree program across thresholds and
+                // append only the sequential comparison — generation per
+                // extra channel drops from a full re-plan to a clone+append.
+                let base = self.program(&OpDesc::SumTree { n });
+                let sum_loc = base.out_loc.expect("sum tree leaves its result in a register");
+                // Clone without the visualization notes: cached programs
+                // are executed thousands of times but never pretty-printed,
+                // and the per-word String clones dominate the copy cost.
+                let mut schedule = Schedule {
+                    words: base
+                        .schedule
+                        .words
+                        .iter()
+                        .map(|w| crate::pe::ControlWord { note: None, ..w.clone() })
+                        .collect(),
+                    ext_map: base.schedule.ext_map.clone(),
+                };
+                let cmp = ops::ge_const(sum_loc, t_popcount, ops::CMP_N);
+                schedule.extend(cmp);
+                CachedProgram { schedule, out_neuron: Some(ops::CMP_N), out_loc: Some(sum_loc) }
+            }
+            OpDesc::SumTree { n } => {
+                assert!(
+                    n <= self.params.max_tree_fanin,
+                    "fan-in {n} exceeds this architecture's single-pass tree limit of {} — \
+                     chunk the node and accumulate (§IV-C), as coordinator::exec::pe_node_cost \
+                     does",
+                    self.params.max_tree_fanin
+                );
+                let (schedule, loc, _) = adder_tree::sum_tree(n);
+                CachedProgram { schedule, out_neuron: None, out_loc: Some(loc) }
+            }
+            OpDesc::Maxpool { n } => {
+                let products: Vec<usize> = (0..n).collect();
+                let schedule = ops::maxpool_or(&products, ops::CMP_N);
+                CachedProgram { schedule, out_neuron: Some(ops::CMP_N), out_loc: None }
+            }
+            OpDesc::Relu { w, t } => {
+                // Input in R1[0..w], output to R2[0..w].
+                let x = Loc::Reg { reg: 0, lsb: 0, width: w };
+                let schedule = ops::relu(x, t, 1, 0);
+                CachedProgram {
+                    schedule,
+                    out_neuron: None,
+                    out_loc: Some(Loc::Reg { reg: 1, lsb: 0, width: w }),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::TulipPe;
+
+    #[test]
+    fn hit_returns_the_broadcast_program() {
+        let cache = ProgramCache::new();
+        let d = OpDesc::ThresholdNode { n: 96, t_popcount: 40 };
+        let a = cache.program(&d);
+        let b = cache.program(&d);
+        assert!(Arc::ptr_eq(&a, &b), "a hit must return the broadcast Arc");
+        // ThresholdNode + its shared SumTree: two entries, two misses.
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats(), (1, 2));
+    }
+
+    /// A cache hit is indistinguishable from a fresh generation: same
+    /// control words, same external demand, same bit-true behaviour.
+    #[test]
+    fn cached_program_equals_fresh_generation() {
+        let warm = ProgramCache::new();
+        let d = OpDesc::ThresholdNode { n: 48, t_popcount: 20 };
+        let _ = warm.program(&d); // miss: populate
+        let hit = warm.program(&d); // hit
+        let fresh = ProgramCache::new().program(&d);
+        assert_eq!(hit.schedule.words, fresh.schedule.words);
+        assert_eq!(hit.schedule.ext_map, fresh.schedule.ext_map);
+        assert_eq!(hit.out_neuron, fresh.out_neuron);
+        assert_eq!(hit.out_loc, fresh.out_loc);
+        let bits: Vec<bool> = (0..48).map(|i| i % 3 != 0).collect();
+        let (mut p1, mut p2) = (TulipPe::new(), TulipPe::new());
+        hit.schedule.run_on(&mut p1, &bits);
+        fresh.schedule.run_on(&mut p2, &bits);
+        let (o1, o2) = (hit.out_neuron.unwrap(), fresh.out_neuron.unwrap());
+        assert_eq!(p1.neuron_out(o1), p2.neuron_out(o2));
+    }
+
+    /// The cache is `Sync`: concurrent consumers all end up holding the
+    /// same broadcast `Arc`, even when they race on the initial build.
+    #[test]
+    fn concurrent_consumers_share_one_program() {
+        let cache = Arc::new(ProgramCache::new());
+        let d = OpDesc::ThresholdNode { n: 288, t_popcount: 144 };
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let cache = Arc::clone(&cache);
+                let d = d.clone();
+                std::thread::spawn(move || cache.program(&d))
+            })
+            .collect();
+        let progs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let canonical = cache.program(&d);
+        for p in &progs {
+            assert!(Arc::ptr_eq(p, &canonical), "all threads must hold the map's entry");
+        }
+        assert_eq!(cache.len(), 2, "one threshold program + one shared sum tree");
+    }
+
+    #[test]
+    fn global_cache_is_a_singleton() {
+        let a = ProgramCache::global();
+        let b = ProgramCache::global();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.params(), ArchParams::default());
+    }
+
+    #[test]
+    fn arch_params_are_cache_identity() {
+        let p = ArchParams { max_tree_fanin: 768, ..Default::default() };
+        let cache = ProgramCache::for_arch(p);
+        assert_eq!(cache.params().max_tree_fanin, 768);
+        assert_eq!(cache.params().num_neurons, crate::pe::NUM_NEURONS);
+        assert!(cache.is_empty());
+        // Within the limit the tightened cache behaves normally.
+        let ok = cache.program(&OpDesc::SumTree { n: 768 });
+        assert_ne!(ok.schedule.cycles(), 0);
+    }
+
+    /// The fan-in limit is enforced, not just recorded: oversized nodes
+    /// fail loudly at the cache instead of deep in the register allocator.
+    #[test]
+    #[should_panic(expected = "single-pass tree limit")]
+    fn oversized_fanin_rejected() {
+        let params = ArchParams { max_tree_fanin: 768, ..Default::default() };
+        let cache = ProgramCache::for_arch(params);
+        let _ = cache.program(&OpDesc::ThresholdNode { n: 800, t_popcount: 400 });
+    }
+}

@@ -11,13 +11,17 @@
 //! * [`adder_tree`] — tree construction, RPO walk, register allocation, and
 //!   the complete threshold-node schedule (Fig. 2b).
 //! * [`storage`] — the closed-form storage analysis of §III-B.
-//! * [`seqgen`] — the reconfigurable sequence generator (schedule cache).
+//! * [`cache`] — the thread-safe program cache (schedule once per process).
+//! * [`seqgen`] — the reconfigurable sequence generator (a cache handle).
 
 pub mod adder_tree;
+pub mod cache;
 pub mod cla;
 pub mod ops;
 pub mod seqgen;
 pub mod storage;
+
+pub use cache::{ArchParams, ProgramCache};
 
 use crate::pe::{ControlWord, TulipPe};
 

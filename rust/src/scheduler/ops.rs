@@ -67,7 +67,14 @@ fn bit_src(loc: &Loc, i: usize, row: &mut Vec<ExtSpec>) -> Src {
 /// latch; the sum neuron (phase 1) computes
 /// `s_i = [2·¬c_i + x_i + y_i + c_{i−1} ≥ 3]` via the neuron cascade. The
 /// final cycle writes both `s_{w−1}` and the carry-out.
-pub fn add(x: Loc, y: Loc, dst_reg: usize, dst_lsb: usize, sum_n: usize, carry_n: usize) -> Schedule {
+pub fn add(
+    x: Loc,
+    y: Loc,
+    dst_reg: usize,
+    dst_lsb: usize,
+    sum_n: usize,
+    carry_n: usize,
+) -> Schedule {
     assert_ne!(sum_n, carry_n, "sum and carry need distinct neurons");
     if let (Some(rx), Some(ry)) = (x.reg(), y.reg()) {
         assert_ne!(rx, ry, "operands must live in distinct registers (one read port each)");
@@ -241,6 +248,9 @@ pub fn ge_const(x: Loc, t: i64, out_n: usize) -> Schedule {
     sched
 }
 
+/// The product stream a maxpool schedule consumes (window bits in order).
+type ProductIter<'a> = std::iter::Peekable<std::iter::Copied<std::slice::Iter<'a, usize>>>;
+
 /// Max-pooling (Fig. 5b): in a BNN this is an OR over the pooling window.
 /// A single neuron ORs up to four window bits in the first cycle
 /// (`[2a + b + c + d ≥ 1]`) and folds three more per subsequent cycle
@@ -253,7 +263,7 @@ pub fn maxpool_or(products: &[usize], out_n: usize) -> Schedule {
     while it.peek().is_some() || first {
         let mut row = Vec::new();
         let mut cw = ControlWord::idle();
-        let take = |row: &mut Vec<ExtSpec>, ch: usize, it: &mut std::iter::Peekable<std::iter::Copied<std::slice::Iter<usize>>>| -> Src {
+        let take = |row: &mut Vec<ExtSpec>, ch: usize, it: &mut ProductIter| -> Src {
             match it.next() {
                 Some(p) => {
                     set_ext(row, ch, ExtSpec::Product(p));
@@ -320,7 +330,13 @@ pub fn relu(x: Loc, t: i64, dst_reg: usize, dst_lsb: usize) -> Schedule {
 
 /// Stream a `w`-bit operand from an input channel into a register, one bit
 /// per cycle (operand loading from the image/kernel buffers).
-pub fn load_stream(channel: usize, base: usize, w: usize, dst_reg: usize, dst_lsb: usize) -> Schedule {
+pub fn load_stream(
+    channel: usize,
+    base: usize,
+    w: usize,
+    dst_reg: usize,
+    dst_lsb: usize,
+) -> Schedule {
     let mut sched = Schedule::new();
     for i in 0..w {
         let mut row = Vec::new();

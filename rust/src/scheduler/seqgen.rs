@@ -5,16 +5,18 @@
 //! registers and the multiplexers of the TULIP-PEs. The control signals are
 //! broadcast to all the processing units."
 //!
-//! In the simulator this is a **schedule factory with a cache**: control
-//! streams are generated once per distinct operation descriptor and
-//! broadcast (shared by reference) to every PE in the array. The cache is
-//! also the L3 hot-path optimization — schedule generation is O(N) work
-//! that would otherwise sit inside the per-window loop.
+//! In the simulator this is a **handle over a schedule cache**
+//! ([`super::cache::ProgramCache`]): control streams are generated once per
+//! distinct operation descriptor and broadcast (shared by reference) to
+//! every PE in the array. The cache is also the L3 hot-path optimization —
+//! schedule generation is O(N) planner work that would otherwise sit inside
+//! the per-window loop. A generator built with [`SequenceGenerator::new`]
+//! owns a private cache (useful for hit/miss accounting in tests); one
+//! built with [`SequenceGenerator::with_cache`] shares programs with every
+//! other holder of that cache — across threads, in the batched engine.
 
-
-use super::ops;
+use super::cache::ProgramCache;
 use super::{Loc, Schedule};
-use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Descriptor of an operation the controller can sequence.
@@ -30,12 +32,11 @@ pub enum OpDesc {
     Relu { w: usize, t: i64 },
 }
 
-/// The sequence generator: generates + caches control-word programs.
+/// The sequence generator: a handle that generates + caches control-word
+/// programs through its [`ProgramCache`].
 #[derive(Debug, Default)]
 pub struct SequenceGenerator {
-    cache: HashMap<OpDesc, Arc<CachedProgram>>,
-    hits: u64,
-    misses: u64,
+    cache: Arc<ProgramCache>,
 }
 
 /// A cached program together with the metadata the runners need.
@@ -49,83 +50,34 @@ pub struct CachedProgram {
 }
 
 impl SequenceGenerator {
+    /// A generator with its own private cache.
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Get (or build) the program for an operation.
-    pub fn program(&mut self, desc: &OpDesc) -> Arc<CachedProgram> {
-        if let Some(p) = self.cache.get(desc) {
-            self.hits += 1;
-            return Arc::clone(p);
-        }
-        self.misses += 1;
-        let prog = Arc::new(self.build(desc));
-        self.cache.insert(desc.clone(), Arc::clone(&prog));
-        prog
+    /// A generator sharing an existing (possibly process-global) cache.
+    pub fn with_cache(cache: Arc<ProgramCache>) -> Self {
+        SequenceGenerator { cache }
     }
 
-    fn build(&mut self, desc: &OpDesc) -> CachedProgram {
-        match *desc {
-            OpDesc::ThresholdNode { n, t_popcount } => {
-                // §Perf: a conv layer has one distinct threshold per OFM
-                // channel but a single tree shape, and tree planning (the
-                // backtracking register allocator) dominates generation.
-                // Share the cached sum-tree program across thresholds and
-                // append only the sequential comparison — generation per
-                // extra channel drops from a full re-plan to a clone+append.
-                let base = self.program(&OpDesc::SumTree { n });
-                let sum_loc = base.out_loc.expect("sum tree leaves its result in a register");
-                // Clone without the visualization notes: cached programs
-                // are executed thousands of times but never pretty-printed,
-                // and the per-word String clones dominate the copy cost.
-                let mut schedule = Schedule {
-                    words: base
-                        .schedule
-                        .words
-                        .iter()
-                        .map(|w| crate::pe::ControlWord { note: None, ..w.clone() })
-                        .collect(),
-                    ext_map: base.schedule.ext_map.clone(),
-                };
-                let cmp = ops::ge_const(sum_loc, t_popcount, ops::CMP_N);
-                schedule.extend(cmp);
-                CachedProgram {
-                    schedule,
-                    out_neuron: Some(ops::CMP_N),
-                    out_loc: Some(sum_loc),
-                }
-            }
-            OpDesc::SumTree { n } => {
-                let (schedule, loc, _) = super::adder_tree::sum_tree(n);
-                CachedProgram { schedule, out_neuron: None, out_loc: Some(loc) }
-            }
-            OpDesc::Maxpool { n } => {
-                let products: Vec<usize> = (0..n).collect();
-                let schedule = ops::maxpool_or(&products, ops::CMP_N);
-                CachedProgram { schedule, out_neuron: Some(ops::CMP_N), out_loc: None }
-            }
-            OpDesc::Relu { w, t } => {
-                // Input in R1[0..w], output to R2[0..w].
-                let x = Loc::Reg { reg: 0, lsb: 0, width: w };
-                let schedule = ops::relu(x, t, 1, 0);
-                CachedProgram {
-                    schedule,
-                    out_neuron: None,
-                    out_loc: Some(Loc::Reg { reg: 1, lsb: 0, width: w }),
-                }
-            }
-        }
+    /// The underlying cache (share it with other generators / threads).
+    pub fn cache(&self) -> Arc<ProgramCache> {
+        Arc::clone(&self.cache)
+    }
+
+    /// Get (or build) the program for an operation.
+    pub fn program(&mut self, desc: &OpDesc) -> Arc<CachedProgram> {
+        self.cache.program(desc)
     }
 
     /// Cycle count for an op (cached; the analytic model's entry point).
     pub fn cycles(&mut self, desc: &OpDesc) -> u64 {
-        self.program(desc).schedule.cycles() as u64
+        self.cache.cycles(desc)
     }
 
     /// (cache hits, misses) — exercised by the hot-path bench.
     pub fn cache_stats(&self) -> (u64, u64) {
-        (self.hits, self.misses)
+        self.cache.stats()
     }
 }
 
@@ -185,5 +137,18 @@ mod tests {
         let p = sg.program(&OpDesc::Relu { w: 8, t: 5 });
         assert_eq!(p.schedule.cycles(), 16);
         assert_eq!(p.out_loc, Some(Loc::Reg { reg: 1, lsb: 0, width: 8 }));
+    }
+
+    /// Generators built over the same cache share programs by pointer; a
+    /// private generator does not.
+    #[test]
+    fn shared_cache_shares_programs() {
+        let cache = Arc::new(super::super::cache::ProgramCache::new());
+        let mut a = SequenceGenerator::with_cache(Arc::clone(&cache));
+        let mut b = SequenceGenerator::with_cache(cache);
+        let d = OpDesc::SumTree { n: 27 };
+        assert!(Arc::ptr_eq(&a.program(&d), &b.program(&d)));
+        let mut private = SequenceGenerator::new();
+        assert!(!Arc::ptr_eq(&private.program(&d), &b.program(&d)));
     }
 }

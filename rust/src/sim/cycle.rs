@@ -10,7 +10,7 @@
 
 use crate::arch::unit::{xnor_products, xnor_products_into, PeArray};
 use crate::bnn::tensor::{BinWeights, BitTensor};
-use crate::bnn::Layer;
+use crate::bnn::{Layer, Network};
 use crate::pe::PeStats;
 use crate::scheduler::seqgen::{OpDesc, SequenceGenerator};
 
@@ -153,11 +153,72 @@ pub fn fc_bin_cycle(
     (bits, scores, wall_cycles)
 }
 
+/// Result of a whole-network bit-true forward pass.
+#[derive(Debug, Clone)]
+pub struct ForwardResult {
+    /// Raw final-layer popcount scores (argmax = predicted class).
+    pub scores: Vec<i64>,
+    /// Chip cycles summed over every layer (lockstep wall clock).
+    pub cycles: u64,
+    /// PE activity for this image alone — the array's counters are reset on
+    /// entry, so consecutive calls yield independently summable records.
+    pub stats: PeStats,
+}
+
+/// Run a whole **binary** network bit-true on the PE array: conv layers
+/// (with their fused max-pool) then the FC stack, returning the raw scores
+/// of the final layer. This is the per-image unit of work of the batched
+/// inference engine (`coordinator::batch`); integer layers are out of scope
+/// here exactly as they are for the TULIP-PEs (§V-C routes them to MACs).
+pub fn forward_bin_cycle(
+    array: &mut PeArray,
+    sg: &mut SequenceGenerator,
+    input: &BitTensor,
+    net: &Network,
+    weights: &[BinWeights],
+) -> ForwardResult {
+    assert_eq!(net.layers.len(), weights.len(), "one weight set per layer");
+    array.reset_stats();
+    let mut cycles = 0u64;
+    let mut act = input.clone();
+    let mut flat: Option<Vec<bool>> = None;
+    for (i, (layer, w)) in net.layers.iter().zip(weights).enumerate() {
+        let last = i + 1 == net.layers.len();
+        if layer.is_conv() {
+            assert!(layer.is_binary(), "forward_bin_cycle handles binary networks only");
+            assert!(
+                flat.is_none(),
+                "conv layer '{}' cannot follow an FC layer (chain topology, §I)",
+                layer.name
+            );
+            let r = conv_bin_cycle(array, sg, &act, layer, w);
+            cycles += r.cycles;
+            act = r.output;
+            if let Some((pk, ps)) = layer.pool {
+                let p = maxpool_cycle(array, sg, &act, pk, ps);
+                cycles += p.cycles;
+                act = p.output;
+            }
+        } else {
+            assert!(layer.is_binary(), "forward_bin_cycle handles binary networks only");
+            let input_flat = flat.take().unwrap_or_else(|| act.flatten());
+            let (bits, scores, fc_cycles) = fc_bin_cycle(array, sg, &input_flat, layer, w);
+            cycles += fc_cycles;
+            if last {
+                return ForwardResult { scores, cycles, stats: array.stats() };
+            }
+            flat = Some(bits);
+        }
+    }
+    panic!("network must end in an FC layer");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::bnn::layer::LayerKind;
     use crate::bnn::reference;
+    use crate::bnn::tiny_bnn;
 
     fn small_array() -> PeArray {
         PeArray::new(2, 4) // 8 PEs keeps tests fast
@@ -212,6 +273,31 @@ mod tests {
         assert_eq!(bits, reference::fc_bin(&input, &layer, &weights));
         assert_eq!(scores, reference::fc_scores(&input, &layer, &weights));
         assert!(cycles > 0);
+    }
+
+    /// The whole-network forward pass equals the functional reference and
+    /// resets its activity accounting per call.
+    #[test]
+    fn forward_bin_matches_reference() {
+        let net = tiny_bnn(8, 4, 3);
+        let weights: Vec<BinWeights> = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 90 + i as u64))
+            .collect();
+        let input = BitTensor::random(8, 8, 4, 17);
+        let mut array = small_array();
+        let mut sg = SequenceGenerator::new();
+        let a = forward_bin_cycle(&mut array, &mut sg, &input, &net, &weights);
+        assert_eq!(a.scores, reference::forward_scores(&net, &input, &weights));
+        assert!(a.cycles > 0 && a.stats.neuron_evals > 0);
+        // Per-image accounting: a second identical pass reports identical
+        // (not accumulated) stats, even though the array was reused.
+        let b = forward_bin_cycle(&mut array, &mut sg, &input, &net, &weights);
+        assert_eq!(a.scores, b.scores);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.stats, b.stats);
     }
 
     /// Wall-clock cycles: PEs run the same program in lockstep, so batch

@@ -32,9 +32,14 @@ mod tests {
 
     #[test]
     fn passing_property_passes() {
-        forall("add-commutes", 64, |r| (r.gen_range_i64(-100, 100), r.gen_range_i64(-100, 100)), |&(a, b)| {
-            assert_eq!(a + b, b + a);
-        });
+        forall(
+            "add-commutes",
+            64,
+            |r| (r.gen_range_i64(-100, 100), r.gen_range_i64(-100, 100)),
+            |&(a, b)| {
+                assert_eq!(a + b, b + a);
+            },
+        );
     }
 
     #[test]

@@ -1,0 +1,169 @@
+//! Contracts of the batched inference engine (`coordinator::batch`):
+//!
+//! * **Determinism** — a batch is bit-identical whether it runs on one
+//!   worker thread or many (batching never changes results);
+//! * **Exact accounting** — batch cycle/activity/energy aggregates equal
+//!   the sum of per-image single-run numbers;
+//! * **Schedule economy** — the shared [`ProgramCache`] plans each unique
+//!   layer shape once per process, and a cache hit is indistinguishable
+//!   from a fresh generation;
+//! * **Analytic bridge** — the batched analytic model is exactly
+//!   `batch ×` the single-image `NetworkPerf` model.
+
+use std::sync::Arc;
+use tulip::bnn::tensor::{BinWeights, BitTensor};
+use tulip::bnn::{binarynet_cifar10, tiny_bnn, Network};
+use tulip::config::ArchConfig;
+use tulip::coordinator::{BatchExecutor, BatchPerf, BatchRequest, NetworkPerf};
+use tulip::pe::PeStats;
+use tulip::scheduler::seqgen::{OpDesc, SequenceGenerator};
+use tulip::scheduler::ProgramCache;
+
+fn weights_for(net: &Network, seed: u64) -> Vec<BinWeights> {
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), seed + i as u64))
+        .collect()
+}
+
+fn tiny_executor(seed: u64) -> BatchExecutor {
+    let net = tiny_bnn(8, 4, 3);
+    let weights = weights_for(&net, seed);
+    BatchExecutor::new(net, weights).unwrap().with_array(2, 4)
+}
+
+fn tiny_images(n: u64, seed: u64) -> Vec<BitTensor> {
+    (0..n).map(|i| BitTensor::random(8, 8, 4, seed + i)).collect()
+}
+
+/// Batched output is bit-identical to running the same images on a single
+/// worker — scores, classes, cycles and activity all match exactly.
+#[test]
+fn batched_equals_sequential_bit_identical() {
+    let req = BatchRequest::new(tiny_images(12, 100));
+    let parallel = tiny_executor(5)
+        .with_threads(4)
+        .with_cache(Arc::new(ProgramCache::new()))
+        .run(&req)
+        .unwrap();
+    let serial = tiny_executor(5)
+        .with_threads(1)
+        .with_cache(Arc::new(ProgramCache::new()))
+        .run(&req)
+        .unwrap();
+    assert_eq!(parallel.images.len(), serial.images.len());
+    for (p, s) in parallel.images.iter().zip(&serial.images) {
+        assert_eq!(p.index, s.index);
+        assert_eq!(p.scores, s.scores, "image {}", p.index);
+        assert_eq!(p.class, s.class);
+        assert_eq!(p.cycles, s.cycles);
+        assert_eq!(p.stats, s.stats);
+    }
+    assert_eq!(parallel.cycles, serial.cycles);
+    assert_eq!(parallel.stats, serial.stats);
+    assert_eq!(parallel.activity(), serial.activity());
+}
+
+/// Repeated runs of the same executor (default thread pool, shared global
+/// cache) are reproducible.
+#[test]
+fn repeated_parallel_runs_reproducible() {
+    let exec = tiny_executor(11);
+    let req = BatchRequest::new(tiny_images(8, 300));
+    let a = exec.run(&req).unwrap();
+    let b = exec.run(&req).unwrap();
+    assert_eq!(a.classes(), b.classes());
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.stats, b.stats);
+    for (x, y) in a.images.iter().zip(&b.images) {
+        assert_eq!(x.scores, y.scores);
+    }
+}
+
+/// Batch aggregates equal the sum of per-image single-run numbers —
+/// cycles and activity exactly (u64 counters), energy to float identity.
+#[test]
+fn aggregates_equal_sum_of_single_runs() {
+    let exec = tiny_executor(9);
+    let req = BatchRequest::new(tiny_images(6, 500));
+    let batch = exec.run(&req).unwrap();
+    let mut cycles = 0u64;
+    let mut stats = PeStats::default();
+    let mut energy_pj = 0.0f64;
+    for (i, img) in req.images.iter().enumerate() {
+        let one = exec.run_one(i, img).unwrap();
+        assert_eq!(one.scores, batch.images[i].scores, "image {i}");
+        assert_eq!(one.cycles, batch.images[i].cycles);
+        assert_eq!(one.stats, batch.images[i].stats);
+        cycles += one.cycles;
+        stats.merge(&one.stats);
+        energy_pj += one.energy().total_pj();
+    }
+    assert_eq!(batch.cycles, cycles, "batch cycles = Σ per-image cycles");
+    assert_eq!(batch.stats, stats, "batch activity = Σ per-image activity");
+    let batch_pj = batch.energy().total_pj();
+    assert!(
+        (batch_pj - energy_pj).abs() <= 1e-9 * batch_pj.max(1.0),
+        "batch energy {batch_pj} pJ vs Σ per-image {energy_pj} pJ"
+    );
+}
+
+/// The shared program cache plans each unique shape once: a second batch
+/// through a warm cache generates nothing new, and the miss count is
+/// bounded by the number of distinct (shape, threshold) descriptors.
+#[test]
+fn program_cache_plans_once_per_process_shape() {
+    let cache = Arc::new(ProgramCache::new());
+    let req = BatchRequest::new(tiny_images(8, 700));
+    // Cold pass on a single worker: miss accounting is exact (parallel
+    // cold misses may double-count builds that race, by design).
+    let serial = tiny_executor(3).with_cache(Arc::clone(&cache)).with_threads(1);
+    serial.run(&req).unwrap();
+    let (hits_warm, misses_cold) = cache.stats();
+    // tiny_bnn(8,4,3): ≤ 4 + 8 + 3 distinct thresholds, ≤ 2 sum-tree
+    // shapes, 1 maxpool descriptor.
+    assert!(misses_cold <= 18, "unexpected distinct programs: {misses_cold}");
+    assert!(hits_warm > misses_cold, "steady state must be cache hits");
+    // Warm parallel pass over the same shared cache: nothing replans.
+    let parallel = tiny_executor(3).with_cache(Arc::clone(&cache)).with_threads(4);
+    parallel.run(&req).unwrap();
+    let (_, misses_warm) = cache.stats();
+    assert_eq!(misses_cold, misses_warm, "warm cache must not regenerate programs");
+}
+
+/// A cache hit returns a program equal to a fresh generation (satellite
+/// guarantee: caching can never change what the PEs execute).
+#[test]
+fn cache_hit_equals_fresh_generation() {
+    let shared = ProgramCache::global();
+    let d = OpDesc::ThresholdNode { n: 72, t_popcount: 30 };
+    let warm = shared.program(&d);
+    let hit = shared.program(&d);
+    assert!(Arc::ptr_eq(&warm, &hit), "repeat lookups share one Arc");
+    let mut fresh_gen = SequenceGenerator::new();
+    let fresh = fresh_gen.program(&d);
+    assert_eq!(hit.schedule.words, fresh.schedule.words);
+    assert_eq!(hit.schedule.ext_map, fresh.schedule.ext_map);
+    assert_eq!(hit.out_neuron, fresh.out_neuron);
+    assert_eq!(hit.out_loc, fresh.out_loc);
+}
+
+/// The analytic batch model is exactly `batch ×` the single-image model:
+/// same schedule objects, scaled counters, zero drift.
+#[test]
+fn analytic_batch_is_exact_multiple() {
+    let net = binarynet_cifar10();
+    let cfg = ArchConfig::tulip();
+    let single = NetworkPerf::model(&net, &cfg);
+    let bp = BatchPerf::model(&net, &cfg, 64);
+    assert_eq!(bp.total_cycles(), 64 * single.total_aggregate().cycles);
+    let mut one = tulip::energy::Activity::default();
+    for l in &single.layers {
+        one.merge(&l.activity);
+    }
+    assert_eq!(bp.activity(), one.scaled(64));
+    // Power-of-two scaling is exact in f64, so energy is an identity too.
+    let one_pj = tulip::energy::EnergyModel::default().energy(&one).total_pj();
+    assert_eq!(bp.energy().total_pj(), 64.0 * one_pj);
+}

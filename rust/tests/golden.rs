@@ -3,7 +3,11 @@
 //! both the rust functional reference and the bit-true PE simulation.
 //!
 //! Tests skip gracefully (with a notice) when artifacts are absent so
-//! `cargo test` works before `make artifacts`.
+//! `cargo test` works before `make artifacts`. The whole file needs the
+//! real PJRT backend (and with it the vendored `xla` crate), so it is
+//! compiled only with the `pjrt` feature.
+
+#![cfg(feature = "pjrt")]
 
 use tulip::arch::unit::PeArray;
 use tulip::bnn::layer::LayerKind;
