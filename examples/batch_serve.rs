@@ -7,15 +7,31 @@
 //! equivalent of the paper's single broadcast sequence generator, §IV-E).
 //!
 //! Demonstrates the determinism guarantee (batching/threading never
-//! changes results), the exact energy accounting, and the analytic batch
-//! model agreeing with the bit-true cycle counts.
+//! changes results), then reports everything else through the
+//! observability layer: a per-layer/per-PE `PerfReport` built from the
+//! batch result, optionally exported as JSON with `--perf-out <path>`.
 //!
-//! Run: `cargo run --release --example batch_serve`
+//! Run: `cargo run --release --example batch_serve [-- --perf-out perf.json]`
 
 use tulip::bnn::tensor::{BinWeights, BitTensor};
 use tulip::bnn::tiny_bnn;
 use tulip::config::ArchConfig;
-use tulip::coordinator::{BatchExecutor, BatchPerf, BatchRequest};
+use tulip::coordinator::{BatchExecutor, BatchPerf, BatchRequest, PerfReport};
+use tulip::metrics::MetricsRegistry;
+
+fn perf_out_arg() -> Option<String> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--perf-out" => return args.next(),
+            _ if a.starts_with("--perf-out=") => {
+                return Some(a["--perf-out=".len()..].to_string())
+            }
+            _ => {}
+        }
+    }
+    None
+}
 
 fn main() {
     const BATCH: u64 = 32;
@@ -49,37 +65,20 @@ fn main() {
         req.len(),
         (0..4).map(|c| fast.classes().iter().filter(|&&x| x == c).count()).collect::<Vec<_>>()
     );
-
-    // --- Serving metrics -------------------------------------------------
-    println!("\n-- host (simulator) throughput --");
     println!(
-        "  parallel: {:>8.2} images/s   ({:.1} ms for the batch)",
-        fast.images_per_sec(),
-        fast.wall.as_secs_f64() * 1e3
-    );
-    println!(
-        "  serial:   {:>8.2} images/s   ({:.1} ms for the batch)  -> {:.2}X speedup",
-        slow.images_per_sec(),
-        slow.wall.as_secs_f64() * 1e3,
+        "parallel vs serial wall clock: {:.2}X speedup",
         fast.images_per_sec() / slow.images_per_sec()
     );
 
-    println!("\n-- simulated TULIP chip (bit-true) --");
-    println!(
-        "  {} cycles/image = {:.1} us/image on-chip, {:.2} nJ/image",
-        fast.cycles / BATCH,
-        fast.simulated_us_per_image(),
-        fast.energy().total_pj() * 1e-3 / BATCH as f64
-    );
+    // --- Serving metrics: one report instead of ad-hoc accounting --------
+    let report = PerfReport::from_batch(&parallel, &fast)
+        .with_metrics(MetricsRegistry::global().snapshot());
+    report.print_summary();
 
-    // --- The schedule economy behind the throughput ----------------------
-    let (hits, misses) = parallel.cache_handle().stats();
-    println!("\n-- shared program cache --");
-    println!(
-        "  {misses} programs planned once, {hits} broadcast hits \
-         ({:.1} hits per miss)",
-        hits as f64 / misses.max(1) as f64
-    );
+    if let Some(path) = perf_out_arg() {
+        report.write_json(&path).unwrap();
+        println!("\nperf report written to {path}");
+    }
 
     // --- Analytic cross-check -------------------------------------------
     let bp = BatchPerf::model(&net, &ArchConfig::tulip().with_pes(8), req.len());

@@ -7,12 +7,31 @@
 //! final line prints the measured ratio.
 //!
 //! Run: `cargo bench --bench batch_throughput`
+//!
+//! Pass `--perf-out <path>` (after `--`) to additionally export a
+//! `tulip.perf_report/v1` JSON for the full-batch multi-thread run:
+//! `cargo bench --bench batch_throughput -- --perf-out perf-report.json`
 
 use std::time::Instant;
 use tulip::bnn::tensor::{BinWeights, BitTensor};
 use tulip::bnn::{tiny_bnn, Network};
-use tulip::coordinator::{BatchExecutor, BatchRequest};
+use tulip::coordinator::{BatchExecutor, BatchRequest, PerfReport};
+use tulip::metrics::MetricsRegistry;
 use tulip::util::bench::print_table;
+
+fn perf_out_arg() -> Option<String> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--perf-out" => return args.next(),
+            _ if a.starts_with("--perf-out=") => {
+                return Some(a["--perf-out=".len()..].to_string())
+            }
+            _ => {}
+        }
+    }
+    None
+}
 
 fn weights_for(net: &Network) -> Vec<BinWeights> {
     net.layers
@@ -93,6 +112,16 @@ fn main() {
         &["threads", "batch", "wall (ms)", "images/s", "vs serial"],
         &rows,
     );
+
+    // --- Optional PerfReport export --------------------------------------
+    if let Some(path) = perf_out_arg() {
+        let exec = make_exec(cores);
+        let result = exec.run(&BatchRequest::new(images.clone())).unwrap();
+        let report = PerfReport::from_batch(&exec, &result)
+            .with_metrics(MetricsRegistry::global().snapshot());
+        report.write_json(&path).unwrap();
+        println!("\nperf report ({} images, {cores} workers) written to {path}", images.len());
+    }
 
     let ratio = best_ips / serial_ips;
     println!(

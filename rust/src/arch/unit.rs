@@ -24,7 +24,9 @@ pub fn xnor_products_into(window: &[bool], weights: &[i8], out: &mut Vec<bool>) 
 /// One processing unit.
 #[derive(Debug, Clone)]
 pub struct ProcessingUnit {
+    /// The unit's TULIP-PEs (8 in the paper design), one OFM channel each.
     pub pes: Vec<TulipPe>,
+    /// The unit's simplified MAC for integer layers (§V-C).
     pub mac: MacUnit,
 }
 
@@ -46,6 +48,7 @@ impl ProcessingUnit {
         s
     }
 
+    /// Reset every PE's activity counters.
     pub fn reset_stats(&mut self) {
         for pe in &mut self.pes {
             pe.reset_stats();
@@ -58,11 +61,14 @@ impl ProcessingUnit {
 /// units present in the design").
 #[derive(Debug, Clone)]
 pub struct PeArray {
+    /// The processing units (32 in the paper design).
     pub units: Vec<ProcessingUnit>,
+    /// PEs per unit (8 in the paper design).
     pub pes_per_unit: usize,
 }
 
 impl PeArray {
+    /// An array of `num_units` units with `pes_per_unit` PEs each.
     pub fn new(num_units: usize, pes_per_unit: usize) -> Self {
         PeArray {
             units: (0..num_units).map(|_| ProcessingUnit::new(pes_per_unit)).collect(),
@@ -75,6 +81,7 @@ impl PeArray {
         Self::new(crate::energy::calib::NUM_MACS, crate::energy::calib::PES_PER_UNIT)
     }
 
+    /// Total PE count across all units.
     pub fn num_pes(&self) -> usize {
         self.units.len() * self.pes_per_unit
     }
@@ -116,6 +123,13 @@ impl PeArray {
             s.merge(&u.pe_stats());
         }
         s
+    }
+
+    /// Per-PE activity counters in array-flattened index order (the same
+    /// indexing as [`PeArray::pe_mut`]): the observability layer's source
+    /// for per-PE utilization.
+    pub fn per_pe_stats(&self) -> Vec<PeStats> {
+        self.units.iter().flat_map(|u| u.pes.iter().map(|pe| pe.stats())).collect()
     }
 }
 

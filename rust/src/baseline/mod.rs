@@ -27,6 +27,7 @@ pub enum MacKind {
 /// Cycle/functional model of the MAC unit.
 #[derive(Debug, Clone, Copy)]
 pub struct MacUnit {
+    /// Which MAC flavour this unit models.
     pub kind: MacKind,
     /// Accumulator width in bits (15 for YodaNN's MAC).
     pub acc_bits: u32,
@@ -44,22 +45,26 @@ pub struct MacStats {
 }
 
 impl MacStats {
+    /// Accumulate another unit's counters into this one.
     pub fn merge(&mut self, o: &MacStats) {
         self.int_cycles += o.int_cycles;
         self.bin_cycles += o.bin_cycles;
         self.idle_cycles += o.idle_cycles;
     }
 
+    /// Total cycles across all activity states.
     pub fn total(&self) -> u64 {
         self.int_cycles + self.bin_cycles + self.idle_cycles
     }
 }
 
 impl MacUnit {
+    /// YodaNN's fully reconfigurable MAC.
     pub fn yodann() -> Self {
         MacUnit { kind: MacKind::FullReconfigurable, acc_bits: 15 }
     }
 
+    /// TULIP's simplified integer-layer MAC.
     pub fn simplified() -> Self {
         MacUnit { kind: MacKind::Simplified, acc_bits: 15 }
     }

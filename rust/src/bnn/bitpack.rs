@@ -14,11 +14,14 @@ use super::tensor::{BinWeights, BitTensor};
 /// A packed bitvector: bit `i` lives at `words[i / 64] >> (i % 64)`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PackedBits {
+    /// Number of valid bits.
     pub len: usize,
+    /// Backing 64-bit words, LSB-first.
     pub words: Vec<u64>,
 }
 
 impl PackedBits {
+    /// Pack a bool slice, bit `i` from `bits[i]`.
     pub fn from_bools(bits: &[bool]) -> Self {
         let mut words = vec![0u64; bits.len().div_ceil(64)];
         for (i, &b) in bits.iter().enumerate() {
@@ -57,11 +60,14 @@ impl PackedBits {
 /// Pre-packed filter bank for one layer.
 #[derive(Debug, Clone)]
 pub struct PackedWeights {
+    /// One packed sign-bit vector per output filter.
     pub filters: Vec<PackedBits>,
+    /// Per-filter thresholds.
     pub thresholds: Vec<i64>,
 }
 
 impl PackedWeights {
+    /// Pack a layer's weights into XNOR agreement form.
     pub fn pack(w: &BinWeights) -> Self {
         PackedWeights {
             filters: (0..w.z2).map(|o| PackedBits::from_weights(w.filter(o))).collect(),

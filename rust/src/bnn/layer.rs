@@ -22,7 +22,9 @@ pub enum LayerKind {
 /// `(x2, y2, z2)`, kernel `k × k`.
 #[derive(Debug, Clone)]
 pub struct Layer {
+    /// Layer name (paper row label, e.g. "conv1").
     pub name: String,
+    /// Layer kind (conv/FC × integer/binary).
     pub kind: LayerKind,
     /// IFM width.
     pub x1: usize,
@@ -32,7 +34,9 @@ pub struct Layer {
     pub z1: usize,
     /// Kernel size (1 for FC).
     pub k: usize,
+    /// Convolution stride.
     pub stride: usize,
+    /// Zero padding on each edge.
     pub padding: usize,
     /// OFM channels (FC: output length).
     pub z2: usize,
@@ -94,19 +98,23 @@ impl Layer {
         }
     }
 
+    /// Set the image-part count (§V-C, Table III).
     pub fn with_parts(mut self, parts: usize) -> Self {
         self.image_parts = parts;
         self
     }
 
+    /// Is this a convolution layer?
     pub fn is_conv(&self) -> bool {
         matches!(self.kind, LayerKind::ConvInt | LayerKind::ConvBin)
     }
 
+    /// Is this a fully connected layer?
     pub fn is_fc(&self) -> bool {
         !self.is_conv()
     }
 
+    /// Does the layer run on the binary datapath?
     pub fn is_binary(&self) -> bool {
         matches!(self.kind, LayerKind::ConvBin | LayerKind::FcBin)
     }

@@ -16,8 +16,11 @@ pub use zoo::{alexnet, binarynet_cifar10, mnist_mlp, svhn_net, tiny_bnn};
 /// topology both evaluation networks have).
 #[derive(Debug, Clone)]
 pub struct Network {
+    /// Network name (e.g. "AlexNet").
     pub name: String,
+    /// Dataset label (e.g. "ImageNet").
     pub dataset: String,
+    /// Layers in forward order.
     pub layers: Vec<Layer>,
 }
 

@@ -7,13 +7,18 @@ use crate::util::Rng;
 /// A binary feature map, HWC layout, `{0,1}` activations.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BitTensor {
+    /// Height.
     pub h: usize,
+    /// Width.
     pub w: usize,
+    /// Channels.
     pub c: usize,
+    /// HWC-ordered activations.
     pub data: Vec<bool>,
 }
 
 impl BitTensor {
+    /// All-zeros tensor.
     pub fn zeros(h: usize, w: usize, c: usize) -> Self {
         BitTensor { h, w, c, data: vec![false; h * w * c] }
     }
@@ -24,16 +29,19 @@ impl BitTensor {
         BitTensor { h, w, c, data: (0..h * w * c).map(|_| rng.gen_bool(0.5)).collect() }
     }
 
+    /// Flat index of `(y, x, ch)`.
     #[inline]
     pub fn idx(&self, y: usize, x: usize, ch: usize) -> usize {
         (y * self.w + x) * self.c + ch
     }
 
+    /// Activation at `(y, x, ch)`.
     #[inline]
     pub fn get(&self, y: usize, x: usize, ch: usize) -> bool {
         self.data[self.idx(y, x, ch)]
     }
 
+    /// Set the activation at `(y, x, ch)`.
     #[inline]
     pub fn set(&mut self, y: usize, x: usize, ch: usize, v: bool) {
         let i = self.idx(y, x, ch);
@@ -95,13 +103,18 @@ impl BitTensor {
 /// An integer feature map, HWC layout.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct IntTensor {
+    /// Height.
     pub h: usize,
+    /// Width.
     pub w: usize,
+    /// Channels.
     pub c: usize,
+    /// HWC-ordered activations.
     pub data: Vec<i32>,
 }
 
 impl IntTensor {
+    /// All-zeros tensor.
     pub fn zeros(h: usize, w: usize, c: usize) -> Self {
         IntTensor { h, w, c, data: vec![0; h * w * c] }
     }
@@ -118,16 +131,19 @@ impl IntTensor {
         }
     }
 
+    /// Flat index of `(y, x, ch)`.
     #[inline]
     pub fn idx(&self, y: usize, x: usize, ch: usize) -> usize {
         (y * self.w + x) * self.c + ch
     }
 
+    /// Activation at `(y, x, ch)`.
     #[inline]
     pub fn get(&self, y: usize, x: usize, ch: usize) -> i32 {
         self.data[self.idx(y, x, ch)]
     }
 
+    /// Zero-padded `k×k×C` window in (ky, kx, c) order.
     pub fn window(&self, oy: usize, ox: usize, k: usize, stride: usize, pad: usize) -> Vec<i32> {
         let mut out = Vec::with_capacity(k * k * self.c);
         for ky in 0..k {
@@ -151,14 +167,18 @@ impl IntTensor {
 /// the same (ky, kx, c) order as [`BitTensor::window`].
 #[derive(Debug, Clone)]
 pub struct BinWeights {
+    /// Number of output channels / filters.
     pub z2: usize,
+    /// Inputs per filter (`k·k·z1`).
     pub fanin: usize,
+    /// Flat ±1 weights, filter-major.
     pub data: Vec<i8>,
     /// Per-output-channel popcount thresholds (batch-norm folded in).
     pub thresholds: Vec<i64>,
 }
 
 impl BinWeights {
+    /// Deterministic pseudo-random weights with balanced thresholds.
     pub fn random(z2: usize, fanin: usize, seed: u64) -> Self {
         let mut rng = Rng::seed_from_u64(seed);
         let data = (0..z2 * fanin).map(|_| if rng.gen_bool(0.5) { 1i8 } else { -1 }).collect();

@@ -27,6 +27,7 @@ impl std::fmt::Display for ArchKind {
 /// Tunable architecture parameters.
 #[derive(Debug, Clone)]
 pub struct ArchConfig {
+    /// Which design point this configuration models.
     pub kind: ArchKind,
     /// Number of TULIP-PEs (binary-layer OFM parallelism).
     pub num_pes: usize,
@@ -71,6 +72,7 @@ impl ArchConfig {
         self
     }
 
+    /// Override the off-chip interface bandwidth (ablation sweeps).
     pub fn with_offchip_bw(mut self, bits_per_cycle: f64) -> Self {
         self.offchip_bits_per_cycle = bits_per_cycle;
         self

@@ -36,10 +36,11 @@ use crate::bnn::Network;
 use crate::config::ArchConfig;
 use crate::coordinator::exec::NetworkPerf;
 use crate::energy::{calib, Activity, EnergyBreakdown, EnergyModel};
+use crate::metrics::MetricsRegistry;
 use crate::pe::PeStats;
 use crate::scheduler::seqgen::SequenceGenerator;
 use crate::scheduler::ProgramCache;
-use crate::sim::cycle::forward_bin_cycle;
+use crate::sim::cycle::{forward_bin_cycle, LayerObs};
 use crate::Result;
 use anyhow::ensure;
 use rayon::prelude::*;
@@ -50,18 +51,23 @@ use std::time::{Duration, Instant};
 /// network's input layer).
 #[derive(Debug, Clone, Default)]
 pub struct BatchRequest {
+    /// The images, in the order results will be returned.
     pub images: Vec<BitTensor>,
 }
 
 impl BatchRequest {
+    /// Wrap a list of images as a request.
     pub fn new(images: Vec<BitTensor>) -> Self {
         BatchRequest { images }
     }
 
+    /// Number of images in the request.
     pub fn len(&self) -> usize {
         self.images.len()
     }
 
+    /// Whether the request is empty (an empty batch is valid and yields an
+    /// empty result).
     pub fn is_empty(&self) -> bool {
         self.images.is_empty()
     }
@@ -80,19 +86,6 @@ pub fn argmax(scores: &[i64]) -> usize {
     best
 }
 
-/// Map PE activity counters + simulated cycles into the energy model's
-/// record (single definition shared by the per-image and batch views, so
-/// the two can never drift).
-fn pe_activity(stats: &PeStats, cycles: u64) -> Activity {
-    Activity {
-        pe_neuron_evals: stats.neuron_evals,
-        pe_reg_accesses: stats.reg_reads + stats.reg_writes,
-        pe_gated_neuron_cycles: stats.gated_neuron_cycles,
-        total_cycles: cycles,
-        ..Default::default()
-    }
-}
-
 /// Outcome for one image of a batch.
 #[derive(Debug, Clone)]
 pub struct ImageResult {
@@ -106,12 +99,23 @@ pub struct ImageResult {
     pub cycles: u64,
     /// PE activity for this image alone.
     pub stats: PeStats,
+    /// Per-layer breakdown (partitions `cycles` and `stats` exactly; see
+    /// [`LayerObs`]).
+    pub layers: Vec<LayerObs>,
+    /// Per-PE activity for this image, in array-flattened index order.
+    pub per_pe: Vec<PeStats>,
+    /// Host wall-clock nanoseconds this image's forward pass took on its
+    /// worker thread (observability only — not part of the deterministic
+    /// simulated result).
+    pub host_ns: u64,
+    /// Rayon worker index that ran this image (0 when run outside a pool).
+    pub worker: usize,
 }
 
 impl ImageResult {
     /// This image's activity record for the energy model.
     pub fn activity(&self) -> Activity {
-        pe_activity(&self.stats, self.cycles)
+        self.stats.activity(self.cycles)
     }
 
     /// Energy priced at the calibrated model.
@@ -120,11 +124,24 @@ impl ImageResult {
     }
 }
 
+/// Per-worker accounting of one batch: how many images each rayon worker
+/// ran and how long it spent running them.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerSummary {
+    /// Rayon worker index.
+    pub worker: usize,
+    /// Images this worker classified.
+    pub images: usize,
+    /// Summed host wall-clock nanoseconds across those images.
+    pub busy_ns: u64,
+}
+
 /// Result of a batch execution: per-image results in request order plus
 /// exact aggregates (every aggregate equals the sum of its per-image
 /// parts — asserted by `tests/batch.rs`).
 #[derive(Debug, Clone)]
 pub struct BatchResult {
+    /// Per-image results, in request order.
     pub images: Vec<ImageResult>,
     /// Simulated chip cycles summed over the batch.
     pub cycles: u64,
@@ -137,7 +154,55 @@ pub struct BatchResult {
 impl BatchResult {
     /// Aggregate activity record (sum of per-image records).
     pub fn activity(&self) -> Activity {
-        pe_activity(&self.stats, self.cycles)
+        self.stats.activity(self.cycles)
+    }
+
+    /// Per-layer breakdown merged across the batch: entry `i` accumulates
+    /// every image's record for layer `i`, so cycles and activity still
+    /// partition the batch totals exactly.
+    pub fn per_layer(&self) -> Vec<LayerObs> {
+        let mut merged: Vec<LayerObs> = Vec::new();
+        for img in &self.images {
+            if merged.is_empty() {
+                merged = img.layers.clone();
+            } else {
+                for (m, l) in merged.iter_mut().zip(&img.layers) {
+                    m.merge(l);
+                }
+            }
+        }
+        merged
+    }
+
+    /// Per-PE activity merged element-wise across the batch (every worker
+    /// simulates the same array geometry), in array-flattened index order.
+    pub fn per_pe(&self) -> Vec<PeStats> {
+        let mut merged: Vec<PeStats> = Vec::new();
+        for img in &self.images {
+            if merged.is_empty() {
+                merged = img.per_pe.clone();
+            } else {
+                for (m, s) in merged.iter_mut().zip(&img.per_pe) {
+                    m.merge(s);
+                }
+            }
+        }
+        merged
+    }
+
+    /// Per-worker image counts and busy time, sorted by worker index
+    /// (rayon's work stealing makes the assignment nondeterministic — the
+    /// simulated results are not).
+    pub fn worker_summaries(&self) -> Vec<WorkerSummary> {
+        let mut map: std::collections::BTreeMap<usize, WorkerSummary> =
+            std::collections::BTreeMap::new();
+        for img in &self.images {
+            let w = map.entry(img.worker).or_default();
+            w.worker = img.worker;
+            w.images += 1;
+            w.busy_ns += img.host_ns;
+        }
+        map.into_values().collect()
     }
 
     /// Aggregate energy priced at the calibrated model.
@@ -266,10 +331,13 @@ impl BatchExecutor {
         self
     }
 
+    /// The frozen network this executor serves.
     pub fn network(&self) -> &Network {
         &self.net
     }
 
+    /// A handle on this executor's shared program cache (for snapshotting
+    /// hit/miss/planning stats into reports).
     pub fn cache_handle(&self) -> Arc<ProgramCache> {
         Arc::clone(&self.cache)
     }
@@ -281,9 +349,22 @@ impl BatchExecutor {
         index: usize,
         image: &BitTensor,
     ) -> ImageResult {
+        let _span = crate::metrics::span("batch.image");
+        let t0 = Instant::now();
         let f = forward_bin_cycle(array, sg, image, &self.net, &self.weights);
+        let host_ns = t0.elapsed().as_nanos() as u64;
         let class = argmax(&f.scores);
-        ImageResult { index, scores: f.scores, class, cycles: f.cycles, stats: f.stats }
+        ImageResult {
+            index,
+            scores: f.scores,
+            class,
+            cycles: f.cycles,
+            stats: f.stats,
+            layers: f.layers,
+            per_pe: f.per_pe,
+            host_ns,
+            worker: rayon::current_thread_index().unwrap_or(0),
+        }
     }
 
     fn scratch(&self) -> (PeArray, SequenceGenerator) {
@@ -303,8 +384,33 @@ impl BatchExecutor {
 
     /// Run a batch: images are sharded across worker threads (each with
     /// its own PE array and generator, all sharing this executor's program
-    /// cache) and results are returned in request order.
+    /// cache) and results are returned in request order. Aggregate
+    /// counters are published to [`MetricsRegistry::global`] after every
+    /// batch.
+    ///
+    /// ```
+    /// use tulip::bnn::tensor::{BinWeights, BitTensor};
+    /// use tulip::bnn::tiny_bnn;
+    /// use tulip::coordinator::{BatchExecutor, BatchRequest};
+    ///
+    /// let net = tiny_bnn(8, 4, 3);
+    /// let weights: Vec<BinWeights> = net
+    ///     .layers
+    ///     .iter()
+    ///     .enumerate()
+    ///     .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 1 + i as u64))
+    ///     .collect();
+    /// let exec = BatchExecutor::new(net, weights)?.with_array(1, 4);
+    /// let req = BatchRequest::new(vec![BitTensor::random(8, 8, 4, 9)]);
+    /// let result = exec.run(&req)?;
+    /// assert_eq!(result.images.len(), 1);
+    /// // Per-layer records partition the totals exactly.
+    /// let layer_cycles: u64 = result.per_layer().iter().map(|l| l.cycles).sum();
+    /// assert_eq!(layer_cycles, result.cycles);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn run(&self, req: &BatchRequest) -> Result<BatchResult> {
+        let _span = crate::metrics::span("batch.run");
         for (i, img) in req.images.iter().enumerate() {
             self.check_image(i, img)?;
         }
@@ -316,7 +422,35 @@ impl BatchExecutor {
             stats.merge(&r.stats);
             cycles += r.cycles;
         }
-        Ok(BatchResult { images, cycles, stats, wall: t0.elapsed() })
+        let result = BatchResult { images, cycles, stats, wall: t0.elapsed() };
+        self.publish_to(MetricsRegistry::global(), &result);
+        Ok(result)
+    }
+
+    /// Report one batch's aggregates into a metrics registry: batch/image
+    /// counters, wall-time histograms, PE utilization, the energy
+    /// breakdown and the program cache's counters. [`BatchExecutor::run`]
+    /// calls this with the global registry; call it directly to account
+    /// into a scoped registry instead. Cost is a few dozen atomic ops per
+    /// *batch*, so it is invisible next to the simulation itself.
+    pub fn publish_to(&self, registry: &MetricsRegistry, result: &BatchResult) {
+        registry.counter("batch.runs").inc();
+        registry.counter("batch.images").add(result.images.len() as u64);
+        registry.counter("batch.sim_cycles").add(result.cycles);
+        registry.counter("pe.neuron_evals").add(result.stats.neuron_evals);
+        registry.counter("pe.gated_neuron_cycles").add(result.stats.gated_neuron_cycles);
+        registry
+            .counter("pe.reg_accesses")
+            .add(result.stats.reg_reads + result.stats.reg_writes);
+        registry.histogram("batch.wall_us").observe(result.wall.as_micros() as u64);
+        let image_host = registry.histogram("image.host_us");
+        for img in &result.images {
+            image_host.observe(img.host_ns / 1_000);
+        }
+        registry.gauge("batch.images_per_sec").set(result.images_per_sec());
+        registry.gauge("pe.utilization").set(result.stats.utilization());
+        result.energy().publish_to(registry, "batch.energy");
+        self.cache.publish_to(registry);
     }
 
     fn check_image(&self, index: usize, img: &BitTensor) -> Result<()> {
@@ -335,6 +469,7 @@ impl BatchExecutor {
     }
 
     fn run_sharded(&self, req: &BatchRequest) -> Vec<ImageResult> {
+        let _span = crate::metrics::span("batch.shard");
         let work = || {
             req.images
                 .par_iter()
@@ -359,11 +494,14 @@ impl BatchExecutor {
 /// the serving path and the paper-table path.
 #[derive(Debug, Clone)]
 pub struct BatchPerf {
+    /// The single-image analytic model being scaled.
     pub per_image: NetworkPerf,
+    /// Batch size the aggregates are scaled by.
     pub batch: usize,
 }
 
 impl BatchPerf {
+    /// Model a batch of `batch` images on architecture `cfg`.
     pub fn model(net: &Network, cfg: &ArchConfig, batch: usize) -> Self {
         BatchPerf { per_image: NetworkPerf::model(net, cfg), batch }
     }

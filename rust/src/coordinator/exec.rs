@@ -15,8 +15,11 @@ use crate::scheduler::seqgen::{OpDesc, SequenceGenerator};
 /// Cost of executing one BNN node (one output activation) on a TULIP-PE.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct NodeCost {
+    /// PE cycles for the node.
     pub cycles: u64,
+    /// Non-gated neuron evaluations.
     pub neuron_evals: u64,
+    /// Register bit reads + writes.
     pub reg_accesses: u64,
     /// Number of chunked passes (1 when the fan-in fits one adder tree).
     pub passes: u64,
@@ -100,16 +103,25 @@ pub fn pe_int_node_cycles(fanin: usize, bits: u32) -> u64 {
 /// Per-layer performance on one architecture.
 #[derive(Debug, Clone)]
 pub struct LayerPerf {
+    /// Layer name from the network description.
     pub name: String,
+    /// Whether the layer runs on the binary (PE) datapath.
     pub binary: bool,
+    /// Whether the layer is convolutional.
     pub is_conv: bool,
+    /// Binary ops in the layer (2 × fanin per output, the paper's MOP
+    /// convention).
     pub ops: u64,
+    /// Tiling decision the cycle counts assume.
     pub tiling: Tiling,
+    /// Cycles the processing array is busy.
     pub compute_cycles: u64,
+    /// Cycles the memory system needs to feed the layer.
     pub fetch_cycles: u64,
     /// Wall-clock cycles: compute and fetch overlap through the
     /// double-buffered L2 (§IV-E), so the layer takes the max of the two.
     pub total_cycles: u64,
+    /// Activity record priced by the energy model.
     pub activity: Activity,
 }
 
@@ -213,9 +225,13 @@ pub fn layer_perf(layer: &Layer, cfg: &ArchConfig, sg: &mut SequenceGenerator) -
 /// Whole-network performance report.
 #[derive(Debug, Clone)]
 pub struct NetworkPerf {
+    /// Architecture the model was run for.
     pub arch: ArchKind,
+    /// Network name.
     pub network: String,
+    /// Dataset label (reporting only).
     pub dataset: String,
+    /// Per-layer results, in network order.
     pub layers: Vec<LayerPerf>,
 }
 
@@ -223,12 +239,19 @@ pub struct NetworkPerf {
 /// Table V = all layers).
 #[derive(Debug, Clone, Copy)]
 pub struct Aggregate {
+    /// Millions of binary ops in scope.
     pub mops: f64,
+    /// Total wall-clock cycles.
     pub cycles: u64,
+    /// Wall-clock time at the calibrated clock period.
     pub time_ms: f64,
+    /// Total energy in microjoules.
     pub energy_uj: f64,
+    /// Throughput, giga-ops per second.
     pub gops: f64,
+    /// Energy efficiency, tera-ops per watt.
     pub tops_per_w: f64,
+    /// Average power draw in milliwatts.
     pub avg_power_mw: f64,
 }
 

@@ -10,9 +10,13 @@
 
 pub mod batch;
 pub mod exec;
+pub mod perf_report;
 pub mod report;
 pub mod tiling;
 
-pub use batch::{argmax, BatchExecutor, BatchPerf, BatchRequest, BatchResult, ImageResult};
+pub use batch::{
+    argmax, BatchExecutor, BatchPerf, BatchRequest, BatchResult, ImageResult, WorkerSummary,
+};
 pub use exec::{LayerPerf, NetworkPerf};
+pub use perf_report::{LayerReport, PeReport, PerfReport};
 pub use tiling::{table3, tiling, Tiling};

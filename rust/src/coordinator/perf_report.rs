@@ -1,0 +1,491 @@
+//! Machine-readable performance reports for benchmark trajectories.
+//!
+//! A [`PerfReport`] freezes one batch run into a comparable artifact:
+//! host throughput, simulated cycles and energy, a per-layer cycle/energy
+//! breakdown (the shape of the paper's Tables IV–V, but measured from the
+//! bit-true engine instead of the analytic model), per-PE utilization,
+//! program-cache effectiveness and per-worker timing. The JSON encoder is
+//! hand-rolled (the vendored dependency set has no serde); the schema is
+//! documented in the repository README under *Observability*.
+//!
+//! ```
+//! use tulip::bnn::tensor::{BinWeights, BitTensor};
+//! use tulip::bnn::tiny_bnn;
+//! use tulip::coordinator::{BatchExecutor, BatchRequest, PerfReport};
+//!
+//! let net = tiny_bnn(8, 4, 3);
+//! let weights: Vec<BinWeights> = net
+//!     .layers
+//!     .iter()
+//!     .enumerate()
+//!     .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 1 + i as u64))
+//!     .collect();
+//! let exec = BatchExecutor::new(net, weights)?.with_array(1, 4);
+//! let req = BatchRequest::new(vec![BitTensor::random(8, 8, 4, 2)]);
+//! let result = exec.run(&req)?;
+//! let report = PerfReport::from_batch(&exec, &result);
+//! let json = report.to_json();
+//! assert!(json.contains("\"schema\": \"tulip.perf_report/v1\""));
+//! assert_eq!(report.layers.len(), 3); // conv+pool, fc, fc
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use crate::coordinator::batch::{BatchExecutor, BatchResult, WorkerSummary};
+use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::metrics::MetricsSnapshot;
+use crate::scheduler::CacheStats;
+use crate::util::bench::print_table;
+use crate::Result;
+use std::path::Path;
+
+/// One layer's row of a [`PerfReport`]: cycles, share, energy and
+/// utilization, merged across every image of the batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerReport {
+    /// Layer name from the network description.
+    pub name: String,
+    /// `"conv"`, `"conv+pool"` or `"fc"`.
+    pub kind: String,
+    /// Lockstep chip cycles spent in this layer across the batch.
+    pub cycles: u64,
+    /// `cycles` as a fraction of the batch total (0 when the batch is
+    /// empty).
+    pub cycle_share: f64,
+    /// PE energy attributable to this layer, picojoules.
+    pub energy_pj: f64,
+    /// Neuron utilization within this layer (see
+    /// [`PeStats::utilization`](crate::pe::PeStats::utilization)).
+    pub utilization: f64,
+    /// Neuron evaluations in this layer across the batch.
+    pub neuron_evals: u64,
+}
+
+/// One PE's row of a [`PerfReport`] (array-flattened index order).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeReport {
+    /// Array-flattened PE index.
+    pub index: usize,
+    /// Neuron evaluations on this PE across the batch.
+    pub neuron_evals: u64,
+    /// Gated (idle) neuron-cycles on this PE across the batch.
+    pub gated_neuron_cycles: u64,
+    /// This PE's utilization: `evals / (evals + gated)`.
+    pub utilization: f64,
+}
+
+/// A frozen, machine-readable report of one batch run. Build with
+/// [`PerfReport::from_batch`], serialize with [`PerfReport::to_json`] /
+/// [`PerfReport::write_json`], or pretty-print with
+/// [`PerfReport::print_summary`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerfReport {
+    /// Network name.
+    pub network: String,
+    /// Dataset name from the network description.
+    pub dataset: String,
+    /// Number of images in the batch.
+    pub batch: usize,
+    /// Host wall-clock time for the batch, milliseconds.
+    pub wall_ms: f64,
+    /// Host-side simulator throughput.
+    pub images_per_sec: f64,
+    /// Simulated chip cycles summed over the batch.
+    pub total_cycles: u64,
+    /// Simulated on-chip latency per image, µs at the paper's clock.
+    pub simulated_us_per_image: f64,
+    /// Batch energy breakdown at the calibrated model.
+    pub energy: EnergyBreakdown,
+    /// Per-layer breakdown (sums to the batch totals exactly).
+    pub layers: Vec<LayerReport>,
+    /// Per-PE activity and utilization.
+    pub pes: Vec<PeReport>,
+    /// Program-cache effectiveness at report time.
+    pub cache: CacheStats,
+    /// Per-rayon-worker image counts and busy time.
+    pub workers: Vec<WorkerSummary>,
+    /// Optional embedded registry snapshot (see
+    /// [`PerfReport::with_metrics`]).
+    pub metrics: Option<MetricsSnapshot>,
+}
+
+impl PerfReport {
+    /// Freeze `result` (produced by `exec`) into a report. Per-layer
+    /// energy prices each layer's activity delta at the default energy
+    /// model, so Σ layer energy equals the batch PE energy.
+    pub fn from_batch(exec: &BatchExecutor, result: &BatchResult) -> Self {
+        let model = EnergyModel::default();
+        let layers: Vec<LayerReport> = result
+            .per_layer()
+            .iter()
+            .map(|l| LayerReport {
+                name: l.name.clone(),
+                kind: l.kind.to_string(),
+                cycles: l.cycles,
+                cycle_share: if result.cycles == 0 {
+                    0.0
+                } else {
+                    l.cycles as f64 / result.cycles as f64
+                },
+                energy_pj: model.energy(&l.stats.activity(l.cycles)).total_pj(),
+                utilization: l.utilization(),
+                neuron_evals: l.stats.neuron_evals,
+            })
+            .collect();
+        let pes: Vec<PeReport> = result
+            .per_pe()
+            .iter()
+            .enumerate()
+            .map(|(index, s)| PeReport {
+                index,
+                neuron_evals: s.neuron_evals,
+                gated_neuron_cycles: s.gated_neuron_cycles,
+                utilization: s.utilization(),
+            })
+            .collect();
+        let net = exec.network();
+        PerfReport {
+            network: net.name.clone(),
+            dataset: net.dataset.clone(),
+            batch: result.images.len(),
+            wall_ms: result.wall.as_secs_f64() * 1e3,
+            images_per_sec: result.images_per_sec(),
+            total_cycles: result.cycles,
+            simulated_us_per_image: result.simulated_us_per_image(),
+            energy: result.energy(),
+            layers,
+            pes,
+            cache: exec.cache_handle().snapshot(),
+            workers: result.worker_summaries(),
+            metrics: None,
+        }
+    }
+
+    /// Embed a registry snapshot under the report's `metrics` key.
+    pub fn with_metrics(mut self, snapshot: MetricsSnapshot) -> Self {
+        self.metrics = Some(snapshot);
+        self
+    }
+
+    /// Mean PE utilization across the array (0 when there are no PEs).
+    pub fn mean_pe_utilization(&self) -> f64 {
+        if self.pes.is_empty() {
+            return 0.0;
+        }
+        self.pes.iter().map(|p| p.utilization).sum::<f64>() / self.pes.len() as f64
+    }
+
+    /// Serialize to the `tulip.perf_report/v1` JSON schema (see README).
+    /// Non-finite floats serialize as `0` so the output is always valid
+    /// JSON.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(4096);
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"tulip.perf_report/v1\",\n");
+        s.push_str(&format!("  \"network\": {},\n", json_str(&self.network)));
+        s.push_str(&format!("  \"dataset\": {},\n", json_str(&self.dataset)));
+        s.push_str(&format!("  \"batch\": {},\n", self.batch));
+        s.push_str(&format!(
+            "  \"host\": {{\"wall_ms\": {}, \"images_per_sec\": {}}},\n",
+            json_f64(self.wall_ms),
+            json_f64(self.images_per_sec)
+        ));
+        s.push_str(&format!(
+            "  \"simulated\": {{\"total_cycles\": {}, \"us_per_image\": {}}},\n",
+            self.total_cycles,
+            json_f64(self.simulated_us_per_image)
+        ));
+        s.push_str(&format!(
+            "  \"energy_pj\": {{\"pe\": {}, \"mac\": {}, \"memory\": {}, \"xnor\": {}, \
+             \"total\": {}}},\n",
+            json_f64(self.energy.pe_pj),
+            json_f64(self.energy.mac_pj),
+            json_f64(self.energy.memory_pj),
+            json_f64(self.energy.xnor_pj),
+            json_f64(self.energy.total_pj())
+        ));
+        s.push_str("  \"layers\": [\n");
+        for (i, l) in self.layers.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": {}, \"kind\": {}, \"cycles\": {}, \"cycle_share\": {}, \
+                 \"energy_pj\": {}, \"utilization\": {}, \"neuron_evals\": {}}}{}\n",
+                json_str(&l.name),
+                json_str(&l.kind),
+                l.cycles,
+                json_f64(l.cycle_share),
+                json_f64(l.energy_pj),
+                json_f64(l.utilization),
+                l.neuron_evals,
+                comma(i, self.layers.len())
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"pes\": [\n");
+        for (i, p) in self.pes.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"index\": {}, \"neuron_evals\": {}, \"gated_neuron_cycles\": {}, \
+                 \"utilization\": {}}}{}\n",
+                p.index,
+                p.neuron_evals,
+                p.gated_neuron_cycles,
+                json_f64(p.utilization),
+                comma(i, self.pes.len())
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str(&format!(
+            "  \"cache\": {{\"hits\": {}, \"misses\": {}, \"entries\": {}, \"hit_rate\": {}, \
+             \"planning_ms\": {}}},\n",
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.entries,
+            json_f64(self.cache.hit_rate()),
+            json_f64(self.cache.planning_ms())
+        ));
+        s.push_str("  \"workers\": [\n");
+        for (i, w) in self.workers.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"worker\": {}, \"images\": {}, \"busy_ms\": {}}}{}\n",
+                w.worker,
+                w.images,
+                json_f64(w.busy_ns as f64 * 1e-6),
+                comma(i, self.workers.len())
+            ));
+        }
+        s.push_str("  ]");
+        if let Some(m) = &self.metrics {
+            s.push_str(",\n  \"metrics\": ");
+            s.push_str(&snapshot_json(m, "  "));
+        }
+        s.push_str("\n}\n");
+        s
+    }
+
+    /// Write the JSON report to `path` (the `--perf-out` implementation of
+    /// the example and bench binaries).
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing perf report {}: {e}", path.as_ref().display()))
+    }
+
+    /// Pretty-print the report: per-layer table, cache/worker lines, and
+    /// the headline throughput and energy numbers.
+    pub fn print_summary(&self) {
+        let rows: Vec<Vec<String>> = self
+            .layers
+            .iter()
+            .map(|l| {
+                vec![
+                    format!("{} ({})", l.name, l.kind),
+                    l.cycles.to_string(),
+                    format!("{:.1}%", l.cycle_share * 100.0),
+                    format!("{:.1}", l.energy_pj * 1e-3),
+                    format!("{:.1}%", l.utilization * 100.0),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!("PerfReport: {} / {} (batch {})", self.network, self.dataset, self.batch),
+            &["layer", "cycles", "share", "energy (nJ)", "util"],
+            &rows,
+        );
+        println!(
+            "host: {:.1} ms wall, {:.1} images/s | simulated: {} cycles, {:.2} us/image",
+            self.wall_ms, self.images_per_sec, self.total_cycles, self.simulated_us_per_image
+        );
+        println!(
+            "energy: {:.2} uJ total ({:.1} pe / {:.1} mac / {:.1} mem / {:.1} xnor pJ)",
+            self.energy.total_uj(),
+            self.energy.pe_pj,
+            self.energy.mac_pj,
+            self.energy.memory_pj,
+            self.energy.xnor_pj
+        );
+        println!(
+            "cache: {} hits / {} misses ({:.1}% hit rate), {} programs, {:.2} ms planning",
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.hit_rate() * 100.0,
+            self.cache.entries,
+            self.cache.planning_ms()
+        );
+        println!(
+            "pe utilization: {:.1}% mean across {} PEs",
+            self.mean_pe_utilization() * 100.0,
+            self.pes.len()
+        );
+        for w in &self.workers {
+            println!(
+                "worker {:>2}: {:>4} images, {:.1} ms busy",
+                w.worker,
+                w.images,
+                w.busy_ns as f64 * 1e-6
+            );
+        }
+    }
+}
+
+/// `","` between array elements, nothing after the last.
+fn comma(i: usize, len: usize) -> &'static str {
+    if i + 1 == len {
+        ""
+    } else {
+        ","
+    }
+}
+
+/// JSON string literal with escaping.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON number: non-finite floats become `0` (JSON has no NaN/Infinity).
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// Serialize a registry snapshot (counters/gauges as objects, histograms
+/// with their summary statistics).
+fn snapshot_json(m: &MetricsSnapshot, indent: &str) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("{indent}  \"counters\": {{"));
+    for (i, (k, v)) in m.counters.iter().enumerate() {
+        s.push_str(&format!("{}{}: {}", comma_lead(i), json_str(k), v));
+    }
+    s.push_str("},\n");
+    s.push_str(&format!("{indent}  \"gauges\": {{"));
+    for (i, (k, v)) in m.gauges.iter().enumerate() {
+        s.push_str(&format!("{}{}: {}", comma_lead(i), json_str(k), json_f64(*v)));
+    }
+    s.push_str("},\n");
+    s.push_str(&format!("{indent}  \"histograms\": {{"));
+    for (i, (k, h)) in m.histograms.iter().enumerate() {
+        s.push_str(&format!(
+            "{}{}: {{\"count\": {}, \"sum\": {}, \"min\": {}, \"max\": {}, \"mean\": {}, \
+             \"p50\": {}, \"p99\": {}}}",
+            comma_lead(i),
+            json_str(k),
+            h.count,
+            h.sum,
+            h.min,
+            h.max,
+            json_f64(h.mean()),
+            h.quantile(0.5),
+            h.quantile(0.99)
+        ));
+    }
+    s.push_str("}\n");
+    s.push_str(&format!("{indent}}}"));
+    s
+}
+
+/// `", "` before every element but the first.
+fn comma_lead(i: usize) -> &'static str {
+    if i == 0 {
+        ""
+    } else {
+        ", "
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::tensor::{BinWeights, BitTensor};
+    use crate::bnn::tiny_bnn;
+    use crate::coordinator::{BatchExecutor, BatchRequest};
+    use crate::metrics::MetricsRegistry;
+
+    fn tiny_report() -> PerfReport {
+        let net = tiny_bnn(8, 4, 3);
+        let weights: Vec<BinWeights> = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 60 + i as u64))
+            .collect();
+        let exec = BatchExecutor::new(net, weights).unwrap().with_array(1, 4);
+        let req = BatchRequest::new((0..3).map(|i| BitTensor::random(8, 8, 4, i)).collect());
+        let result = exec.run(&req).unwrap();
+        PerfReport::from_batch(&exec, &result)
+    }
+
+    #[test]
+    fn report_partitions_totals() {
+        let r = tiny_report();
+        assert_eq!(r.batch, 3);
+        let layer_cycles: u64 = r.layers.iter().map(|l| l.cycles).sum();
+        assert_eq!(layer_cycles, r.total_cycles, "layer cycles partition the total");
+        let share: f64 = r.layers.iter().map(|l| l.cycle_share).sum();
+        assert!((share - 1.0).abs() < 1e-9);
+        // Per-layer PE energy sums to the batch PE energy (same counters,
+        // same model — only the grouping differs).
+        let layer_pj: f64 = r.layers.iter().map(|l| l.energy_pj).sum();
+        assert!((layer_pj - r.energy.pe_pj).abs() <= 1e-9 * r.energy.pe_pj.max(1.0));
+        assert!(r.layers.iter().all(|l| (0.0..=1.0).contains(&l.utilization)));
+        assert!(r.pes.iter().all(|p| (0.0..=1.0).contains(&p.utilization)));
+        assert!(r.mean_pe_utilization() > 0.0);
+        assert!(!r.workers.is_empty());
+    }
+
+    #[test]
+    fn json_is_well_formed_and_complete() {
+        let reg = MetricsRegistry::new();
+        reg.counter("test.count").add(3);
+        reg.histogram("test.lat").observe(42);
+        let r = tiny_report().with_metrics(reg.snapshot());
+        let json = r.to_json();
+        const KEYS: &str = "schema network host simulated energy_pj layers pes cache \
+                            hit_rate workers metrics utilization planning_ms";
+        for key in KEYS.split_whitespace() {
+            assert!(json.contains(&format!("\"{key}\"")), "missing {key} in:\n{json}");
+        }
+        assert!(!json.contains("NaN") && !json.contains("inf"), "non-finite leaked");
+        let depth = json.chars().fold(0i64, |d, c| match c {
+            '{' | '[' => d + 1,
+            '}' | ']' => d - 1,
+            _ => d,
+        });
+        assert_eq!(depth, 0, "unbalanced brackets");
+    }
+
+    #[test]
+    fn write_json_round_trips_to_disk() {
+        let r = tiny_report();
+        let path = std::env::temp_dir().join("tulip_perf_report_test.json");
+        r.write_json(&path).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(back, r.to_json());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn string_escaping() {
+        assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+        assert_eq!(json_f64(f64::NAN), "0");
+        assert_eq!(json_f64(1.5), "1.5");
+    }
+
+    #[test]
+    fn summary_does_not_panic() {
+        tiny_report().print_summary();
+    }
+}

@@ -12,16 +12,24 @@ use crate::scheduler::seqgen::SequenceGenerator;
 /// Table II: single-PE comparison for the 288-input neuron (3×3 × 32 IFMs).
 #[derive(Debug, Clone, Copy)]
 pub struct Table2 {
+    /// YodaNN MAC area (paper Table II).
     pub mac_area_um2: f64,
+    /// TULIP-PE area (paper Table II).
     pub pe_area_um2: f64,
+    /// MAC average power over the window.
     pub mac_power_mw: f64,
+    /// PE average power over the node run, from the energy model.
     pub pe_power_mw: f64,
+    /// MAC cycles for the 288-input window.
     pub mac_cycles: u64,
+    /// PE cycles for the 288-input node.
     pub pe_cycles: u64,
+    /// Clock period, nanoseconds.
     pub period_ns: f64,
 }
 
 impl Table2 {
+    /// Compute the table from the calibrated models.
     pub fn compute() -> Self {
         let mac = MacUnit::yodann();
         let mut sg = SequenceGenerator::new();
@@ -46,10 +54,12 @@ impl Table2 {
         }
     }
 
+    /// MAC latency in nanoseconds.
     pub fn mac_time_ns(&self) -> f64 {
         self.mac_cycles as f64 * self.period_ns
     }
 
+    /// PE latency in nanoseconds.
     pub fn pe_time_ns(&self) -> f64 {
         self.pe_cycles as f64 * self.period_ns
     }
@@ -59,6 +69,7 @@ impl Table2 {
         (self.mac_power_mw * self.mac_time_ns()) / (self.pe_power_mw * self.pe_time_ns())
     }
 
+    /// Paper-format rows (metric, MAC, PE, ratio).
     pub fn rows(&self) -> Vec<Vec<String>> {
         let r = |b: f64, t: f64| format!("{:.2}", b / t);
         vec![
@@ -99,9 +110,13 @@ impl Table2 {
 /// One side-by-side network comparison (a column pair of Table IV/V).
 #[derive(Debug, Clone)]
 pub struct Comparison {
+    /// Network name.
     pub network: String,
+    /// Dataset label.
     pub dataset: String,
+    /// YodaNN-side aggregate.
     pub yodann: Aggregate,
+    /// TULIP-side aggregate.
     pub tulip: Aggregate,
 }
 

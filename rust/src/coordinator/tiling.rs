@@ -77,10 +77,15 @@ pub fn tiling(layer: &Layer, cfg: &ArchConfig) -> Tiling {
 /// One row of Table III.
 #[derive(Debug, Clone)]
 pub struct Table3Row {
+    /// Layer name.
     pub layer: String,
+    /// "Binary" or "Integer".
     pub kind: &'static str,
+    /// Image partitions (§V-C).
     pub parts: usize,
+    /// YodaNN tiling decision.
     pub yodann: Tiling,
+    /// TULIP tiling decision.
     pub tulip: Tiling,
 }
 

@@ -104,7 +104,9 @@ pub const WEIGHT_BITS_PER_CYCLE: f64 = 1.0;
 
 /// **[paper]** Fig. 7: image buffer (total / L1 / L2) area, µm².
 pub const IMG_BUFFER_AREA_UM2: f64 = 680e3;
+/// **[paper]** Fig. 7: image buffer L1 slice area, µm².
 pub const IMG_BUFFER_L1_AREA_UM2: f64 = 233e3;
+/// **[paper]** Fig. 7: image buffer L2 slice area, µm².
 pub const IMG_BUFFER_L2_AREA_UM2: f64 = 468e3;
 /// **[paper]** Fig. 7: kernel buffer area, µm².
 pub const KERNEL_BUFFER_AREA_UM2: f64 = 293e3;
@@ -115,6 +117,7 @@ pub const DIE_AREA_MM2: f64 = 1.8;
 /// **[paper]** Fig. 7: total processing area (PEs + MACs), µm² — the paper
 /// lists 656K (TULIP) / 647K (YodaNN-equivalent floorplan).
 pub const PROCESSING_AREA_TULIP_UM2: f64 = 656e3;
+/// **[paper]** Fig. 7: YodaNN-equivalent processing area, µm².
 pub const PROCESSING_AREA_YODANN_UM2: f64 = 647e3;
 /// **[paper]** Fig. 7: average power of the full TULIP chip, mW.
 pub const CHIP_POWER_MW: f64 = 23.9;

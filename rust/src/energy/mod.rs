@@ -9,6 +9,7 @@
 
 pub mod calib;
 
+use crate::metrics::MetricsRegistry;
 use crate::neuron::Corner;
 
 /// Activity counters accumulated by the coordinator for one layer (or a
@@ -75,6 +76,7 @@ impl Activity {
         }
     }
 
+    /// Accumulate another record's counters (e.g. across layers).
     pub fn merge(&mut self, o: &Activity) {
         self.pe_neuron_evals += o.pe_neuron_evals;
         self.pe_gated_neuron_cycles += o.pe_gated_neuron_cycles;
@@ -98,25 +100,44 @@ impl Activity {
 /// Energy breakdown in picojoules.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct EnergyBreakdown {
+    /// TULIP-PE energy (neuron evaluations, gated cycles, register bits).
     pub pe_pj: f64,
+    /// MAC energy (full and simplified units).
     pub mac_pj: f64,
+    /// Memory-subsystem energy (off-chip, L2/L1, kernel and output buffers).
     pub memory_pj: f64,
+    /// XNOR product-array energy.
     pub xnor_pj: f64,
 }
 
 impl EnergyBreakdown {
+    /// Total energy in picojoules.
     pub fn total_pj(&self) -> f64 {
         self.pe_pj + self.mac_pj + self.memory_pj + self.xnor_pj
     }
 
+    /// Total energy in microjoules.
     pub fn total_uj(&self) -> f64 {
         self.total_pj() * 1e-6
+    }
+
+    /// Publish this breakdown into a metrics registry as gauges named
+    /// `{prefix}.pe_pj`, `.mac_pj`, `.memory_pj`, `.xnor_pj` and
+    /// `.total_pj` — how the energy model reports into the observability
+    /// layer (the batch executor calls this per batch).
+    pub fn publish_to(&self, registry: &MetricsRegistry, prefix: &str) {
+        registry.gauge(&format!("{prefix}.pe_pj")).set(self.pe_pj);
+        registry.gauge(&format!("{prefix}.mac_pj")).set(self.mac_pj);
+        registry.gauge(&format!("{prefix}.memory_pj")).set(self.memory_pj);
+        registry.gauge(&format!("{prefix}.xnor_pj")).set(self.xnor_pj);
+        registry.gauge(&format!("{prefix}.total_pj")).set(self.total_pj());
     }
 }
 
 /// The pricing model (corner-aware; all tables use TT).
 #[derive(Debug, Clone, Copy)]
 pub struct EnergyModel {
+    /// Process corner the constants are derated for.
     pub corner: Corner,
 }
 
@@ -127,6 +148,7 @@ impl Default for EnergyModel {
 }
 
 impl EnergyModel {
+    /// A model at an explicit corner (default: TT).
     pub fn new(corner: Corner) -> Self {
         EnergyModel { corner }
     }
@@ -179,17 +201,23 @@ impl EnergyModel {
 /// Fig. 7 area rollup for either design point.
 #[derive(Debug, Clone, Copy)]
 pub struct AreaRollup {
+    /// PE/MAC processing area, µm².
     pub processing_um2: f64,
+    /// Image buffer (L1 + L2) area, µm².
     pub image_buffer_um2: f64,
+    /// Kernel buffer area, µm².
     pub kernel_buffer_um2: f64,
+    /// Controller area, µm².
     pub controller_um2: f64,
 }
 
 impl AreaRollup {
+    /// Total die area in µm².
     pub fn total_um2(&self) -> f64 {
         self.processing_um2 + self.image_buffer_um2 + self.kernel_buffer_um2 + self.controller_um2
     }
 
+    /// Total die area in mm².
     pub fn total_mm2(&self) -> f64 {
         self.total_um2() * 1e-6
     }

@@ -26,6 +26,17 @@
 //! * **L2/L1 (python, build-time only)** — JAX golden model + Pallas
 //!   XNOR-popcount kernels, AOT-lowered to `artifacts/*.hlo.txt` and loaded
 //!   by [`runtime`] — python never runs on the request path.
+//!
+//! ## Observability
+//! Every run reports into the [`metrics`] layer: a thread-safe registry of
+//! counters/gauges/histograms ([`metrics::MetricsRegistry`]), optional
+//! tracing spans (`--features trace`, zero-cost no-ops by default) and a
+//! machine-readable [`coordinator::PerfReport`] with per-layer
+//! cycle/energy breakdowns, per-PE utilization and program-cache
+//! statistics. `ARCHITECTURE.md` maps the paper's concepts onto these
+//! modules.
+
+#![warn(missing_docs)]
 
 pub mod arch;
 pub mod baseline;

@@ -1,154 +1,24 @@
-//! Paper-format table rendering and report plumbing shared by the CLI,
-//! examples and benches.
+//! Observability: a structured metrics [`registry`], feature-gated tracing
+//! [spans](trace), and the paper-format [table printers](tables).
+//!
+//! Three layers, coarsest to finest:
+//!
+//! 1. **Tables** ([`tables`]) — human-readable reproductions of the
+//!    paper's Tables I–V and Fig. 7, printed by the CLI.
+//! 2. **Registry** ([`registry`]) — thread-safe counters, gauges and
+//!    histograms that the batch executor, schedule cache, PE simulator
+//!    and energy model report into ([`MetricsRegistry::global`] by
+//!    default). Snapshots are deterministic and serialize into
+//!    [`PerfReport`](crate::coordinator::PerfReport) JSON.
+//! 3. **Spans** ([`trace`]) — RAII timing guards around schedule
+//!    planning, batch sharding and per-image forward passes. Compiled
+//!    out entirely (zero cost) unless the crate is built with
+//!    `--features trace`.
 
-use crate::bnn::Network;
-use crate::coordinator::report::{Comparison, Table2};
-use crate::coordinator::table3;
-use crate::energy::{tulip_area, yodann_area};
-use crate::neuron::{table1_improvements, Corner, CMOS_EQUIVALENT, HW_NEURON};
-use crate::util::bench::print_table;
+pub mod registry;
+pub mod tables;
+pub mod trace;
 
-/// Print Table I (hardware neuron vs CMOS standard-cell equivalent).
-pub fn print_table1() {
-    let (a, p, d) = table1_improvements();
-    print_table(
-        "Table I: Hardware neuron versus standard cell neuron (TT corner)",
-        &["", "Hardware Neuron [21]", "Logical Equivalent", "X Improve"],
-        &[
-            vec![
-                "Area (um^2)".into(),
-                format!("{:.1}", HW_NEURON.area_um2),
-                format!("{:.1}", CMOS_EQUIVALENT.area_um2),
-                format!("{:.1}X", a),
-            ],
-            vec![
-                "Power (uW)".into(),
-                format!("{:.2}", HW_NEURON.power_uw),
-                format!("{:.2}", CMOS_EQUIVALENT.power_uw),
-                format!("{:.1}X", p),
-            ],
-            vec![
-                "Worst Delay (ps)".into(),
-                format!("{:.0}", HW_NEURON.worst_delay_ps),
-                format!("{:.0}", CMOS_EQUIVALENT.worst_delay_ps),
-                format!("{:.1}X", d),
-            ],
-        ],
-    );
-    // Corner characterization (§V-A: SS 0.81V 125C, TT 0.9V 25C, FF 0.99V 0C).
-    let rows: Vec<Vec<String>> = Corner::ALL
-        .iter()
-        .map(|&c| {
-            let h = HW_NEURON.at_corner(c);
-            vec![
-                c.to_string(),
-                format!("{:.2}", h.power_uw),
-                format!("{:.0}", h.worst_delay_ps),
-            ]
-        })
-        .collect();
-    print_table("Hardware neuron across corners", &["corner", "power (uW)", "delay (ps)"], &rows);
-}
-
-/// Print Table II (MAC vs TULIP-PE for the 288-input neuron).
-pub fn print_table2() -> Table2 {
-    let t = Table2::compute();
-    print_table(
-        "Table II: fully reconfigurable MAC [17] vs TULIP-PE, 288-input neuron (3x3, 32 IFMs)",
-        &["Single PE Metrics", "YodaNN MAC (B)", "TULIP-PE (T)", "Ratio (B/T)"],
-        &t.rows(),
-    );
-    println!("power-delay-product advantage (paper: 2.27X): {:.2}X", t.pdp_ratio());
-    t
-}
-
-/// Print Table III (P / Z / P×Z per conv layer).
-pub fn print_table3(net: &Network) {
-    let rows: Vec<Vec<String>> = table3(net)
-        .iter()
-        .map(|r| {
-            vec![
-                format!("{} ({})", r.layer, r.kind),
-                r.parts.to_string(),
-                r.yodann.p.to_string(),
-                r.yodann.z.to_string(),
-                r.yodann.refetch_pressure().to_string(),
-                r.tulip.p.to_string(),
-                r.tulip.z.to_string(),
-                r.tulip.refetch_pressure().to_string(),
-            ]
-        })
-        .collect();
-    print_table(
-        &format!("Table III: input fetch requirements, {} layers", net.name),
-        &["Layer", "Parts", "Y.P", "Y.Z", "Y.P*Z", "T.P", "T.Z", "T.P*Z"],
-        &rows,
-    );
-}
-
-/// Print a Table IV/V-style comparison for a network.
-pub fn print_comparison(net: &Network, conv_only: bool) -> Comparison {
-    let c = Comparison::run(net, conv_only);
-    let scope = if conv_only { "Conv only (Table IV)" } else { "All layers (Table V)" };
-    print_table(
-        &format!("{scope}: {} / {}", c.network, c.dataset),
-        &["", "YodaNN", "TULIP (X)"],
-        &c.rows(),
-    );
-    c
-}
-
-/// Print the Fig. 7 area rollup for both designs.
-pub fn print_fig7() {
-    let t = tulip_area();
-    let y = yodann_area();
-    print_table(
-        "Fig. 7: area rollup (um^2)",
-        &["component", "TULIP", "YodaNN"],
-        &[
-            vec![
-                "processing (PEs+MACs)".into(),
-                format!("{:.0}", t.processing_um2),
-                format!("{:.0}", y.processing_um2),
-            ],
-            vec![
-                "image buffer (L1+L2)".into(),
-                format!("{:.0}", t.image_buffer_um2),
-                format!("{:.0}", y.image_buffer_um2),
-            ],
-            vec![
-                "kernel buffer".into(),
-                format!("{:.0}", t.kernel_buffer_um2),
-                format!("{:.0}", y.kernel_buffer_um2),
-            ],
-            vec![
-                "controller".into(),
-                format!("{:.0}", t.controller_um2),
-                format!("{:.0}", y.controller_um2),
-            ],
-            vec![
-                "total (mm^2)".into(),
-                format!("{:.2}", t.total_mm2()),
-                format!("{:.2}", y.total_mm2()),
-            ],
-        ],
-    );
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::bnn::binarynet_cifar10;
-
-    #[test]
-    fn printers_do_not_panic() {
-        print_table1();
-        let t2 = print_table2();
-        assert!(t2.pe_cycles > 0);
-        let net = binarynet_cifar10();
-        print_table3(&net);
-        let c = print_comparison(&net, true);
-        assert!(c.efficiency_gain() > 1.0);
-        print_fig7();
-    }
-}
+pub use registry::{Counter, Gauge, Histogram, HistogramSnapshot, MetricsRegistry, MetricsSnapshot};
+pub use tables::{print_comparison, print_fig7, print_table1, print_table2, print_table3};
+pub use trace::{span, take_events, trace_enabled, Span, TraceEvent};

@@ -1,0 +1,383 @@
+//! A structured, thread-safe metrics registry: counters, gauges and
+//! log₂-bucket histograms.
+//!
+//! Every instrument is an `Arc`-shared handle over lock-free atomics, so
+//! the hot paths of the batch engine (`coordinator::batch`), the schedule
+//! cache (`scheduler::cache`), the PE simulator and the energy model can
+//! all report into one registry without contending on a lock: the registry
+//! map is only locked when an instrument is first created (or a snapshot
+//! is taken), never per update. Names are plain dot-separated strings
+//! (`"batch.images"`, `"scheduler.cache.hits"`); the registry keeps them
+//! sorted so snapshots — and the JSON they serialize to — are
+//! deterministic.
+//!
+//! ```
+//! use tulip::metrics::MetricsRegistry;
+//!
+//! let reg = MetricsRegistry::new();
+//! let images = reg.counter("batch.images");
+//! images.add(32);
+//! assert_eq!(images.get(), 32);
+//!
+//! let wall = reg.histogram("batch.wall_us");
+//! wall.observe(1500);
+//! wall.observe(900);
+//! let snap = reg.snapshot();
+//! assert_eq!(snap.counters, vec![("batch.images".to_string(), 32)]);
+//! assert_eq!(snap.histograms[0].1.count, 2);
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// A monotonically increasing counter handle (cheap to clone; all clones
+/// share one atomic).
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Increment by one.
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Increment by `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A set-to-latest gauge handle holding an `f64` (stored as raw bits in an
+/// atomic, so updates are lock-free).
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Set the gauge to `v`.
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Add `v` to the gauge (compare-and-swap loop; gauges are updated
+    /// rarely — per batch, not per image — so contention is negligible).
+    pub fn add(&self, v: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Number of log₂ buckets: bucket 0 holds the value 0, bucket `b ≥ 1`
+/// holds values with bit width `b`, i.e. `[2^(b-1), 2^b - 1]`.
+const NUM_BUCKETS: usize = 65;
+
+/// Shared state behind a [`Histogram`] handle.
+#[derive(Debug)]
+pub struct HistogramCore {
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; NUM_BUCKETS],
+}
+
+impl HistogramCore {
+    fn new() -> Self {
+        HistogramCore {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// A histogram handle over non-negative integer samples (typically
+/// microseconds or cycles). Exact count/sum/min/max plus log₂ buckets for
+/// quantile estimates; every update is a handful of relaxed atomic ops.
+#[derive(Debug, Clone)]
+pub struct Histogram(Arc<HistogramCore>);
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram(Arc::new(HistogramCore::new()))
+    }
+}
+
+impl Histogram {
+    /// Record one sample.
+    pub fn observe(&self, v: u64) {
+        let c = &self.0;
+        c.count.fetch_add(1, Ordering::Relaxed);
+        c.sum.fetch_add(v, Ordering::Relaxed);
+        c.min.fetch_min(v, Ordering::Relaxed);
+        c.max.fetch_max(v, Ordering::Relaxed);
+        let bucket = (64 - v.leading_zeros()) as usize; // 0 for v == 0
+        c.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time snapshot (consistent enough for reporting; individual
+    /// fields are read independently of concurrent writers).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let c = &self.0;
+        let count = c.count.load(Ordering::Relaxed);
+        let min = c.min.load(Ordering::Relaxed);
+        HistogramSnapshot {
+            count,
+            sum: c.sum.load(Ordering::Relaxed),
+            min: if count == 0 { 0 } else { min },
+            max: c.max.load(Ordering::Relaxed),
+            buckets: c
+                .buckets
+                .iter()
+                .enumerate()
+                .filter_map(|(b, n)| {
+                    let n = n.load(Ordering::Relaxed);
+                    (n > 0).then_some((b as u32, n))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Frozen view of a [`Histogram`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Number of samples recorded.
+    pub count: u64,
+    /// Sum of all samples.
+    pub sum: u64,
+    /// Smallest sample (0 when empty).
+    pub min: u64,
+    /// Largest sample.
+    pub max: u64,
+    /// Non-empty log₂ buckets as `(bit_width, count)`; bit width 0 is the
+    /// value 0, width `b` covers `[2^(b-1), 2^b - 1]`.
+    pub buckets: Vec<(u32, u64)>,
+}
+
+impl HistogramSnapshot {
+    /// Mean sample value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile estimate from the log₂ buckets: returns the upper bound of
+    /// the bucket containing the `q`-quantile sample, clamped to the exact
+    /// observed `[min, max]`. Accurate to within a factor of 2 by
+    /// construction — adequate for p50/p99 latency reporting.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for &(width, n) in &self.buckets {
+            seen += n;
+            if seen >= rank.max(1) {
+                let upper =
+                    if width == 0 { 0 } else { (1u64 << (width - 1)).saturating_mul(2) - 1 };
+                return upper.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+/// The registry: a name-keyed set of [`Counter`]s, [`Gauge`]s and
+/// [`Histogram`]s. See the [module docs](self) for the locking story.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: RwLock<BTreeMap<String, Counter>>,
+    gauges: RwLock<BTreeMap<String, Gauge>>,
+    histograms: RwLock<BTreeMap<String, Histogram>>,
+}
+
+impl MetricsRegistry {
+    /// A fresh, empty registry (for scoped accounting — e.g. one executor
+    /// or one test — as opposed to the process-wide [`MetricsRegistry::global`]).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The process-wide registry every built-in instrument reports into by
+    /// default: the batch executor, the shared program cache, the PE
+    /// activity rollup and the energy model.
+    pub fn global() -> &'static MetricsRegistry {
+        static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(MetricsRegistry::default)
+    }
+
+    /// Get (or create) the counter named `name`.
+    pub fn counter(&self, name: &str) -> Counter {
+        if let Some(c) = self.counters.read().expect("metrics registry poisoned").get(name) {
+            return c.clone();
+        }
+        let mut map = self.counters.write().expect("metrics registry poisoned");
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get (or create) the gauge named `name`.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        if let Some(g) = self.gauges.read().expect("metrics registry poisoned").get(name) {
+            return g.clone();
+        }
+        let mut map = self.gauges.write().expect("metrics registry poisoned");
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get (or create) the histogram named `name`.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        if let Some(h) = self.histograms.read().expect("metrics registry poisoned").get(name) {
+            return h.clone();
+        }
+        let mut map = self.histograms.write().expect("metrics registry poisoned");
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Freeze every instrument into a sorted, deterministic snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: self
+                .counters
+                .read()
+                .expect("metrics registry poisoned")
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            gauges: self
+                .gauges
+                .read()
+                .expect("metrics registry poisoned")
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            histograms: self
+                .histograms
+                .read()
+                .expect("metrics registry poisoned")
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        }
+    }
+}
+
+/// A frozen, name-sorted view of a [`MetricsRegistry`] — what perf reports
+/// embed and serialize.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// `(name, value)` for every counter, sorted by name.
+    pub counters: Vec<(String, u64)>,
+    /// `(name, value)` for every gauge, sorted by name.
+    pub gauges: Vec<(String, f64)>,
+    /// `(name, snapshot)` for every histogram, sorted by name.
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc as StdArc;
+
+    #[test]
+    fn counters_sum_exactly_across_threads() {
+        let reg = StdArc::new(MetricsRegistry::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let reg = StdArc::clone(&reg);
+                std::thread::spawn(move || {
+                    let c = reg.counter("t.ops");
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(reg.counter("t.ops").get(), 4000);
+    }
+
+    #[test]
+    fn gauge_set_and_add() {
+        let reg = MetricsRegistry::new();
+        let g = reg.gauge("t.level");
+        g.set(2.5);
+        g.add(1.25);
+        assert_eq!(g.get(), 3.75);
+        // Handles alias the same storage.
+        assert_eq!(reg.gauge("t.level").get(), 3.75);
+    }
+
+    #[test]
+    fn histogram_stats_are_exact_buckets_are_log2() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("t.lat");
+        for v in [0u64, 1, 2, 3, 900, 1500] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!((s.count, s.sum, s.min, s.max), (6, 2406, 0, 1500));
+        assert_eq!(s.mean(), 401.0);
+        // 0 → width 0; 1 → 1; 2,3 → 2; 900 → 10; 1500 → 11.
+        assert_eq!(s.buckets, vec![(0, 1), (1, 1), (2, 2), (10, 1), (11, 1)]);
+        assert_eq!(s.quantile(0.0), 0);
+        assert!(s.quantile(0.5) <= 3);
+        assert_eq!(s.quantile(1.0), 1500);
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroes() {
+        let s = Histogram::default().snapshot();
+        assert_eq!((s.count, s.sum, s.min, s.max), (0, 0, 0, 0));
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.quantile(0.99), 0);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_complete() {
+        let reg = MetricsRegistry::new();
+        reg.counter("b.second").add(2);
+        reg.counter("a.first").add(1);
+        reg.gauge("z.gauge").set(9.0);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters, vec![("a.first".to_string(), 1), ("b.second".to_string(), 2)]);
+        assert_eq!(snap.gauges, vec![("z.gauge".to_string(), 9.0)]);
+        assert!(snap.histograms.is_empty());
+    }
+
+    #[test]
+    fn global_registry_is_a_singleton() {
+        let a = MetricsRegistry::global();
+        let b = MetricsRegistry::global();
+        assert!(std::ptr::eq(a, b));
+    }
+}

@@ -50,6 +50,7 @@ impl Corner {
         (self.vdd() / Corner::TT.vdd()).powi(2)
     }
 
+    /// Every corner, slow to fast.
     pub const ALL: [Corner; 3] = [Corner::SS, Corner::TT, Corner::FF];
 }
 

@@ -128,16 +128,26 @@ pub enum WSrc {
     /// External input channel `i`.
     Ext(usize),
     /// Register bit copy.
-    Reg { reg: usize, bit: usize },
+    Reg {
+        /// Source register index.
+        reg: usize,
+        /// Source bit index.
+        bit: usize,
+    },
+    /// Constant 0.
     Zero,
+    /// Constant 1.
     One,
 }
 
 /// One end-of-cycle register-bit write.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RegWrite {
+    /// Destination register index.
     pub reg: usize,
+    /// Destination bit index.
     pub bit: usize,
+    /// Value source.
     pub src: WSrc,
 }
 

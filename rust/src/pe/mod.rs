@@ -41,6 +41,49 @@ impl PeStats {
         self.reg_reads += other.reg_reads;
         self.reg_writes += other.reg_writes;
     }
+
+    /// Counter-wise difference `self − earlier`, for per-layer deltas
+    /// between two cumulative snapshots of the same array. Saturating, so
+    /// a reset between snapshots yields zeros instead of underflowing.
+    pub fn delta(&self, earlier: &PeStats) -> PeStats {
+        PeStats {
+            cycles: self.cycles.saturating_sub(earlier.cycles),
+            neuron_evals: self.neuron_evals.saturating_sub(earlier.neuron_evals),
+            gated_neuron_cycles: self
+                .gated_neuron_cycles
+                .saturating_sub(earlier.gated_neuron_cycles),
+            reg_reads: self.reg_reads.saturating_sub(earlier.reg_reads),
+            reg_writes: self.reg_writes.saturating_sub(earlier.reg_writes),
+        }
+    }
+
+    /// Fraction of neuron-cycles doing real work: `evals / (evals +
+    /// gated)`. This is the per-PE utilization reported in perf reports
+    /// (the paper's energy argument rests on gating idle neurons, §IV-E);
+    /// 0 when the PE never clocked.
+    pub fn utilization(&self) -> f64 {
+        let total = self.neuron_evals + self.gated_neuron_cycles;
+        if total == 0 {
+            0.0
+        } else {
+            self.neuron_evals as f64 / total as f64
+        }
+    }
+
+    /// Map these counters (plus the lockstep cycle count they were
+    /// gathered over) into the energy model's [`Activity`] record, pricing
+    /// evaluations, gated cycles and register bit-accesses.
+    ///
+    /// [`Activity`]: crate::energy::Activity
+    pub fn activity(&self, cycles: u64) -> crate::energy::Activity {
+        crate::energy::Activity {
+            pe_neuron_evals: self.neuron_evals,
+            pe_gated_neuron_cycles: self.gated_neuron_cycles,
+            pe_reg_accesses: self.reg_reads + self.reg_writes,
+            total_cycles: cycles,
+            ..Default::default()
+        }
+    }
 }
 
 /// One TULIP processing element.
@@ -58,6 +101,7 @@ impl Default for TulipPe {
 }
 
 impl TulipPe {
+    /// A fresh PE: all neurons low, registers zeroed, counters at zero.
     pub fn new() -> Self {
         TulipPe {
             neurons: [HwNeuron::new(); NUM_NEURONS],
@@ -77,14 +121,17 @@ impl TulipPe {
         &mut self.regs
     }
 
+    /// Read-only view of the register file.
     pub fn regs(&self) -> &RegisterFile {
         &self.regs
     }
 
+    /// Activity counters accumulated since the last reset.
     pub fn stats(&self) -> PeStats {
         self.stats
     }
 
+    /// Zero the activity counters (register contents are left alone).
     pub fn reset_stats(&mut self) {
         self.stats = PeStats::default();
         self.regs.reset_counters();

@@ -19,6 +19,7 @@ pub struct RegisterFile {
 }
 
 impl RegisterFile {
+    /// An empty register file with zeroed counters.
     pub fn new() -> Self {
         Self::default()
     }
@@ -74,6 +75,7 @@ impl RegisterFile {
         (self.reads, self.writes)
     }
 
+    /// Zero the access counters, keeping contents.
     pub fn reset_counters(&mut self) {
         self.reads = 0;
         self.writes = 0;

@@ -13,6 +13,7 @@ use std::path::{Path, PathBuf};
 /// A loaded, compiled golden model.
 pub struct GoldenModel {
     exe: xla::PjRtLoadedExecutable,
+    /// Artifact stem this model was loaded from.
     pub name: String,
 }
 

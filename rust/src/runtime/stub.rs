@@ -15,6 +15,7 @@ use std::path::{Path, PathBuf};
 /// A loaded, compiled golden model. Never constructed by the stub — `load`
 /// always errors first — but the type keeps caller code compiling.
 pub struct GoldenModel {
+    /// Artifact stem this model would have been loaded from.
     pub name: String,
 }
 

@@ -34,7 +34,9 @@ pub struct TreeNode {
 /// The decomposition of an `n`-input popcount into bounded-fanin adds.
 #[derive(Debug, Clone)]
 pub struct AdderTree {
+    /// All tree nodes, leaves first.
     pub nodes: Vec<TreeNode>,
+    /// Index of the root node in `nodes`.
     pub root: usize,
     /// Number of 1-bit inputs (products).
     pub n: usize,
@@ -128,6 +130,7 @@ impl Default for RegAlloc {
 }
 
 impl RegAlloc {
+    /// An allocator with the whole register file free.
     pub fn new() -> Self {
         RegAlloc { used: [0; NUM_REGS], peak_bits: 0, live_bits: 0 }
     }
@@ -219,6 +222,7 @@ impl RegAlloc {
         self.live_bits -= width;
     }
 
+    /// Release a field given as a [`Loc`] (no-op for non-register locations).
     pub fn free_loc(&mut self, loc: Loc) {
         if let Loc::Reg { reg, lsb, width } = loc {
             self.free(reg, lsb, width);
@@ -230,6 +234,7 @@ impl RegAlloc {
         self.peak_bits
     }
 
+    /// Currently-live bits.
     pub fn live_bits(&self) -> usize {
         self.live_bits
     }
@@ -254,6 +259,7 @@ pub struct ThresholdNodeSchedule {
 }
 
 impl ThresholdNodeSchedule {
+    /// Tree + comparison cycles (= schedule length).
     pub fn total_cycles(&self) -> u64 {
         self.schedule.cycles() as u64
     }

@@ -18,9 +18,48 @@
 
 use super::seqgen::{CachedProgram, OpDesc};
 use super::{adder_tree, ops, Loc, Schedule};
+use crate::metrics::MetricsRegistry;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Instant;
+
+/// Point-in-time snapshot of a [`ProgramCache`]'s effectiveness counters —
+/// what perf reports embed as their `cache` section.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that had to build a program. Under concurrent misses of the
+    /// same descriptor both builders count a miss; the cached program is
+    /// still unique.
+    pub misses: u64,
+    /// Distinct programs currently cached.
+    pub entries: usize,
+    /// Wall-clock nanoseconds spent building programs on the miss path.
+    /// A threshold node's first build recurses into its shared sum tree,
+    /// whose build time is then counted both on its own and inside its
+    /// parent's span — read this as "time the cache saved per future hit",
+    /// not as an exact disjoint sum.
+    pub planning_ns: u64,
+}
+
+impl CacheStats {
+    /// Hits as a fraction of all lookups (0 when the cache is untouched).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Planning time in milliseconds.
+    pub fn planning_ms(&self) -> f64 {
+        self.planning_ns as f64 * 1e-6
+    }
+}
 
 /// PE-array parameters the generated control streams depend on. Programs
 /// cached under one parameter set are only valid for identically shaped
@@ -62,6 +101,7 @@ pub struct ProgramCache {
     map: RwLock<HashMap<OpDesc, Arc<CachedProgram>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    planning_ns: AtomicU64,
 }
 
 impl ProgramCache {
@@ -98,6 +138,23 @@ impl ProgramCache {
     }
 
     /// Get (or build) the program for an operation descriptor.
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use tulip::scheduler::seqgen::OpDesc;
+    /// use tulip::scheduler::ProgramCache;
+    ///
+    /// let cache = ProgramCache::new();
+    /// let d = OpDesc::ThresholdNode { n: 9, t_popcount: 4 };
+    /// let first = cache.program(&d); // miss: plans the schedule
+    /// let again = cache.program(&d); // hit: the same broadcast Arc
+    /// assert!(Arc::ptr_eq(&first, &again));
+    ///
+    /// let s = cache.snapshot();
+    /// // One hit; two misses (the threshold node plus its shared sum tree).
+    /// assert_eq!((s.hits, s.misses, s.entries), (1, 2, 2));
+    /// assert!(s.planning_ns > 0 && s.hit_rate() > 0.0);
+    /// ```
     pub fn program(&self, desc: &OpDesc) -> Arc<CachedProgram> {
         if let Some(p) = self.map.read().expect("program cache poisoned").get(desc) {
             self.hits.fetch_add(1, Ordering::Relaxed);
@@ -107,7 +164,10 @@ impl ProgramCache {
         // Build outside any lock: generation may recurse into `program`
         // (a threshold node shares its sum-tree plan) and can take
         // milliseconds for large fan-ins.
+        let _span = crate::metrics::span("scheduler.plan");
+        let t0 = Instant::now();
         let built = Arc::new(self.build(desc));
+        self.planning_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         let mut map = self.map.write().expect("program cache poisoned");
         // A racing thread may have inserted meanwhile; keep the first entry
         // so every consumer broadcasts the same `Arc`.
@@ -131,8 +191,33 @@ impl ProgramCache {
         self.map.read().expect("program cache poisoned").len()
     }
 
+    /// Whether no program has been cached yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Snapshot of the cache's effectiveness counters (hits, misses,
+    /// entries, planning time). See the [`ProgramCache::program`] example.
+    pub fn snapshot(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.len(),
+            planning_ns: self.planning_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Publish the current counters into a metrics registry as gauges
+    /// (`scheduler.cache.hits` / `.misses` / `.entries` / `.hit_rate` /
+    /// `.planning_ms`). Gauges, not counters, because the cache already
+    /// owns the monotonic state — publishing is set-to-latest.
+    pub fn publish_to(&self, registry: &MetricsRegistry) {
+        let s = self.snapshot();
+        registry.gauge("scheduler.cache.hits").set(s.hits as f64);
+        registry.gauge("scheduler.cache.misses").set(s.misses as f64);
+        registry.gauge("scheduler.cache.entries").set(s.entries as f64);
+        registry.gauge("scheduler.cache.hit_rate").set(s.hit_rate());
+        registry.gauge("scheduler.cache.planning_ms").set(s.planning_ms());
     }
 
     fn build(&self, desc: &OpDesc) -> CachedProgram {
@@ -249,6 +334,27 @@ mod tests {
             assert!(Arc::ptr_eq(p, &canonical), "all threads must hold the map's entry");
         }
         assert_eq!(cache.len(), 2, "one threshold program + one shared sum tree");
+    }
+
+    #[test]
+    fn snapshot_matches_legacy_stats_and_times_planning() {
+        let cache = ProgramCache::new();
+        let d = OpDesc::SumTree { n: 32 };
+        let _ = cache.program(&d); // miss
+        let _ = cache.program(&d); // hit
+        let s = cache.snapshot();
+        assert_eq!((s.hits, s.misses), cache.stats());
+        assert_eq!(s.entries, cache.len());
+        assert!(s.planning_ns > 0, "the miss path must record planning time");
+        assert_eq!(s.hit_rate(), 0.5);
+        // Warm lookups add no planning time.
+        let _ = cache.program(&d);
+        assert_eq!(cache.snapshot().planning_ns, s.planning_ns);
+        // Publishing mirrors the snapshot into gauges.
+        let reg = MetricsRegistry::new();
+        cache.publish_to(&reg);
+        assert_eq!(reg.gauge("scheduler.cache.entries").get(), s.entries as f64);
+        assert_eq!(reg.gauge("scheduler.cache.hit_rate").get(), 0.5);
     }
 
     #[test]

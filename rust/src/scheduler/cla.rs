@@ -65,6 +65,7 @@ impl AdderScheme {
         }
     }
 
+    /// Every scheme, in ablation order.
     pub const ALL: [AdderScheme; 3] = [AdderScheme::RippleFa, AdderScheme::Cla2, AdderScheme::Cla3];
 }
 
@@ -106,9 +107,13 @@ pub fn node_cycles(n: usize, scheme: AdderScheme) -> u64 {
 /// Ablation row: cycles, PE-energy factor and PE-area factor for one node.
 #[derive(Debug, Clone, Copy)]
 pub struct ClaAblation {
+    /// The adder scheme this row ablates.
     pub scheme: AdderScheme,
+    /// Threshold-node cycles under the scheme.
     pub node_cycles: u64,
+    /// Cycle speedup relative to ripple-FA.
     pub speedup_vs_fa: f64,
+    /// PE-area factor relative to ripple-FA.
     pub area_factor: f64,
     /// Energy per node relative to ripple-FA: fewer cycles × costlier
     /// evaluations.

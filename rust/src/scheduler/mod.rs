@@ -21,7 +21,7 @@ pub mod ops;
 pub mod seqgen;
 pub mod storage;
 
-pub use cache::{ArchParams, ProgramCache};
+pub use cache::{ArchParams, CacheStats, ProgramCache};
 
 use crate::pe::{ControlWord, TulipPe};
 
@@ -48,6 +48,7 @@ pub struct Schedule {
 }
 
 impl Schedule {
+    /// An empty schedule.
     pub fn new() -> Self {
         Self::default()
     }
@@ -173,6 +174,7 @@ pub enum Loc {
 }
 
 impl Loc {
+    /// Operand width in bits.
     pub fn width(&self) -> usize {
         match *self {
             Loc::Reg { width, .. } | Loc::Const { width, .. } | Loc::Stream { width, .. } => width,

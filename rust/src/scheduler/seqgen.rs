@@ -42,6 +42,7 @@ pub struct SequenceGenerator {
 /// A cached program together with the metadata the runners need.
 #[derive(Debug)]
 pub struct CachedProgram {
+    /// The control-word program.
     pub schedule: Schedule,
     /// Neuron holding the 1-bit result (threshold node / maxpool), if any.
     pub out_neuron: Option<usize>,

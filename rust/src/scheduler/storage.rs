@@ -58,9 +58,13 @@ pub fn exact_peak_live_bits(n: usize) -> usize {
 /// example.
 #[derive(Debug, Clone, Copy)]
 pub struct StorageReport {
+    /// Fan-in the report covers.
     pub n: usize,
+    /// Exact peak simultaneously-live bits from the RPO walk.
     pub exact_peak_bits: usize,
+    /// The paper's analytic upper bound on peak bits.
     pub paper_bound_bits: usize,
+    /// Physical register-file capacity (4 × 16 bits).
     pub physical_bits: usize,
 }
 

@@ -17,11 +17,45 @@ use crate::scheduler::seqgen::{OpDesc, SequenceGenerator};
 /// Result of a bit-true layer execution.
 #[derive(Debug, Clone)]
 pub struct CycleResult {
+    /// The layer's output activation tensor.
     pub output: BitTensor,
     /// Aggregated PE activity.
     pub stats: PeStats,
     /// Wall-clock cycles (PEs run in lockstep; idle PEs are clock-gated).
     pub cycles: u64,
+}
+
+/// Per-layer observability record of a whole-network forward pass: where
+/// the cycles and the PE activity went. Produced by [`forward_bin_cycle`];
+/// the batched engine merges these across images. The records partition
+/// the network exactly: `Σ layer.cycles == ForwardResult::cycles` and
+/// `Σ layer.stats == ForwardResult::stats` (asserted by `tests/metrics.rs`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerObs {
+    /// Layer name from the network description.
+    pub name: String,
+    /// `"conv"`, `"conv+pool"` (fused max-pool folded into its conv
+    /// layer's record) or `"fc"`.
+    pub kind: &'static str,
+    /// Lockstep wall-clock cycles spent in this layer.
+    pub cycles: u64,
+    /// PE activity delta attributable to this layer.
+    pub stats: PeStats,
+}
+
+impl LayerObs {
+    /// Accumulate another image's record for the same layer (the batched
+    /// engine's per-layer aggregate).
+    pub fn merge(&mut self, other: &LayerObs) {
+        debug_assert_eq!(self.name, other.name, "merging records of different layers");
+        self.cycles += other.cycles;
+        self.stats.merge(&other.stats);
+    }
+
+    /// This layer's neuron utilization (see [`PeStats::utilization`]).
+    pub fn utilization(&self) -> f64 {
+        self.stats.utilization()
+    }
 }
 
 /// Execute a binary conv layer bit-true on the PE array. One PE per OFM
@@ -163,6 +197,11 @@ pub struct ForwardResult {
     /// PE activity for this image alone — the array's counters are reset on
     /// entry, so consecutive calls yield independently summable records.
     pub stats: PeStats,
+    /// Per-layer breakdown: partitions `cycles` and `stats` exactly.
+    pub layers: Vec<LayerObs>,
+    /// Per-PE activity in array-flattened index order (same indexing as
+    /// [`PeArray::pe_mut`]) — the source for per-PE utilization reports.
+    pub per_pe: Vec<PeStats>,
 }
 
 /// Run a whole **binary** network bit-true on the PE array: conv layers
@@ -180,10 +219,13 @@ pub fn forward_bin_cycle(
     assert_eq!(net.layers.len(), weights.len(), "one weight set per layer");
     array.reset_stats();
     let mut cycles = 0u64;
+    let mut layers: Vec<LayerObs> = Vec::with_capacity(net.layers.len());
     let mut act = input.clone();
     let mut flat: Option<Vec<bool>> = None;
     for (i, (layer, w)) in net.layers.iter().zip(weights).enumerate() {
         let last = i + 1 == net.layers.len();
+        let stats_before = array.stats();
+        let cycles_before = cycles;
         if layer.is_conv() {
             assert!(layer.is_binary(), "forward_bin_cycle handles binary networks only");
             assert!(
@@ -194,18 +236,37 @@ pub fn forward_bin_cycle(
             let r = conv_bin_cycle(array, sg, &act, layer, w);
             cycles += r.cycles;
             act = r.output;
+            let kind = if layer.pool.is_some() { "conv+pool" } else { "conv" };
             if let Some((pk, ps)) = layer.pool {
                 let p = maxpool_cycle(array, sg, &act, pk, ps);
                 cycles += p.cycles;
                 act = p.output;
             }
+            layers.push(LayerObs {
+                name: layer.name.clone(),
+                kind,
+                cycles: cycles - cycles_before,
+                stats: array.stats().delta(&stats_before),
+            });
         } else {
             assert!(layer.is_binary(), "forward_bin_cycle handles binary networks only");
             let input_flat = flat.take().unwrap_or_else(|| act.flatten());
             let (bits, scores, fc_cycles) = fc_bin_cycle(array, sg, &input_flat, layer, w);
             cycles += fc_cycles;
+            layers.push(LayerObs {
+                name: layer.name.clone(),
+                kind: "fc",
+                cycles: cycles - cycles_before,
+                stats: array.stats().delta(&stats_before),
+            });
             if last {
-                return ForwardResult { scores, cycles, stats: array.stats() };
+                return ForwardResult {
+                    scores,
+                    cycles,
+                    stats: array.stats(),
+                    layers,
+                    per_pe: array.per_pe_stats(),
+                };
             }
             flat = Some(bits);
         }

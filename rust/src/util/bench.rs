@@ -7,14 +7,20 @@ use std::time::{Duration, Instant};
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Case name as printed.
     pub name: String,
+    /// Median per-iteration time across samples.
     pub median: Duration,
+    /// Fastest sample's per-iteration time.
     pub min: Duration,
+    /// Slowest sample's per-iteration time.
     pub max: Duration,
+    /// Iterations per timed sample (auto-scaled).
     pub iters_per_sample: u64,
 }
 
 impl BenchResult {
+    /// Median per-iteration time in nanoseconds.
     pub fn median_ns(&self) -> f64 {
         self.median.as_secs_f64() * 1e9
     }

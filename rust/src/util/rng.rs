@@ -10,6 +10,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed the generator deterministically from a single `u64`.
     pub fn seed_from_u64(seed: u64) -> Self {
         // SplitMix64 to fill the state, as recommended by the xoshiro authors.
         let mut sm = seed;
@@ -23,6 +24,7 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
+    /// Next uniform 64-bit value.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);

@@ -1,0 +1,197 @@
+//! Observability-layer integration tests: the per-layer/per-PE breakdowns
+//! partition the engine's totals exactly, the program-cache counters match
+//! forced-replan scenarios, batch runs publish consistent numbers into a
+//! metrics registry, and the perf report serializes all of it.
+
+use std::sync::Arc;
+use tulip::bnn::tensor::{BinWeights, BitTensor};
+use tulip::bnn::tiny_bnn;
+use tulip::coordinator::{BatchExecutor, BatchRequest, PerfReport};
+use tulip::metrics::{self, MetricsRegistry};
+use tulip::pe::PeStats;
+use tulip::scheduler::seqgen::SequenceGenerator;
+use tulip::scheduler::ProgramCache;
+use tulip::sim::cycle::forward_bin_cycle;
+
+fn tiny_weights() -> (tulip::bnn::Network, Vec<BinWeights>) {
+    let net = tiny_bnn(8, 4, 3);
+    let weights: Vec<BinWeights> = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 300 + i as u64))
+        .collect();
+    (net, weights)
+}
+
+fn tiny_executor(cache: Arc<ProgramCache>) -> BatchExecutor {
+    let (net, weights) = tiny_weights();
+    BatchExecutor::new(net, weights).unwrap().with_array(1, 4).with_cache(cache)
+}
+
+/// The per-layer observability records partition the forward pass exactly:
+/// Σ layer cycles == whole-network cycles and Σ layer stats == total stats.
+#[test]
+fn per_layer_records_partition_forward_pass() {
+    let (net, weights) = tiny_weights();
+    let input = BitTensor::random(8, 8, 4, 77);
+    let mut array = tulip::arch::unit::PeArray::new(1, 4);
+    let mut sg = SequenceGenerator::new();
+    let f = forward_bin_cycle(&mut array, &mut sg, &input, &net, &weights);
+
+    assert_eq!(f.layers.len(), net.layers.len());
+    let layer_cycles: u64 = f.layers.iter().map(|l| l.cycles).sum();
+    assert_eq!(layer_cycles, f.cycles, "layer cycles must sum to the network total");
+
+    let mut summed = PeStats::default();
+    for l in &f.layers {
+        summed.merge(&l.stats);
+    }
+    assert_eq!(summed, f.stats, "layer stats must sum to the network total");
+
+    // Per-PE records cover the same activity from the other axis.
+    assert_eq!(f.per_pe.len(), 4);
+    let mut by_pe = PeStats::default();
+    for s in &f.per_pe {
+        by_pe.merge(s);
+    }
+    assert_eq!(by_pe.neuron_evals, f.stats.neuron_evals);
+    assert_eq!(by_pe.gated_neuron_cycles, f.stats.gated_neuron_cycles);
+    assert_eq!(by_pe.reg_reads + by_pe.reg_writes, f.stats.reg_reads + f.stats.reg_writes);
+
+    // The conv layer's record absorbs its fused pool; kinds are stable.
+    assert_eq!(f.layers[0].kind, "conv+pool");
+    assert!(f.layers[1..].iter().all(|l| l.kind == "fc"));
+    assert!(f.layers.iter().all(|l| (0.0..=1.0).contains(&l.utilization())));
+}
+
+/// Batch aggregates partition the same way: per-layer and per-PE merges
+/// across the batch reproduce the batch totals.
+#[test]
+fn batch_breakdowns_match_totals() {
+    let exec = tiny_executor(Arc::new(ProgramCache::new()));
+    let req = BatchRequest::new((0..4).map(|i| BitTensor::random(8, 8, 4, 50 + i)).collect());
+    let result = exec.run(&req).unwrap();
+
+    let per_layer = result.per_layer();
+    assert_eq!(per_layer.iter().map(|l| l.cycles).sum::<u64>(), result.cycles);
+    let mut stats = PeStats::default();
+    for l in &per_layer {
+        stats.merge(&l.stats);
+    }
+    assert_eq!(stats, result.stats);
+
+    let mut by_pe = PeStats::default();
+    for s in result.per_pe() {
+        by_pe.merge(&s);
+    }
+    assert_eq!(by_pe.neuron_evals, result.stats.neuron_evals);
+
+    // Worker accounting covers every image exactly once.
+    let workers = result.worker_summaries();
+    assert_eq!(workers.iter().map(|w| w.images).sum::<usize>(), req.len());
+    assert!(result.images.iter().all(|img| img.host_ns > 0));
+}
+
+/// Cache counters match forced-replan scenarios: a fresh cache re-misses
+/// exactly the cold-run count, a warm cache adds hits only, and planning
+/// time accrues on misses alone. Single-threaded: concurrent misses of one
+/// descriptor are allowed to double-count (documented on [`CacheStats`]),
+/// so exact counter equality is only pinned where execution is serial.
+#[test]
+fn cache_counters_match_forced_replan() {
+    let req = BatchRequest::new((0..2).map(|i| BitTensor::random(8, 8, 4, i)).collect());
+
+    // Cold run on a private cache.
+    let cold_cache = Arc::new(ProgramCache::new());
+    let exec = tiny_executor(Arc::clone(&cold_cache)).with_threads(1);
+    exec.run(&req).unwrap();
+    let cold = cold_cache.snapshot();
+    assert!(cold.misses > 0, "cold run must plan programs");
+    assert!(cold.planning_ns > 0, "planning time must be recorded");
+    assert_eq!(cold.entries, cold.misses as usize, "every cold miss inserts one program");
+
+    // Warm re-run: same batch, same cache — no new planning.
+    exec.run(&req).unwrap();
+    let warm = cold_cache.snapshot();
+    assert_eq!(warm.misses, cold.misses, "a warm cache must not re-plan");
+    assert_eq!(warm.planning_ns, cold.planning_ns, "hits must not accrue planning time");
+    assert!(warm.hits > cold.hits);
+    assert!(warm.hit_rate() > cold.hit_rate());
+
+    // Forced replan: a fresh cache misses exactly the cold count again.
+    let fresh_cache = Arc::new(ProgramCache::new());
+    let fresh_exec = tiny_executor(Arc::clone(&fresh_cache)).with_threads(1);
+    fresh_exec.run(&req).unwrap();
+    assert_eq!(fresh_cache.snapshot().misses, cold.misses, "replan count is deterministic");
+    assert_eq!(fresh_cache.snapshot().entries, cold.entries);
+}
+
+/// A batch run published into a scoped registry reports exactly the
+/// numbers the result itself carries.
+#[test]
+fn published_metrics_match_batch_result() {
+    let exec = tiny_executor(Arc::new(ProgramCache::new()));
+    let req = BatchRequest::new((0..3).map(|i| BitTensor::random(8, 8, 4, 20 + i)).collect());
+    let result = exec.run(&req).unwrap();
+
+    let reg = MetricsRegistry::new();
+    exec.publish_to(&reg, &result);
+    assert_eq!(reg.counter("batch.runs").get(), 1);
+    assert_eq!(reg.counter("batch.images").get(), 3);
+    assert_eq!(reg.counter("batch.sim_cycles").get(), result.cycles);
+    assert_eq!(reg.counter("pe.neuron_evals").get(), result.stats.neuron_evals);
+    assert_eq!(reg.gauge("pe.utilization").get(), result.stats.utilization());
+    let total_pj = reg.gauge("batch.energy.total_pj").get();
+    assert!((total_pj - result.energy().total_pj()).abs() < 1e-9);
+    let cache = exec.cache_handle().snapshot();
+    assert_eq!(reg.gauge("scheduler.cache.misses").get(), cache.misses as f64);
+
+    // The histogram saw one sample per image.
+    let snap = reg.snapshot();
+    let (_, host) = snap.histograms.iter().find(|(k, _)| k == "image.host_us").unwrap();
+    assert_eq!(host.count, 3);
+
+    // Publishing twice accumulates counters but re-sets gauges.
+    exec.publish_to(&reg, &result);
+    assert_eq!(reg.counter("batch.images").get(), 6);
+    assert_eq!(reg.gauge("pe.utilization").get(), result.stats.utilization());
+}
+
+/// The perf report freezes the batch consistently and its JSON carries the
+/// per-layer/per-PE/cache sections end to end.
+#[test]
+fn perf_report_is_consistent_with_result() {
+    let exec = tiny_executor(Arc::new(ProgramCache::new()));
+    let req = BatchRequest::new((0..2).map(|i| BitTensor::random(8, 8, 4, 5 + i)).collect());
+    let result = exec.run(&req).unwrap();
+    let reg = MetricsRegistry::new();
+    exec.publish_to(&reg, &result);
+    let report = PerfReport::from_batch(&exec, &result).with_metrics(reg.snapshot());
+
+    assert_eq!(report.batch, 2);
+    assert_eq!(report.total_cycles, result.cycles);
+    assert_eq!(report.layers.iter().map(|l| l.cycles).sum::<u64>(), result.cycles);
+    assert_eq!(report.cache, exec.cache_handle().snapshot());
+
+    let json = report.to_json();
+    assert!(json.contains("\"schema\": \"tulip.perf_report/v1\""));
+    assert!(json.contains("\"conv+pool\""));
+    assert!(json.contains("\"batch.images\""), "embedded registry snapshot missing");
+}
+
+/// Without the `trace` feature spans are inert; with it they record.
+#[test]
+fn spans_are_noops_unless_enabled() {
+    assert_eq!(metrics::trace_enabled(), cfg!(feature = "trace"));
+    let _ = metrics::take_events(); // drain whatever earlier tests left
+    {
+        let _span = metrics::span("test.outer");
+    }
+    let events = metrics::take_events();
+    if cfg!(feature = "trace") {
+        assert!(events.iter().any(|e| e.name == "test.outer"));
+    } else {
+        assert!(events.is_empty(), "spans must be zero-cost no-ops by default");
+    }
+}
