@@ -1,89 +1,167 @@
 //! L3 hot-path benchmarks — the profiling substrate for EXPERIMENTS.md
 //! §Perf. Covers every loop the coordinator or the bit-true engine sits
 //! in: PE stepping, schedule generation (cached and uncached), bit-true
-//! layer execution, and the full analytic network model.
+//! layer execution, the full analytic network model, and the scalar vs
+//! bit-sliced forward-pass comparison that gates the lane-parallel engine.
 //!
 //! Run: `cargo bench --bench hotpath`
+//!
+//! Emits `BENCH_hotpath.json` (schema `tulip.bench_hotpath/v1`) in the
+//! working directory: every case's median ns plus a `forward` block with
+//! scalar vs bit-sliced ns/image and the resulting speedup. CI uploads the
+//! file as the `bench-hotpath` artifact.
 
-use tulip::arch::unit::PeArray;
+use tulip::arch::unit::{PeArray, SlicedArray};
 use tulip::bnn::layer::LayerKind;
 use tulip::bnn::tensor::{BinWeights, BitTensor};
-use tulip::bnn::{alexnet, binarynet_cifar10, Layer};
+use tulip::bnn::{alexnet, binarynet_cifar10, tiny_bnn, Layer};
 use tulip::config::ArchConfig;
 use tulip::coordinator::NetworkPerf;
 use tulip::pe::TulipPe;
 use tulip::scheduler::adder_tree;
 use tulip::scheduler::seqgen::{OpDesc, SequenceGenerator};
-use tulip::sim::cycle;
-use tulip::util::bench::bench;
+use tulip::sim::cycle::{self, SlicedWeights};
+use tulip::util::bench::{bench, BenchResult};
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn write_report(cases: &[BenchResult], scalar_ns: f64, sliced_ns: f64) {
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": \"tulip.bench_hotpath/v1\",\n  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        let comma = if i + 1 == cases.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"name\": {}, \"median_ns\": {:.1}}}{}\n",
+            json_str(&c.name),
+            c.median_ns(),
+            comma
+        ));
+    }
+    s.push_str("  ],\n  \"forward\": {\n");
+    s.push_str(&format!("    \"scalar_ns_per_image\": {scalar_ns:.1},\n"));
+    s.push_str(&format!("    \"bit_sliced_ns_per_image\": {sliced_ns:.1},\n"));
+    s.push_str(&format!("    \"speedup\": {:.2}\n", scalar_ns / sliced_ns));
+    s.push_str("  }\n}\n");
+    std::fs::write("BENCH_hotpath.json", &s).expect("write BENCH_hotpath.json");
+    println!("\nwrote BENCH_hotpath.json (speedup {:.2}x)", scalar_ns / sliced_ns);
+}
 
 fn main() {
+    let mut cases: Vec<BenchResult> = Vec::new();
+
     // --- 1. PE micro-step (the innermost bit-true loop) -----------------
     let mut sg = SequenceGenerator::new();
     let prog = sg.program(&OpDesc::ThresholdNode { n: 288, t_popcount: 144 });
     let word = &prog.schedule.words[10];
     let mut pe = TulipPe::new();
-    bench("pe.step (single control word)", 7, || {
+    cases.push(bench("pe.step (single control word)", 7, || {
         pe.step(word, &[]);
         pe.neuron_out(0)
-    });
+    }));
 
     // --- 2. Whole-node bit-true execution -------------------------------
     let products = BitTensor::random(1, 1, 288, 3).data;
-    bench("bit-true 288-node (384 cycles)", 7, || {
+    cases.push(bench("bit-true 288-node (384 cycles)", 7, || {
         let mut pe = TulipPe::new();
         prog.schedule.run_on(&mut pe, &products);
         pe.neuron_out(prog.out_neuron.unwrap())
-    });
+    }));
 
     // --- 3. Schedule generation: uncached vs cached ----------------------
-    bench("threshold_node(288) generation (uncached)", 5, || {
+    cases.push(bench("threshold_node(288) generation (uncached)", 5, || {
         adder_tree::threshold_node(288, 144).total_cycles()
-    });
-    bench("threshold_node(1023) generation (uncached)", 5, || {
+    }));
+    cases.push(bench("threshold_node(1023) generation (uncached)", 5, || {
         adder_tree::threshold_node(1023, 512).total_cycles()
-    });
+    }));
     let mut sg2 = SequenceGenerator::new();
     let _ = sg2.program(&OpDesc::ThresholdNode { n: 288, t_popcount: 144 });
-    bench("seqgen.program(288) (cached)", 7, || {
+    cases.push(bench("seqgen.program(288) (cached)", 7, || {
         sg2.program(&OpDesc::ThresholdNode { n: 288, t_popcount: 144 }).schedule.cycles()
-    });
+    }));
     // A realistic conv-layer setup: 64 channels, 64 distinct thresholds —
     // the shared-tree optimization makes the marginal threshold a
     // clone+append instead of a full backtracking re-plan.
-    bench("seqgen: 64 distinct thresholds (n=288)", 5, || {
+    cases.push(bench("seqgen: 64 distinct thresholds (n=288)", 5, || {
         let mut sg = SequenceGenerator::new();
         let mut total = 0usize;
         for t in 100..164 {
             total += sg.program(&OpDesc::ThresholdNode { n: 288, t_popcount: t }).schedule.cycles();
         }
         total
-    });
+    }));
 
     // --- 4. Bit-true conv layer on an 8-PE array -------------------------
     let layer = Layer::conv("b", LayerKind::ConvBin, (8, 8, 16), 3, 1, 1, 8, None);
     let input = BitTensor::random(8, 8, 16, 5);
     let weights = BinWeights::random(8, layer.fanin(), 6);
-    bench("bit-true conv 8x8x16 -> 8ch (8 PEs)", 5, || {
+    cases.push(bench("bit-true conv 8x8x16 -> 8ch (8 PEs)", 5, || {
         let mut array = PeArray::new(2, 4);
         let mut sg = SequenceGenerator::new();
         cycle::conv_bin_cycle(&mut array, &mut sg, &input, &layer, &weights).cycles
-    });
+    }));
 
     // --- 5. Analytic model over full networks ---------------------------
     let bn = binarynet_cifar10();
     let an = alexnet();
-    bench("NetworkPerf::model(BinaryNet, TULIP)", 5, || {
+    cases.push(bench("NetworkPerf::model(BinaryNet, TULIP)", 5, || {
         NetworkPerf::model(&bn, &ArchConfig::tulip()).total_aggregate().cycles
-    });
-    bench("NetworkPerf::model(AlexNet, both archs)", 5, || {
+    }));
+    cases.push(bench("NetworkPerf::model(AlexNet, both archs)", 5, || {
         let t = NetworkPerf::model(&an, &ArchConfig::tulip()).total_aggregate().cycles;
         let y = NetworkPerf::model(&an, &ArchConfig::yodann()).total_aggregate().cycles;
         t + y
-    });
+    }));
 
     // --- 6. Register-allocation planner (the backtracking search) -------
     // 1023 is the PE's documented fan-in ceiling (§IV-C "up to 10-bit
     // addition"); larger fan-ins are chunked by the coordinator.
-    bench("plan+emit sum_tree(1023)", 5, || adder_tree::sum_tree(1023).0.cycles());
+    cases.push(bench("plan+emit sum_tree(1023)", 5, || adder_tree::sum_tree(1023).0.cycles()));
+
+    // --- 7. Scalar vs bit-sliced whole-network forward pass --------------
+    // The tentpole comparison: one image through tiny_bnn(16, 8, 10) on the
+    // same warm program cache, scalar reference engine vs the 64-lane SWAR
+    // engine. Both closures reuse the array (forward_* resets stats on
+    // entry), so the measurement is pure execution, not setup.
+    let net = tiny_bnn(16, 8, 10);
+    let net_weights: Vec<BinWeights> = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 40 + i as u64))
+        .collect();
+    let packed = SlicedWeights::pack(&net, &net_weights);
+    let image = BitTensor::random(16, 16, 8, 77);
+    let mut sg_fwd = SequenceGenerator::new();
+    let mut sg_sliced = SequenceGenerator::with_cache(sg_fwd.cache());
+    let mut array = PeArray::new(2, 4);
+    let mut arr = SlicedArray::new(2, 4);
+    let scalar = bench("forward tiny_bnn(16,8,10) scalar", 5, || {
+        cycle::forward_bin_cycle(&mut array, &mut sg_fwd, &image, &net, &net_weights).cycles
+    });
+    let sliced = bench("forward tiny_bnn(16,8,10) bit-sliced", 5, || {
+        cycle::forward_bin_sliced(&mut arr, &mut sg_sliced, &image, &net, &net_weights, &packed)
+            .cycles
+    });
+    println!(
+        "\nforward speedup (scalar / bit-sliced): {:.2}x",
+        scalar.median_ns() / sliced.median_ns()
+    );
+    let (scalar_ns, sliced_ns) = (scalar.median_ns(), sliced.median_ns());
+    cases.push(scalar);
+    cases.push(sliced);
+    write_report(&cases, scalar_ns, sliced_ns);
 }

@@ -4,6 +4,7 @@
 
 use crate::baseline::MacUnit;
 use crate::bnn::tensor::BinWeights;
+use crate::pe::slice::PeSlice;
 use crate::pe::{PeStats, TulipPe};
 
 /// XNOR product generation: "The inputs and weights are multiplied using
@@ -19,6 +20,19 @@ pub fn xnor_products_into(window: &[bool], weights: &[i8], out: &mut Vec<bool>) 
     assert_eq!(window.len(), weights.len());
     out.clear();
     out.extend(window.iter().zip(weights).map(|(&x, &w)| x == (w > 0)));
+}
+
+/// Word-level XNOR product generation for the bit-sliced engine: one
+/// product bit across 64 lanes at once. XNOR against a +1 weight is the
+/// identity; against a −1 weight it is complement — so the whole product
+/// array degenerates to "pass or invert the lane word".
+#[inline(always)]
+pub fn xnor_product_word(window: u64, weight_plus: bool) -> u64 {
+    if weight_plus {
+        window
+    } else {
+        !window
+    }
 }
 
 /// One processing unit.
@@ -133,6 +147,83 @@ impl PeArray {
     }
 }
 
+/// The bit-sliced counterpart of [`PeArray`]: one reusable [`PeSlice`]
+/// (64 lanes of lockstep PE state) plus analytically accumulated per-PE
+/// activity counters, laid out in the same array-flattened index order as
+/// [`PeArray::pe_mut`] so the observability layer cannot tell the engines
+/// apart.
+///
+/// Where the scalar array owns 256 stateful `TulipPe`s that count as they
+/// step, the sliced array owns *one* slice of lane state (cleared and
+/// reused per program run) and books activity via [`SlicedArray::credit`]:
+/// each modelled PE is credited with `unit_stats × runs` for every program
+/// it would have executed — exact, because schedule activity is
+/// control-flow determined (see
+/// [`CachedProgram::unit_stats`](crate::scheduler::seqgen::CachedProgram::unit_stats)).
+#[derive(Debug, Clone)]
+pub struct SlicedArray {
+    slice: PeSlice,
+    per_pe: Vec<PeStats>,
+    pes_per_unit: usize,
+}
+
+impl SlicedArray {
+    /// An array modelling `num_units × pes_per_unit` PEs.
+    pub fn new(num_units: usize, pes_per_unit: usize) -> Self {
+        SlicedArray {
+            slice: PeSlice::new(),
+            per_pe: vec![PeStats::default(); num_units * pes_per_unit],
+            pes_per_unit,
+        }
+    }
+
+    /// Paper design point: 32 units × 8 PEs (matches [`PeArray::paper`]).
+    pub fn paper() -> Self {
+        Self::new(crate::energy::calib::NUM_MACS, crate::energy::calib::PES_PER_UNIT)
+    }
+
+    /// Total PE count modelled by this array.
+    pub fn num_pes(&self) -> usize {
+        self.per_pe.len()
+    }
+
+    /// PEs per unit (the channel→PE striping modulus).
+    pub fn pes_per_unit(&self) -> usize {
+        self.pes_per_unit
+    }
+
+    /// The shared lane state, cleared for a fresh program run.
+    pub fn slice_mut(&mut self) -> &mut PeSlice {
+        self.slice.clear();
+        &mut self.slice
+    }
+
+    /// Credit modelled PE `pe` with `runs` executions of a program whose
+    /// single-run activity is `unit`.
+    pub fn credit(&mut self, pe: usize, unit: &PeStats, runs: u64) {
+        self.per_pe[pe].merge(&unit.scaled(runs));
+    }
+
+    /// Total credited PE activity across the array.
+    pub fn stats(&self) -> PeStats {
+        let mut s = PeStats::default();
+        for pe in &self.per_pe {
+            s.merge(pe);
+        }
+        s
+    }
+
+    /// Per-PE activity counters in array-flattened index order.
+    pub fn per_pe_stats(&self) -> Vec<PeStats> {
+        self.per_pe.clone()
+    }
+
+    /// Zero the credited activity counters.
+    pub fn reset_stats(&mut self) {
+        self.per_pe.fill(PeStats::default());
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +251,40 @@ mod tests {
         let prods = arr.products_for_window(&window, &w, 0);
         assert_eq!(prods.len(), 3); // clipped at z2
         assert_eq!(prods[0].len(), 4);
+    }
+
+    #[test]
+    fn xnor_word_passes_or_inverts() {
+        let w = 0xdead_beef_0123_4567u64;
+        assert_eq!(xnor_product_word(w, true), w);
+        assert_eq!(xnor_product_word(w, false), !w);
+    }
+
+    #[test]
+    fn sliced_array_credits_and_partitions() {
+        let mut arr = SlicedArray::new(2, 4);
+        assert_eq!(arr.num_pes(), 8);
+        let unit = PeStats {
+            cycles: 3,
+            neuron_evals: 5,
+            gated_neuron_cycles: 7,
+            reg_reads: 2,
+            reg_writes: 1,
+        };
+        arr.credit(1, &unit, 10);
+        arr.credit(5, &unit, 1);
+        let per = arr.per_pe_stats();
+        assert_eq!(per[1].neuron_evals, 50);
+        assert_eq!(per[5].cycles, 3);
+        assert_eq!(per[0], PeStats::default());
+        // The totals are the per-PE sum (the partition invariant).
+        let mut sum = PeStats::default();
+        for p in &per {
+            sum.merge(p);
+        }
+        assert_eq!(arr.stats(), sum);
+        arr.reset_stats();
+        assert_eq!(arr.stats(), PeStats::default());
     }
 
     #[test]

@@ -38,6 +38,13 @@ impl PackedBits {
         Self::from_bools(&bools)
     }
 
+    /// Bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i / 64] >> (i % 64) & 1 != 0
+    }
+
     /// popcount(xnor(self, other)): the number of agreeing positions.
     /// Tail bits beyond `len` are masked.
     #[inline]
@@ -73,6 +80,46 @@ impl PackedWeights {
             filters: (0..w.z2).map(|o| PackedBits::from_weights(w.filter(o))).collect(),
             thresholds: w.thresholds.clone(),
         }
+    }
+}
+
+/// FC weights transposed for the bit-sliced engine: lane words over output
+/// *channels* instead of packed words over fan-in bits. Bit `j` of
+/// [`Self::word`]`(wi, p)` is the sign (+1 ↦ 1) of weight `p` of output
+/// channel `wi * 64 + j` — so XNORing one word against a splatted input bit
+/// produces product `p` for 64 output neurons at once.
+#[derive(Debug, Clone)]
+pub struct LaneWeights {
+    /// `words[wi * fanin + p]`: weight-sign lane word for channel group
+    /// `wi`, product `p`.
+    words: Vec<u64>,
+    /// Inputs per filter.
+    pub fanin: usize,
+    /// Output channels.
+    pub z2: usize,
+}
+
+impl LaneWeights {
+    /// Transpose a layer's weights into channel-lane form. Channels beyond
+    /// `z2` in the last group pack as 0 bits the engine never reads back.
+    pub fn pack(w: &BinWeights) -> Self {
+        let groups = w.z2.div_ceil(64);
+        let mut words = vec![0u64; groups * w.fanin];
+        for ch in 0..w.z2 {
+            let (wi, j) = (ch / 64, ch % 64);
+            for (p, &v) in w.filter(ch).iter().enumerate() {
+                if v > 0 {
+                    words[wi * w.fanin + p] |= 1 << j;
+                }
+            }
+        }
+        LaneWeights { words, fanin: w.fanin, z2: w.z2 }
+    }
+
+    /// Sign lane word for channel group `wi`, product `p`.
+    #[inline]
+    pub fn word(&self, wi: usize, p: usize) -> u64 {
+        self.words[wi * self.fanin + p]
     }
 }
 
@@ -141,6 +188,35 @@ mod tests {
             let w: Vec<i8> = (0..n).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
             let got = PackedBits::from_bools(&x).xnor_popcount(&PackedBits::from_weights(&w));
             assert_eq!(got, xnor_popcount(&x, &w), "n={n}");
+        }
+    }
+
+    #[test]
+    fn packed_get_roundtrips() {
+        let bits: Vec<bool> = (0..130).map(|i| i % 5 == 0 || i % 3 == 1).collect();
+        let p = PackedBits::from_bools(&bits);
+        for (i, &b) in bits.iter().enumerate() {
+            assert_eq!(p.get(i), b, "bit {i}");
+        }
+    }
+
+    /// The channel-lane transpose inverts correctly: bit `ch % 64` of word
+    /// `(ch / 64, p)` is the sign of weight `p` of filter `ch`.
+    #[test]
+    fn lane_weights_transpose_roundtrips() {
+        for z2 in [1usize, 63, 64, 65, 130] {
+            let w = BinWeights::random(z2, 27, 11);
+            let lanes = LaneWeights::pack(&w);
+            assert_eq!((lanes.z2, lanes.fanin), (z2, 27));
+            for ch in 0..z2 {
+                for (p, &v) in w.filter(ch).iter().enumerate() {
+                    assert_eq!(
+                        lanes.word(ch / 64, p) >> (ch % 64) & 1 != 0,
+                        v > 0,
+                        "z2={z2} ch={ch} p={p}"
+                    );
+                }
+            }
         }
     }
 

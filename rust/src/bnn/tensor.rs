@@ -98,6 +98,75 @@ impl BitTensor {
     pub fn flatten(&self) -> Vec<bool> {
         self.data.clone()
     }
+
+    /// Transposed window extraction for the bit-sliced engine: gather the
+    /// zero-padded `k×k×C` windows of up to 64 consecutive output `pixels`
+    /// (row-major over an `out_w`-wide output map) into lane words. On
+    /// return `out[p]` holds product bit `p` — in the same (ky, kx, c)
+    /// order as [`Self::window`] — for every pixel in the range: bit `j`
+    /// belongs to pixel `pixels.start + j`. Padding contributes 0 bits,
+    /// exactly like the scalar gather pushes `false`.
+    pub fn window_lanes_into(
+        &self,
+        out_w: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        pixels: std::ops::Range<usize>,
+        out: &mut Vec<u64>,
+    ) {
+        let lanes = pixels.len();
+        assert!(lanes <= 64, "at most 64 pixels per lane word");
+        out.clear();
+        out.resize(k * k * self.c, 0);
+        for (j, pixel) in pixels.enumerate() {
+            let (oy, ox) = (pixel / out_w, pixel % out_w);
+            let mut p = 0;
+            for ky in 0..k {
+                for kx in 0..k {
+                    let y = (oy * stride + ky) as isize - pad as isize;
+                    let x = (ox * stride + kx) as isize - pad as isize;
+                    if y < 0 || x < 0 || y >= self.h as isize || x >= self.w as isize {
+                        p += self.c; // padded: leave the 0 bits in place
+                        continue;
+                    }
+                    let base = self.idx(y as usize, x as usize, 0);
+                    for &bit in &self.data[base..base + self.c] {
+                        out[p] |= (bit as u64) << j;
+                        p += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Transposed pooling-window extraction: gather the `k×k` window of
+    /// channel `ch` for up to 64 consecutive output `pixels` into lane
+    /// words, in (ky, kx) order. Pooling has no padding; every window is
+    /// in-bounds by construction of the output geometry.
+    pub fn pool_lanes_into(
+        &self,
+        out_w: usize,
+        k: usize,
+        stride: usize,
+        ch: usize,
+        pixels: std::ops::Range<usize>,
+        out: &mut Vec<u64>,
+    ) {
+        let lanes = pixels.len();
+        assert!(lanes <= 64, "at most 64 pixels per lane word");
+        out.clear();
+        out.resize(k * k, 0);
+        for (j, pixel) in pixels.enumerate() {
+            let (oy, ox) = (pixel / out_w, pixel % out_w);
+            for ky in 0..k {
+                for kx in 0..k {
+                    let v = self.get(oy * stride + ky, ox * stride + kx, ch);
+                    out[ky * k + kx] |= (v as u64) << j;
+                }
+            }
+        }
+    }
 }
 
 /// An integer feature map, HWC layout.
@@ -232,6 +301,54 @@ mod tests {
         let w = BinWeights::random(4, 27, 1);
         assert_eq!(w.filter(2).len(), 27);
         assert!(w.thresholds.iter().all(|&t| t >= 0 && t <= 27));
+    }
+
+    /// Lane-word window gather equals the scalar gather, lane by lane —
+    /// including padded borders and a ragged final lane group.
+    #[test]
+    fn window_lanes_match_scalar_windows() {
+        let t = BitTensor::random(7, 9, 3, 99);
+        let (k, stride, pad) = (3, 1, 1);
+        let (oh, ow) = (7, 9); // same-size output with pad 1
+        let total = oh * ow; // 63: exercises a ragged < 64 group
+        let mut words = Vec::new();
+        for start in [0usize, 40] {
+            let end = (start + 64).min(total);
+            t.window_lanes_into(ow, k, stride, pad, start..end, &mut words);
+            assert_eq!(words.len(), k * k * t.c);
+            for pixel in start..end {
+                let j = pixel - start;
+                let scalar = t.window(pixel / ow, pixel % ow, k, stride, pad);
+                for (p, &bit) in scalar.iter().enumerate() {
+                    assert_eq!(words[p] >> j & 1 != 0, bit, "pixel {pixel} product {p}");
+                }
+            }
+        }
+    }
+
+    /// Lane-word pool gather equals per-element scalar reads.
+    #[test]
+    fn pool_lanes_match_scalar_reads() {
+        let t = BitTensor::random(8, 8, 2, 5);
+        let (k, stride) = (2, 2);
+        let ow = 4;
+        let mut words = Vec::new();
+        for ch in 0..t.c {
+            t.pool_lanes_into(ow, k, stride, ch, 0..16, &mut words);
+            assert_eq!(words.len(), k * k);
+            for pixel in 0..16 {
+                let (oy, ox) = (pixel / ow, pixel % ow);
+                for ky in 0..k {
+                    for kx in 0..k {
+                        assert_eq!(
+                            words[ky * k + kx] >> pixel & 1 != 0,
+                            t.get(oy * stride + ky, ox * stride + kx, ch),
+                            "ch {ch} pixel {pixel} ({ky},{kx})"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -30,7 +30,7 @@
 //! println!("{:?} energy {:.1} nJ", result.classes(), result.energy().total_pj() * 1e-3);
 //! ```
 
-use crate::arch::unit::PeArray;
+use crate::arch::unit::{PeArray, SlicedArray};
 use crate::bnn::tensor::{BinWeights, BitTensor};
 use crate::bnn::Network;
 use crate::config::ArchConfig;
@@ -40,7 +40,9 @@ use crate::metrics::MetricsRegistry;
 use crate::pe::PeStats;
 use crate::scheduler::seqgen::SequenceGenerator;
 use crate::scheduler::ProgramCache;
-use crate::sim::cycle::{forward_bin_cycle, LayerObs};
+use crate::sim::cycle::{
+    forward_bin_cycle, forward_bin_sliced, ForwardEngine, LayerObs, SlicedWeights,
+};
 use crate::Result;
 use anyhow::ensure;
 use rayon::prelude::*;
@@ -244,6 +246,10 @@ impl BatchResult {
 pub struct BatchExecutor {
     net: Network,
     weights: Vec<BinWeights>,
+    /// Lane-packed weights for the bit-sliced engine (prepared once at
+    /// construction, like the hardware's kernel-buffer load).
+    sliced: SlicedWeights,
+    engine: ForwardEngine,
     cache: Arc<ProgramCache>,
     units: usize,
     pes_per_unit: usize,
@@ -256,11 +262,18 @@ impl std::fmt::Debug for BatchExecutor {
         f.debug_struct("BatchExecutor")
             .field("network", &self.net.name)
             .field("layers", &self.net.layers.len())
+            .field("engine", &self.engine)
             .field("units", &self.units)
             .field("pes_per_unit", &self.pes_per_unit)
             .field("dedicated_pool", &self.pool.is_some())
             .finish()
     }
+}
+
+/// A worker's private simulation state: the engine-specific array.
+enum Scratch {
+    Scalar(PeArray),
+    Sliced(SlicedArray),
 }
 
 impl BatchExecutor {
@@ -288,9 +301,12 @@ impl BatchExecutor {
             );
         }
         net.validate().map_err(anyhow::Error::msg)?;
+        let sliced = SlicedWeights::pack(&net, &weights);
         Ok(BatchExecutor {
             net,
             weights,
+            sliced,
+            engine: ForwardEngine::default(),
             cache: ProgramCache::global(),
             units: calib::NUM_MACS,
             pes_per_unit: calib::PES_PER_UNIT,
@@ -302,6 +318,19 @@ impl BatchExecutor {
     pub fn with_cache(mut self, cache: Arc<ProgramCache>) -> Self {
         self.cache = cache;
         self
+    }
+
+    /// Select the execution path (default: [`ForwardEngine::BitSliced`]).
+    /// Both engines produce bit-identical results; the scalar path is the
+    /// reference oracle, the bit-sliced path runs 64 lanes per word.
+    pub fn with_engine(mut self, engine: ForwardEngine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// The execution path this executor drives.
+    pub fn engine(&self) -> ForwardEngine {
+        self.engine
     }
 
     /// Per-worker PE-array geometry (default: the paper's 32 × 8 = 256).
@@ -344,14 +373,19 @@ impl BatchExecutor {
 
     fn classify(
         &self,
-        array: &mut PeArray,
+        scratch: &mut Scratch,
         sg: &mut SequenceGenerator,
         index: usize,
         image: &BitTensor,
     ) -> ImageResult {
         let _span = crate::metrics::span("batch.image");
         let t0 = Instant::now();
-        let f = forward_bin_cycle(array, sg, image, &self.net, &self.weights);
+        let f = match scratch {
+            Scratch::Scalar(array) => forward_bin_cycle(array, sg, image, &self.net, &self.weights),
+            Scratch::Sliced(arr) => {
+                forward_bin_sliced(arr, sg, image, &self.net, &self.weights, &self.sliced)
+            }
+        };
         let host_ns = t0.elapsed().as_nanos() as u64;
         let class = argmax(&f.scores);
         ImageResult {
@@ -367,19 +401,22 @@ impl BatchExecutor {
         }
     }
 
-    fn scratch(&self) -> (PeArray, SequenceGenerator) {
-        (
-            PeArray::new(self.units, self.pes_per_unit),
-            SequenceGenerator::with_cache(Arc::clone(&self.cache)),
-        )
+    fn scratch(&self) -> (Scratch, SequenceGenerator) {
+        let scratch = match self.engine {
+            ForwardEngine::Scalar => Scratch::Scalar(PeArray::new(self.units, self.pes_per_unit)),
+            ForwardEngine::BitSliced => {
+                Scratch::Sliced(SlicedArray::new(self.units, self.pes_per_unit))
+            }
+        };
+        (scratch, SequenceGenerator::with_cache(Arc::clone(&self.cache)))
     }
 
     /// Classify one image on a private scratch array — the per-image
     /// single-run baseline batch aggregates are checked against.
     pub fn run_one(&self, index: usize, image: &BitTensor) -> Result<ImageResult> {
         self.check_image(index, image)?;
-        let (mut array, mut sg) = self.scratch();
-        Ok(self.classify(&mut array, &mut sg, index, image))
+        let (mut scratch, mut sg) = self.scratch();
+        Ok(self.classify(&mut scratch, &mut sg, index, image))
     }
 
     /// Run a batch: images are sharded across worker threads (each with
@@ -444,9 +481,20 @@ impl BatchExecutor {
             .add(result.stats.reg_reads + result.stats.reg_writes);
         registry.histogram("batch.wall_us").observe(result.wall.as_micros() as u64);
         let image_host = registry.histogram("image.host_us");
+        // Per-engine histogram alongside the aggregate, so scalar and
+        // bit-sliced latencies stay separable in one registry.
+        let image_host_engine =
+            registry.histogram(&format!("image.host_us.{}", self.engine.name()));
         for img in &result.images {
             image_host.observe(img.host_ns / 1_000);
+            image_host_engine.observe(img.host_ns / 1_000);
         }
+        // 0 = scalar oracle, 1 = bit-sliced: which path produced the
+        // numbers currently in this registry.
+        registry.gauge("batch.engine").set(match self.engine {
+            ForwardEngine::Scalar => 0.0,
+            ForwardEngine::BitSliced => 1.0,
+        });
         registry.gauge("batch.images_per_sec").set(result.images_per_sec());
         registry.gauge("pe.utilization").set(result.stats.utilization());
         result.energy().publish_to(registry, "batch.energy");
@@ -476,7 +524,7 @@ impl BatchExecutor {
                 .enumerate()
                 .map_init(
                     || self.scratch(),
-                    |(array, sg), (index, image)| self.classify(array, sg, index, image),
+                    |(scratch, sg), (index, image)| self.classify(scratch, sg, index, image),
                 )
                 .collect()
         };
@@ -610,6 +658,34 @@ mod tests {
         let exec = tiny_executor();
         let req = BatchRequest::new(vec![BitTensor::random(4, 4, 4, 1)]);
         assert!(exec.run(&req).is_err());
+    }
+
+    /// Engine selection: scalar and bit-sliced batches are bit-identical,
+    /// and each engine tags the registry it publishes into.
+    #[test]
+    fn engines_agree_and_publish() {
+        let scalar = tiny_executor().with_engine(ForwardEngine::Scalar);
+        let sliced = tiny_executor();
+        assert_eq!(sliced.engine(), ForwardEngine::BitSliced, "bit-sliced is the default");
+        let req = BatchRequest::new((0..3).map(|i| BitTensor::random(8, 8, 4, 70 + i)).collect());
+        let a = scalar.run(&req).unwrap();
+        let b = sliced.run(&req).unwrap();
+        assert_eq!(a.classes(), b.classes());
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.stats, b.stats);
+        for (x, y) in a.images.iter().zip(&b.images) {
+            assert_eq!(x.scores, y.scores);
+            assert_eq!(x.layers, y.layers);
+            assert_eq!(x.per_pe, y.per_pe);
+        }
+        let reg = MetricsRegistry::new();
+        sliced.publish_to(&reg, &b);
+        assert_eq!(reg.gauge("batch.engine").get(), 1.0);
+        assert_eq!(reg.histogram("image.host_us.bit_sliced").snapshot().count, 3);
+        let reg = MetricsRegistry::new();
+        scalar.publish_to(&reg, &a);
+        assert_eq!(reg.gauge("batch.engine").get(), 0.0);
+        assert_eq!(reg.histogram("image.host_us.scalar").snapshot().count, 3);
     }
 
     #[test]

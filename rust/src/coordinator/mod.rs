@@ -17,6 +17,7 @@ pub mod tiling;
 pub use batch::{
     argmax, BatchExecutor, BatchPerf, BatchRequest, BatchResult, ImageResult, WorkerSummary,
 };
+pub use crate::sim::cycle::ForwardEngine;
 pub use exec::{LayerPerf, NetworkPerf};
 pub use perf_report::{LayerReport, PeReport, PerfReport};
 pub use tiling::{table3, tiling, Tiling};

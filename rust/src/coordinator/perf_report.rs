@@ -83,6 +83,10 @@ pub struct PerfReport {
     pub network: String,
     /// Dataset name from the network description.
     pub dataset: String,
+    /// Execution engine that produced the numbers (`"scalar"` or
+    /// `"bit_sliced"` — see
+    /// [`ForwardEngine`](crate::coordinator::ForwardEngine)).
+    pub engine: String,
     /// Number of images in the batch.
     pub batch: usize,
     /// Host wall-clock time for the batch, milliseconds.
@@ -146,6 +150,7 @@ impl PerfReport {
         PerfReport {
             network: net.name.clone(),
             dataset: net.dataset.clone(),
+            engine: exec.engine().name().to_string(),
             batch: result.images.len(),
             wall_ms: result.wall.as_secs_f64() * 1e3,
             images_per_sec: result.images_per_sec(),
@@ -183,6 +188,7 @@ impl PerfReport {
         s.push_str("  \"schema\": \"tulip.perf_report/v1\",\n");
         s.push_str(&format!("  \"network\": {},\n", json_str(&self.network)));
         s.push_str(&format!("  \"dataset\": {},\n", json_str(&self.dataset)));
+        s.push_str(&format!("  \"engine\": {},\n", json_str(&self.engine)));
         s.push_str(&format!("  \"batch\": {},\n", self.batch));
         s.push_str(&format!(
             "  \"host\": {{\"wall_ms\": {}, \"images_per_sec\": {}}},\n",
@@ -284,7 +290,10 @@ impl PerfReport {
             })
             .collect();
         print_table(
-            &format!("PerfReport: {} / {} (batch {})", self.network, self.dataset, self.batch),
+            &format!(
+                "PerfReport: {} / {} (batch {}, {} engine)",
+                self.network, self.dataset, self.batch, self.engine
+            ),
             &["layer", "cycles", "share", "energy (nJ)", "util"],
             &rows,
         );
@@ -453,7 +462,7 @@ mod tests {
         reg.histogram("test.lat").observe(42);
         let r = tiny_report().with_metrics(reg.snapshot());
         let json = r.to_json();
-        const KEYS: &str = "schema network host simulated energy_pj layers pes cache \
+        const KEYS: &str = "schema network engine host simulated energy_pj layers pes cache \
                             hit_rate workers metrics utilization planning_ms";
         for key in KEYS.split_whitespace() {
             assert!(json.contains(&format!("\"{key}\"")), "missing {key} in:\n{json}");

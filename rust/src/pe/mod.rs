@@ -11,6 +11,7 @@
 
 pub mod isa;
 pub mod registers;
+pub mod slice;
 
 pub use isa::{ControlWord, NeuronCtl, RegWrite, Src, WSrc, NUM_NEURONS, NUM_REGS, REG_BITS};
 pub use registers::RegisterFile;
@@ -54,6 +55,23 @@ impl PeStats {
                 .saturating_sub(earlier.gated_neuron_cycles),
             reg_reads: self.reg_reads.saturating_sub(earlier.reg_reads),
             reg_writes: self.reg_writes.saturating_sub(earlier.reg_writes),
+        }
+    }
+
+    /// All counters multiplied by `k` — the activity of running the same
+    /// control-flow-determined schedule `k` times. This is how the
+    /// bit-sliced engine accounts analytically: measure one unit run
+    /// (see [`CachedProgram::unit_stats`]), then scale by the number of
+    /// modelled lane-runs.
+    ///
+    /// [`CachedProgram::unit_stats`]: crate::scheduler::seqgen::CachedProgram::unit_stats
+    pub fn scaled(&self, k: u64) -> PeStats {
+        PeStats {
+            cycles: self.cycles * k,
+            neuron_evals: self.neuron_evals * k,
+            gated_neuron_cycles: self.gated_neuron_cycles * k,
+            reg_reads: self.reg_reads * k,
+            reg_writes: self.reg_writes * k,
         }
     }
 

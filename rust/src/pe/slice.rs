@@ -1,0 +1,338 @@
+//! Bit-sliced, lane-parallel TULIP-PE: 64 lockstep lanes per control word.
+//!
+//! The paper's §IV-E invariant — one sequence generator broadcasts the
+//! *same* control word to every PE each cycle — means that across any set
+//! of PEs running a shared program, the control flow is identical and only
+//! the data bits differ. [`PeSlice`] exploits that by transposing the
+//! layout: every 1-bit quantity of the scalar [`TulipPe`](super::TulipPe)
+//! (a neuron latch, a register bit, an external product bit) becomes a
+//! `u64` word holding that bit for 64 independent *lanes*, and one step of
+//! pure bitwise logic advances all 64 lanes at once. The per-lane semantics
+//! are, bit for bit, those of [`TulipPe::step`](super::TulipPe::step) —
+//! asserted lane-by-lane by the tests below and end-to-end by
+//! `tests/bitslice.rs`.
+//!
+//! The threshold evaluation `2a + b + c + d ≥ T` of the `[2,1,1,1;T]` cell
+//! (§II) becomes one of seven small bitwise formulas, one per reachable
+//! threshold — e.g. `T = 2` is `a | (b&c) | (b&d) | (c&d)` ("a alone
+//! suffices, or any two of the weight-1 inputs").
+//!
+//! Activity counters are deliberately absent here: a schedule's per-run
+//! activity is control-flow determined (data never changes which neurons
+//! evaluate or which register bits are touched), so the lane-parallel
+//! engine accounts analytically via
+//! [`CachedProgram::unit_stats`](crate::scheduler::seqgen::CachedProgram::unit_stats)
+//! instead of counting per step.
+
+use super::isa::{ControlWord, Src, WSrc, NUM_NEURONS, NUM_REGS, REG_BITS};
+use crate::scheduler::{ExtSpec, Schedule};
+
+/// Lanes per slice word — the bit width of the host word the simulator
+/// packs lanes into.
+pub const LANES: usize = 64;
+
+/// All-ones lane word (`true` in every lane).
+const ONES: u64 = !0u64;
+
+/// Evaluate the `[2,1,1,1;T]` threshold cell in all 64 lanes at once:
+/// bit `j` of the result is `2·a_j + b_j + c_j + d_j ≥ t`.
+#[inline(always)]
+fn fire(a: u64, b: u64, c: u64, d: u64, t: i32) -> u64 {
+    match t {
+        t if t <= 0 => ONES,
+        1 => a | b | c | d,
+        2 => a | (b & c) | (b & d) | (c & d),
+        3 => (a & (b | c | d)) | (b & c & d),
+        4 => a & ((b & c) | (b & d) | (c & d)),
+        5 => a & b & c & d,
+        _ => 0,
+    }
+}
+
+/// 64 lockstep TULIP-PE lanes: neuron latches and register bits held as
+/// `u64` words, one bit per lane. Stepping costs one pass of bitwise logic
+/// per control word regardless of how many lanes are live; unused lanes
+/// simply carry don't-care bits the caller never reads back.
+#[derive(Debug, Clone)]
+pub struct PeSlice {
+    /// Latched neuron outputs, one word per neuron.
+    neurons: [u64; NUM_NEURONS],
+    /// Register bits: `regs[reg][bit]` is one word across the lanes.
+    regs: [[u64; REG_BITS]; NUM_REGS],
+}
+
+impl Default for PeSlice {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PeSlice {
+    /// A fresh slice: every lane's neurons low and registers zeroed —
+    /// 64 lanes of [`TulipPe::new`](super::TulipPe::new).
+    pub fn new() -> Self {
+        PeSlice { neurons: [0; NUM_NEURONS], regs: [[0; REG_BITS]; NUM_REGS] }
+    }
+
+    /// Reset all lanes to the fresh state.
+    pub fn clear(&mut self) {
+        *self = Self::new();
+    }
+
+    /// Latched outputs of neuron `k`, one bit per lane.
+    #[inline]
+    pub fn neuron_word(&self, k: usize) -> u64 {
+        self.neurons[k]
+    }
+
+    /// Register bit `R[reg][bit]`, one bit per lane.
+    #[inline]
+    pub fn reg_word(&self, reg: usize, bit: usize) -> u64 {
+        self.regs[reg][bit]
+    }
+
+    /// Read a `width`-bit little-endian register field of a single lane —
+    /// the lane-local equivalent of
+    /// [`RegisterFile::peek_field`](super::RegisterFile::peek_field).
+    pub fn peek_field_lane(&self, reg: usize, lsb: usize, width: usize, lane: usize) -> u32 {
+        assert!(lsb + width <= REG_BITS, "field out of range");
+        assert!(lane < LANES, "lane out of range");
+        let mut v = 0u32;
+        for i in 0..width {
+            if self.regs[reg][lsb + i] >> lane & 1 != 0 {
+                v |= 1 << i;
+            }
+        }
+        v
+    }
+
+    /// Resolve a combinational source across all lanes. `fresh` carries the
+    /// already-updated phase-0 outputs (`None` while resolving buses and
+    /// phase-0 inputs) — same contract as the scalar resolver.
+    #[inline(always)]
+    fn resolve(
+        &self,
+        src: Src,
+        ext: &[u64],
+        old: &[u64; NUM_NEURONS],
+        fresh: Option<&[u64; NUM_NEURONS]>,
+    ) -> u64 {
+        match src {
+            Src::Zero => 0,
+            Src::One => ONES,
+            Src::Ext(i) => {
+                assert!(i < ext.len(), "ext channel {i} not driven (have {})", ext.len());
+                ext[i]
+            }
+            Src::N(k) => old[k],
+            Src::NInv(k) => !old[k],
+            Src::NFresh(k) => fresh.expect("fresh read before phase 0 complete")[k],
+            Src::NFreshInv(k) => !fresh.expect("fresh read before phase 0 complete")[k],
+            Src::Reg { reg, bit } => self.regs[reg][bit],
+            Src::RegInv { reg, bit } => !self.regs[reg][bit],
+        }
+    }
+
+    /// Execute one control word in all 64 lanes. `ext[i]` carries external
+    /// channel `i`, one bit per lane. The per-lane cycle semantics are
+    /// exactly [`TulipPe::step`](super::TulipPe::step): buses resolve
+    /// first, phase-0 neurons latch, phase-1 neurons may sample fresh
+    /// phase-0 outputs, then register writes commit.
+    pub fn step(&mut self, cw: &ControlWord, ext: &[u64]) {
+        debug_assert!(cw.validate().is_ok(), "invalid control word: {:?}", cw.validate());
+        let old = self.neurons;
+        let bus_b = self.resolve(cw.bus_b, ext, &old, None);
+        let bus_c = self.resolve(cw.bus_c, ext, &old, None);
+
+        // Phase 0. Gated neurons hold (their word stays `old`).
+        let mut next = old;
+        for (k, n) in cw.neurons.iter().enumerate() {
+            if n.gated || n.phase != 0 {
+                continue;
+            }
+            let a = self.resolve(n.a, ext, &old, None);
+            let d = self.resolve(n.d, ext, &old, None);
+            let b = if n.b_en { bus_b ^ if n.b_inv { ONES } else { 0 } } else { 0 };
+            let c = if n.c_en { bus_c ^ if n.c_inv { ONES } else { 0 } } else { 0 };
+            next[k] = fire(a, b, c, d, n.threshold);
+        }
+        let after_p0 = next;
+
+        // Phase 1 (the cascade).
+        for (k, n) in cw.neurons.iter().enumerate() {
+            if n.gated || n.phase == 0 {
+                continue;
+            }
+            let a = self.resolve(n.a, ext, &old, Some(&after_p0));
+            let d = self.resolve(n.d, ext, &old, Some(&after_p0));
+            let b = if n.b_en { bus_b ^ if n.b_inv { ONES } else { 0 } } else { 0 };
+            let c = if n.c_en { bus_c ^ if n.c_inv { ONES } else { 0 } } else { 0 };
+            next[k] = fire(a, b, c, d, n.threshold);
+        }
+        self.neurons = next;
+
+        // Register writes.
+        for w in &cw.writes {
+            let v = match w.src {
+                WSrc::N(k) => next[k],
+                WSrc::NInv(k) => !next[k],
+                WSrc::NOld(k) => old[k],
+                WSrc::Ext(i) => {
+                    assert!(i < ext.len(), "ext channel {i} not driven");
+                    ext[i]
+                }
+                WSrc::Reg { reg, bit } => self.regs[reg][bit],
+                WSrc::Zero => 0,
+                WSrc::One => ONES,
+            };
+            self.regs[w.reg][w.bit] = v;
+        }
+    }
+
+    /// Run a whole schedule, materializing each external channel from
+    /// `product_word(i)` — the lane word for product bit `i`. The
+    /// lane-parallel analogue of
+    /// [`Schedule::run_on`](crate::scheduler::Schedule::run_on); external
+    /// rows materialize into a stack buffer, so this loop performs no heap
+    /// allocation.
+    pub fn run<F>(&mut self, schedule: &Schedule, mut product_word: F)
+    where
+        F: FnMut(usize) -> u64,
+    {
+        const MAX_EXT: usize = 8;
+        let mut ext_buf = [0u64; MAX_EXT];
+        for (word, row) in schedule.words.iter().zip(&schedule.ext_map) {
+            debug_assert!(row.len() <= MAX_EXT, "ext row wider than physical channels");
+            for (slot, e) in ext_buf.iter_mut().zip(row) {
+                *slot = match *e {
+                    ExtSpec::Product(i) => product_word(i),
+                    ExtSpec::Lit(b) => {
+                        if b {
+                            ONES
+                        } else {
+                            0
+                        }
+                    }
+                };
+            }
+            self.step(word, &ext_buf[..row.len()]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::TulipPe;
+    use crate::scheduler::seqgen::{OpDesc, SequenceGenerator};
+    use crate::util::Rng;
+
+    /// `fire` equals the arithmetic definition for every input and every
+    /// reachable threshold, in every lane position.
+    #[test]
+    fn fire_matches_arithmetic_exhaustively() {
+        for t in -2..9 {
+            for m in 0u64..16 {
+                let (a, b, c, d) = (m & 1, m >> 1 & 1, m >> 2 & 1, m >> 3 & 1);
+                let expect = (2 * a + b + c + d) as i32 >= t;
+                // Splat the single-bit case into two distinct lanes.
+                for lane in [0usize, 63] {
+                    let w = fire(a << lane, b << lane, c << lane, d << lane, t);
+                    assert_eq!(w >> lane & 1 != 0, expect, "a{a} b{b} c{c} d{d} t{t}");
+                }
+            }
+        }
+    }
+
+    /// Lane-by-lane equivalence with the scalar PE over a real threshold
+    /// program on random products: neuron outputs and every register bit
+    /// must match in every lane, including ragged upper lanes.
+    #[test]
+    fn slice_matches_scalar_per_lane() {
+        let mut sg = SequenceGenerator::new();
+        let prog = sg.program(&OpDesc::ThresholdNode { n: 48, t_popcount: 23 });
+        let arity = prog.schedule.product_arity();
+        let mut rng = Rng::seed_from_u64(0x51_1CE);
+        // One random product vector per lane.
+        let lanes: Vec<Vec<bool>> =
+            (0..LANES).map(|_| (0..arity).map(|_| rng.gen_bool(0.5)).collect()).collect();
+        // Transpose into product words.
+        let words: Vec<u64> = (0..arity)
+            .map(|p| {
+                lanes
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, l)| l[p])
+                    .fold(0u64, |w, (j, _)| w | 1 << j)
+            })
+            .collect();
+        let mut slice = PeSlice::new();
+        slice.run(&prog.schedule, |p| words[p]);
+        for (j, products) in lanes.iter().enumerate() {
+            let mut pe = TulipPe::new();
+            prog.schedule.run_on(&mut pe, products);
+            for k in 0..NUM_NEURONS {
+                assert_eq!(slice.neuron_word(k) >> j & 1 != 0, pe.neuron_out(k), "lane {j} N{k}");
+            }
+            for reg in 0..NUM_REGS {
+                for bit in 0..REG_BITS {
+                    assert_eq!(
+                        slice.reg_word(reg, bit) >> j & 1 != 0,
+                        pe.regs().peek(reg, bit),
+                        "lane {j} R{reg}[{bit}]"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The register-field readback agrees with the scalar `peek_field` on
+    /// the sum-tree output field.
+    #[test]
+    fn field_readback_matches_scalar() {
+        let mut sg = SequenceGenerator::new();
+        let prog = sg.program(&OpDesc::SumTree { n: 30 });
+        let Some(crate::scheduler::Loc::Reg { reg, lsb, width }) = prog.out_loc else {
+            panic!("sum tree leaves its result in a register");
+        };
+        let arity = prog.schedule.product_arity();
+        let mut rng = Rng::seed_from_u64(7);
+        let lanes: Vec<Vec<bool>> =
+            (0..17).map(|_| (0..arity).map(|_| rng.gen_bool(0.4)).collect()).collect();
+        let words: Vec<u64> = (0..arity)
+            .map(|p| {
+                lanes
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, l)| l[p])
+                    .fold(0u64, |w, (j, _)| w | 1 << j)
+            })
+            .collect();
+        let mut slice = PeSlice::new();
+        slice.run(&prog.schedule, |p| words[p]);
+        for (j, products) in lanes.iter().enumerate() {
+            let mut pe = TulipPe::new();
+            prog.schedule.run_on(&mut pe, products);
+            assert_eq!(
+                slice.peek_field_lane(reg, lsb, width, j),
+                pe.regs().peek_field(reg, lsb, width),
+                "lane {j}"
+            );
+            // And the popcount is what it should be.
+            let pc = products.iter().filter(|&&b| b).count() as u32;
+            assert_eq!(slice.peek_field_lane(reg, lsb, width, j), pc, "lane {j} popcount");
+        }
+    }
+
+    #[test]
+    fn clear_resets_all_lanes() {
+        let mut sg = SequenceGenerator::new();
+        let prog = sg.program(&OpDesc::ThresholdNode { n: 9, t_popcount: 2 });
+        let mut slice = PeSlice::new();
+        slice.run(&prog.schedule, |_| ONES);
+        assert_ne!(slice.neuron_word(prog.out_neuron.unwrap()), 0);
+        slice.clear();
+        assert!(slice.neurons.iter().all(|&w| w == 0));
+        assert!(slice.regs.iter().flatten().all(|&w| w == 0));
+    }
+}

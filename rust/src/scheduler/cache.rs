@@ -245,7 +245,7 @@ impl ProgramCache {
                 };
                 let cmp = ops::ge_const(sum_loc, t_popcount, ops::CMP_N);
                 schedule.extend(cmp);
-                CachedProgram { schedule, out_neuron: Some(ops::CMP_N), out_loc: Some(sum_loc) }
+                CachedProgram::new(schedule, Some(ops::CMP_N), Some(sum_loc))
             }
             OpDesc::SumTree { n } => {
                 assert!(
@@ -256,22 +256,18 @@ impl ProgramCache {
                     self.params.max_tree_fanin
                 );
                 let (schedule, loc, _) = adder_tree::sum_tree(n);
-                CachedProgram { schedule, out_neuron: None, out_loc: Some(loc) }
+                CachedProgram::new(schedule, None, Some(loc))
             }
             OpDesc::Maxpool { n } => {
                 let products: Vec<usize> = (0..n).collect();
                 let schedule = ops::maxpool_or(&products, ops::CMP_N);
-                CachedProgram { schedule, out_neuron: Some(ops::CMP_N), out_loc: None }
+                CachedProgram::new(schedule, Some(ops::CMP_N), None)
             }
             OpDesc::Relu { w, t } => {
                 // Input in R1[0..w], output to R2[0..w].
                 let x = Loc::Reg { reg: 0, lsb: 0, width: w };
                 let schedule = ops::relu(x, t, 1, 0);
-                CachedProgram {
-                    schedule,
-                    out_neuron: None,
-                    out_loc: Some(Loc::Reg { reg: 1, lsb: 0, width: w }),
-                }
+                CachedProgram::new(schedule, None, Some(Loc::Reg { reg: 1, lsb: 0, width: w }))
             }
         }
     }

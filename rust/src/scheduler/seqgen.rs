@@ -17,7 +17,8 @@
 
 use super::cache::ProgramCache;
 use super::{Loc, Schedule};
-use std::sync::Arc;
+use crate::pe::{PeStats, TulipPe};
+use std::sync::{Arc, OnceLock};
 
 /// Descriptor of an operation the controller can sequence.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -48,6 +49,34 @@ pub struct CachedProgram {
     pub out_neuron: Option<usize>,
     /// Register field holding the multi-bit result, if any.
     pub out_loc: Option<Loc>,
+    /// Lazily measured per-run activity (see [`Self::unit_stats`]).
+    unit_stats: OnceLock<PeStats>,
+}
+
+impl CachedProgram {
+    /// Bundle a schedule with its output metadata.
+    pub fn new(schedule: Schedule, out_neuron: Option<usize>, out_loc: Option<Loc>) -> Self {
+        CachedProgram { schedule, out_neuron, out_loc, unit_stats: OnceLock::new() }
+    }
+
+    /// Activity counters for exactly one run of this program on one PE.
+    ///
+    /// A schedule's activity is control-flow determined: which neurons
+    /// evaluate, which are gated, and which register bits are read or
+    /// written each cycle depend only on the control words, never on the
+    /// data bits flowing through them. So one measurement — a scalar
+    /// [`TulipPe`] run on dummy products — is exact for every run, and the
+    /// bit-sliced engine multiplies it by its modelled run count
+    /// ([`PeStats::scaled`]) instead of counting per step. Measured once
+    /// per cached program, then memoized.
+    pub fn unit_stats(&self) -> PeStats {
+        *self.unit_stats.get_or_init(|| {
+            let mut pe = TulipPe::new();
+            let dummy = vec![false; self.schedule.product_arity()];
+            self.schedule.run_on(&mut pe, &dummy);
+            pe.stats()
+        })
+    }
 }
 
 impl SequenceGenerator {
@@ -138,6 +167,26 @@ mod tests {
         let p = sg.program(&OpDesc::Relu { w: 8, t: 5 });
         assert_eq!(p.schedule.cycles(), 16);
         assert_eq!(p.out_loc, Some(Loc::Reg { reg: 1, lsb: 0, width: 8 }));
+    }
+
+    /// `unit_stats` is data-independent: the memoized dummy-data
+    /// measurement equals a fresh measurement on all-ones products.
+    #[test]
+    fn unit_stats_is_data_independent() {
+        let mut sg = SequenceGenerator::new();
+        for desc in [
+            OpDesc::ThresholdNode { n: 37, t_popcount: 11 },
+            OpDesc::SumTree { n: 20 },
+            OpDesc::Maxpool { n: 9 },
+        ] {
+            let prog = sg.program(&desc);
+            let cached = prog.unit_stats();
+            let mut pe = crate::pe::TulipPe::new();
+            let ones = vec![true; prog.schedule.product_arity()];
+            prog.schedule.run_on(&mut pe, &ones);
+            assert_eq!(cached, pe.stats(), "{desc:?}");
+            assert_eq!(cached.cycles, prog.schedule.cycles() as u64, "{desc:?}");
+        }
     }
 
     /// Generators built over the same cache share programs by pointer; a

@@ -7,12 +7,38 @@
 //! example (`examples/e2e_inference.rs`) and the schedule-level unit tests;
 //! full-size networks use the analytic model (`coordinator::exec`), whose
 //! cycle counts this engine validates.
+//!
+//! Two execution paths produce identical results (asserted by
+//! `tests/bitslice.rs`):
+//!
+//! * the **scalar** path (`conv_bin_cycle` / `maxpool_cycle` /
+//!   `fc_bin_cycle`): one `bool` at a time per stateful [`TulipPe`] — the
+//!   readable reference oracle;
+//! * the **bit-sliced** path (`conv_bin_sliced` / `maxpool_sliced` /
+//!   `fc_bin_sliced`): 64 lockstep lanes per `u64` word on a [`PeSlice`],
+//!   one pass of bitwise logic per broadcast control word. Legal because
+//!   the paper's own invariant (§IV-E) is that every PE runs the identical
+//!   broadcast schedule; the simulator packs 64 such executions — output
+//!   pixels for conv/pool, output neurons for FC — into each word.
+//!   Activity counters are credited analytically (per-program
+//!   [`unit_stats`](crate::scheduler::seqgen::CachedProgram::unit_stats)
+//!   × run count), which is exact because schedule activity is
+//!   control-flow determined.
+//!
+//! [`BatchExecutor`](crate::coordinator::BatchExecutor) selects between
+//! them via [`ForwardEngine`].
+//!
+//! [`TulipPe`]: crate::pe::TulipPe
+//! [`PeSlice`]: crate::pe::slice::PeSlice
 
-use crate::arch::unit::{xnor_products, xnor_products_into, PeArray};
+use crate::arch::unit::{xnor_product_word, xnor_products_into, PeArray, SlicedArray};
+use crate::bnn::bitpack::{LaneWeights, PackedWeights};
 use crate::bnn::tensor::{BinWeights, BitTensor};
 use crate::bnn::{Layer, Network};
+use crate::pe::slice::LANES;
 use crate::pe::PeStats;
 use crate::scheduler::seqgen::{OpDesc, SequenceGenerator};
+use crate::scheduler::Loc;
 
 /// Result of a bit-true layer execution.
 #[derive(Debug, Clone)]
@@ -123,13 +149,16 @@ pub fn maxpool_cycle(
     let prog = sg.program(&OpDesc::Maxpool { n: k * k });
     let num_pes = array.num_pes();
     let mut wall_cycles = 0u64;
+    // Hoisted out of the per-pixel loop (§Perf): one reused window buffer
+    // instead of an allocation per (pixel, channel).
+    let mut window: Vec<bool> = Vec::with_capacity(k * k);
     for ch_base in (0..input.c).step_by(num_pes) {
         let batch = (input.c - ch_base).min(num_pes);
         for oy in 0..oh {
             for ox in 0..ow {
                 for i in 0..batch {
                     let ch = ch_base + i;
-                    let mut window = Vec::with_capacity(k * k);
+                    window.clear();
                     for ky in 0..k {
                         for kx in 0..k {
                             window.push(input.get(oy * stride + ky, ox * stride + kx, ch));
@@ -162,16 +191,24 @@ pub fn fc_bin_cycle(
     let mut bits = vec![false; layer.z2];
     let mut scores = vec![0i64; layer.z2];
     let mut wall_cycles = 0u64;
+    // Hoisted out of the batch loop (§Perf): the product buffer is reused
+    // across neurons, and each chunk's programs are fetched once instead of
+    // once per neuron per lookup.
+    let mut products: Vec<bool> = Vec::with_capacity(layer.z1);
     for batch_base in (0..layer.z2).step_by(num_pes) {
         let batch = (layer.z2 - batch_base).min(num_pes);
+        let progs: Vec<_> = (0..batch)
+            .map(|i| {
+                sg.program(&OpDesc::ThresholdNode {
+                    n: layer.z1,
+                    t_popcount: weights.thresholds[batch_base + i],
+                })
+            })
+            .collect();
         let mut batch_cycles = 0u64;
-        for i in 0..batch {
+        for (i, prog) in progs.iter().enumerate() {
             let ch = batch_base + i;
-            let prog = sg.program(&OpDesc::ThresholdNode {
-                n: layer.z1,
-                t_popcount: weights.thresholds[ch],
-            });
-            let products = xnor_products(input, weights.filter(ch));
+            xnor_products_into(input, weights.filter(ch), &mut products);
             let pe = array.pe_mut(i);
             prog.schedule.run_on(pe, &products);
             bits[ch] = pe.neuron_out(prog.out_neuron.unwrap());
@@ -183,6 +220,236 @@ pub fn fc_bin_cycle(
             batch_cycles = batch_cycles.max(prog.schedule.cycles() as u64);
         }
         wall_cycles += batch_cycles;
+    }
+    (bits, scores, wall_cycles)
+}
+
+/// Which execution path [`BatchExecutor`](crate::coordinator::BatchExecutor)
+/// drives the bit-true simulation with. Both produce bit-identical
+/// [`ForwardResult`]s (scores, cycles, per-layer and per-PE [`PeStats`]) —
+/// asserted by `tests/bitslice.rs`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum ForwardEngine {
+    /// One `bool` per PE per step — the readable reference oracle.
+    Scalar,
+    /// 64 lockstep lanes per `u64` word — the fast path (default).
+    #[default]
+    BitSliced,
+}
+
+impl ForwardEngine {
+    /// Stable lowercase name, used as a metrics tag and in perf reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ForwardEngine::Scalar => "scalar",
+            ForwardEngine::BitSliced => "bit_sliced",
+        }
+    }
+}
+
+/// Per-layer weight packings for the bit-sliced engine, prepared once per
+/// network (the hardware analogue: weights are loaded into the kernel
+/// buffer once per layer, not re-fetched per pixel).
+#[derive(Debug, Clone)]
+pub struct SlicedWeights {
+    layers: Vec<LayerPack>,
+}
+
+/// Conv layers pack each filter along its fan-in ([`PackedWeights`], sign
+/// bits indexed per product); FC layers transpose across output channels
+/// ([`LaneWeights`], one lane word per product per 64-channel group).
+#[derive(Debug, Clone)]
+enum LayerPack {
+    Conv(PackedWeights),
+    Fc(LaneWeights),
+}
+
+impl SlicedWeights {
+    /// Pack every layer of a network.
+    pub fn pack(net: &Network, weights: &[BinWeights]) -> Self {
+        assert_eq!(net.layers.len(), weights.len(), "one weight set per layer");
+        let layers = net
+            .layers
+            .iter()
+            .zip(weights)
+            .map(|(l, w)| {
+                if l.is_conv() {
+                    LayerPack::Conv(PackedWeights::pack(w))
+                } else {
+                    LayerPack::Fc(LaneWeights::pack(w))
+                }
+            })
+            .collect();
+        SlicedWeights { layers }
+    }
+}
+
+/// Bit-sliced binary conv: 64 output pixels per lane word, one schedule run
+/// per (pixel-group, channel). Bit-identical to [`conv_bin_cycle`] in
+/// output, wall-clock cycles and per-PE activity.
+///
+/// The window gather is shared by every channel of a pixel group (the
+/// broadcast of Fig. 6); activity is credited to the same modelled PE the
+/// scalar path would use (`ch % num_pes`), once per pixel it computes.
+pub fn conv_bin_sliced(
+    arr: &mut SlicedArray,
+    sg: &mut SequenceGenerator,
+    input: &BitTensor,
+    layer: &Layer,
+    weights: &BinWeights,
+    packed: &PackedWeights,
+) -> CycleResult {
+    assert!(layer.is_binary() && layer.is_conv());
+    assert_eq!(input.c, layer.z1);
+    assert_eq!(packed.filters.len(), layer.z2, "packed weights must match the layer");
+    let (x2, y2) = layer.output_spatial();
+    let mut out = BitTensor::zeros(y2, x2, layer.z2);
+    let num_pes = arr.num_pes();
+    let pixels = x2 * y2;
+    let progs: Vec<_> = (0..layer.z2)
+        .map(|ch| {
+            sg.program(&OpDesc::ThresholdNode {
+                n: layer.fanin(),
+                t_popcount: weights.thresholds[ch],
+            })
+        })
+        .collect();
+
+    // Accounting, replicated analytically from the scalar path: each chunk
+    // of `num_pes` channels runs in lockstep per pixel (wall = slowest
+    // program in the chunk), and channel `ch` executes on modelled PE
+    // `ch % num_pes`, once per output pixel.
+    let mut wall_cycles = 0u64;
+    for chunk in progs.chunks(num_pes) {
+        let slowest = chunk.iter().map(|p| p.schedule.cycles() as u64).max().unwrap_or(0);
+        wall_cycles += pixels as u64 * slowest;
+    }
+    for (ch, prog) in progs.iter().enumerate() {
+        arr.credit(ch % num_pes, &prog.unit_stats(), pixels as u64);
+    }
+
+    // Compute: gather each 64-pixel window group once, then run every
+    // channel's program over it with word-level XNOR products.
+    let mut window_words: Vec<u64> = Vec::new();
+    for start in (0..pixels).step_by(LANES) {
+        let group = start..(start + LANES).min(pixels);
+        input.window_lanes_into(
+            x2,
+            layer.k,
+            layer.stride,
+            layer.padding,
+            group.clone(),
+            &mut window_words,
+        );
+        for (ch, prog) in progs.iter().enumerate() {
+            let filter = &packed.filters[ch];
+            let slice = arr.slice_mut();
+            slice.run(&prog.schedule, |p| xnor_product_word(window_words[p], filter.get(p)));
+            let outw = slice.neuron_word(prog.out_neuron.expect("threshold node has an output"));
+            for (j, pixel) in group.clone().enumerate() {
+                out.set(pixel / x2, pixel % x2, ch, outw >> j & 1 != 0);
+            }
+        }
+    }
+    CycleResult { output: out, stats: arr.stats(), cycles: wall_cycles }
+}
+
+/// Bit-sliced max-pooling: 64 output pixels of one channel per lane word.
+/// Bit-identical to [`maxpool_cycle`] in output, cycles and activity.
+pub fn maxpool_sliced(
+    arr: &mut SlicedArray,
+    sg: &mut SequenceGenerator,
+    input: &BitTensor,
+    k: usize,
+    stride: usize,
+) -> CycleResult {
+    let oh = (input.h - k) / stride + 1;
+    let ow = (input.w - k) / stride + 1;
+    let mut out = BitTensor::zeros(oh, ow, input.c);
+    let prog = sg.program(&OpDesc::Maxpool { n: k * k });
+    let num_pes = arr.num_pes();
+    let pixels = oh * ow;
+
+    // Scalar accounting: every chunk of `num_pes` channels pays the pool
+    // program once per pixel; channel `ch` runs on PE `ch % num_pes`.
+    let wall_cycles = (input.c.div_ceil(num_pes) * pixels) as u64 * prog.schedule.cycles() as u64;
+    let unit = prog.unit_stats();
+    for ch in 0..input.c {
+        arr.credit(ch % num_pes, &unit, pixels as u64);
+    }
+
+    let mut window_words: Vec<u64> = Vec::new();
+    for ch in 0..input.c {
+        for start in (0..pixels).step_by(LANES) {
+            let group = start..(start + LANES).min(pixels);
+            input.pool_lanes_into(ow, k, stride, ch, group.clone(), &mut window_words);
+            let slice = arr.slice_mut();
+            slice.run(&prog.schedule, |p| window_words[p]);
+            let outw = slice.neuron_word(prog.out_neuron.expect("maxpool has an output neuron"));
+            for (j, pixel) in group.clone().enumerate() {
+                out.set(pixel / ow, pixel % ow, ch, outw >> j & 1 != 0);
+            }
+        }
+    }
+    CycleResult { output: out, stats: arr.stats(), cycles: wall_cycles }
+}
+
+/// Bit-sliced binary FC: 64 output *neurons* per lane word.
+///
+/// All channels share one sum-tree shape, so the engine runs the shared
+/// [`OpDesc::SumTree`] program once per 64-channel group — products come
+/// from the channel-transposed [`LaneWeights`] XNORed against the
+/// broadcast input bit — then reads each lane's popcount from the tree's
+/// output register field and applies the per-channel threshold. This is
+/// exactly the value the scalar path reads back for `scores` (the
+/// comparison epilogue appended by the threshold-node program writes no
+/// registers), so scores and bits match the scalar path bit for bit; wall
+/// cycles and activity are still accounted from the full per-channel
+/// threshold-node programs, as the modelled hardware runs them.
+pub fn fc_bin_sliced(
+    arr: &mut SlicedArray,
+    sg: &mut SequenceGenerator,
+    input: &[bool],
+    layer: &Layer,
+    weights: &BinWeights,
+    lanes_w: &LaneWeights,
+) -> (Vec<bool>, Vec<i64>, u64) {
+    assert!(layer.is_fc());
+    assert_eq!(input.len(), layer.z1);
+    assert_eq!((lanes_w.z2, lanes_w.fanin), (layer.z2, layer.z1), "lane weights must match");
+    let num_pes = arr.num_pes();
+    let mut bits = vec![false; layer.z2];
+    let mut scores = vec![0i64; layer.z2];
+
+    let progs: Vec<_> = (0..layer.z2)
+        .map(|ch| {
+            sg.program(&OpDesc::ThresholdNode {
+                n: layer.z1,
+                t_popcount: weights.thresholds[ch],
+            })
+        })
+        .collect();
+    let mut wall_cycles = 0u64;
+    for chunk in progs.chunks(num_pes) {
+        wall_cycles += chunk.iter().map(|p| p.schedule.cycles() as u64).max().unwrap_or(0);
+    }
+    for (ch, prog) in progs.iter().enumerate() {
+        arr.credit(ch % num_pes, &prog.unit_stats(), 1);
+    }
+
+    let tree = sg.program(&OpDesc::SumTree { n: layer.z1 });
+    let Some(Loc::Reg { reg, lsb, width }) = tree.out_loc else {
+        unreachable!("sum tree leaves its result in a register");
+    };
+    for wi in 0..layer.z2.div_ceil(LANES) {
+        let slice = arr.slice_mut();
+        slice.run(&tree.schedule, |p| xnor_product_word(lanes_w.word(wi, p), input[p]));
+        for j in 0..(layer.z2 - wi * LANES).min(LANES) {
+            let ch = wi * LANES + j;
+            let pc = slice.peek_field_lane(reg, lsb, width, j) as i64;
+            scores[ch] = pc;
+            bits[ch] = pc >= weights.thresholds[ch];
+        }
     }
     (bits, scores, wall_cycles)
 }
@@ -266,6 +533,83 @@ pub fn forward_bin_cycle(
                     stats: array.stats(),
                     layers,
                     per_pe: array.per_pe_stats(),
+                };
+            }
+            flat = Some(bits);
+        }
+    }
+    panic!("network must end in an FC layer");
+}
+
+/// Bit-sliced whole-network forward pass — the lane-parallel counterpart of
+/// [`forward_bin_cycle`], bit-identical in scores, cycles, per-layer
+/// records and per-PE activity (asserted by `tests/bitslice.rs`). `packed`
+/// must come from [`SlicedWeights::pack`] on the same `(net, weights)`.
+pub fn forward_bin_sliced(
+    arr: &mut SlicedArray,
+    sg: &mut SequenceGenerator,
+    input: &BitTensor,
+    net: &Network,
+    weights: &[BinWeights],
+    packed: &SlicedWeights,
+) -> ForwardResult {
+    assert_eq!(net.layers.len(), weights.len(), "one weight set per layer");
+    assert_eq!(net.layers.len(), packed.layers.len(), "one packing per layer");
+    arr.reset_stats();
+    let mut cycles = 0u64;
+    let mut layers: Vec<LayerObs> = Vec::with_capacity(net.layers.len());
+    let mut act = input.clone();
+    let mut flat: Option<Vec<bool>> = None;
+    for (i, (layer, w)) in net.layers.iter().zip(weights).enumerate() {
+        let last = i + 1 == net.layers.len();
+        let stats_before = arr.stats();
+        let cycles_before = cycles;
+        if layer.is_conv() {
+            assert!(layer.is_binary(), "forward_bin_sliced handles binary networks only");
+            assert!(
+                flat.is_none(),
+                "conv layer '{}' cannot follow an FC layer (chain topology, §I)",
+                layer.name
+            );
+            let LayerPack::Conv(pw) = &packed.layers[i] else {
+                panic!("layer '{}' packed as FC but described as conv", layer.name);
+            };
+            let r = conv_bin_sliced(arr, sg, &act, layer, w, pw);
+            cycles += r.cycles;
+            act = r.output;
+            let kind = if layer.pool.is_some() { "conv+pool" } else { "conv" };
+            if let Some((pk, ps)) = layer.pool {
+                let p = maxpool_sliced(arr, sg, &act, pk, ps);
+                cycles += p.cycles;
+                act = p.output;
+            }
+            layers.push(LayerObs {
+                name: layer.name.clone(),
+                kind,
+                cycles: cycles - cycles_before,
+                stats: arr.stats().delta(&stats_before),
+            });
+        } else {
+            assert!(layer.is_binary(), "forward_bin_sliced handles binary networks only");
+            let LayerPack::Fc(lw) = &packed.layers[i] else {
+                panic!("layer '{}' packed as conv but described as FC", layer.name);
+            };
+            let input_flat = flat.take().unwrap_or_else(|| act.flatten());
+            let (bits, scores, fc_cycles) = fc_bin_sliced(arr, sg, &input_flat, layer, w, lw);
+            cycles += fc_cycles;
+            layers.push(LayerObs {
+                name: layer.name.clone(),
+                kind: "fc",
+                cycles: cycles - cycles_before,
+                stats: arr.stats().delta(&stats_before),
+            });
+            if last {
+                return ForwardResult {
+                    scores,
+                    cycles,
+                    stats: arr.stats(),
+                    layers,
+                    per_pe: arr.per_pe_stats(),
                 };
             }
             flat = Some(bits);
@@ -359,6 +703,93 @@ mod tests {
         assert_eq!(a.scores, b.scores);
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.stats, b.stats);
+    }
+
+    /// The bit-sliced conv equals the scalar oracle — output, wall clock,
+    /// totals and the per-PE partition — on a padded geometry whose pixel
+    /// count is not a multiple of 64.
+    #[test]
+    fn conv_sliced_matches_scalar() {
+        let layer = Layer::conv("c", LayerKind::ConvBin, (6, 6, 4), 3, 1, 1, 10, None);
+        let input = BitTensor::random(6, 6, 4, 11);
+        let weights = BinWeights::random(10, layer.fanin(), 5);
+        let packed = crate::bnn::bitpack::PackedWeights::pack(&weights);
+        let mut array = small_array();
+        let mut sg = SequenceGenerator::new();
+        let scalar = conv_bin_cycle(&mut array, &mut sg, &input, &layer, &weights);
+        let mut arr = SlicedArray::new(2, 4);
+        let mut sg2 = SequenceGenerator::new();
+        let sliced = conv_bin_sliced(&mut arr, &mut sg2, &input, &layer, &weights, &packed);
+        assert_eq!(sliced.output, scalar.output);
+        assert_eq!(sliced.cycles, scalar.cycles);
+        assert_eq!(sliced.stats, scalar.stats);
+        assert_eq!(arr.per_pe_stats(), array.per_pe_stats());
+    }
+
+    #[test]
+    fn maxpool_sliced_matches_scalar() {
+        let input = BitTensor::random(8, 8, 6, 21);
+        for (k, stride) in [(2, 2), (3, 2)] {
+            let mut array = small_array();
+            let mut sg = SequenceGenerator::new();
+            let scalar = maxpool_cycle(&mut array, &mut sg, &input, k, stride);
+            let mut arr = SlicedArray::new(2, 4);
+            let mut sg2 = SequenceGenerator::new();
+            let sliced = maxpool_sliced(&mut arr, &mut sg2, &input, k, stride);
+            assert_eq!(sliced.output, scalar.output, "k={k} stride={stride}");
+            assert_eq!(sliced.cycles, scalar.cycles, "k={k} stride={stride}");
+            assert_eq!(sliced.stats, scalar.stats, "k={k} stride={stride}");
+            assert_eq!(arr.per_pe_stats(), array.per_pe_stats());
+        }
+    }
+
+    /// FC equivalence including degenerate thresholds (always-true /
+    /// always-false epilogues) and a z2 crossing the 64-lane boundary.
+    #[test]
+    fn fc_sliced_matches_scalar() {
+        let layer = Layer::fc("f", LayerKind::FcBin, 64, 70);
+        let mut weights = BinWeights::random(70, 64, 9);
+        weights.thresholds[0] = -1; // epilogue degenerates to const-true
+        weights.thresholds[69] = 64 + 5; // const-false
+        let lanes = crate::bnn::bitpack::LaneWeights::pack(&weights);
+        let input: Vec<bool> = (0..64).map(|i| i % 5 != 0).collect();
+        let mut array = small_array();
+        let mut sg = SequenceGenerator::new();
+        let (sb, ss, sc) = fc_bin_cycle(&mut array, &mut sg, &input, &layer, &weights);
+        let mut arr = SlicedArray::new(2, 4);
+        let mut sg2 = SequenceGenerator::new();
+        let (lb, ls, lc) = fc_bin_sliced(&mut arr, &mut sg2, &input, &layer, &weights, &lanes);
+        assert_eq!(lb, sb);
+        assert_eq!(ls, ss);
+        assert_eq!(lc, sc);
+        assert_eq!(arr.stats(), array.stats());
+        assert_eq!(arr.per_pe_stats(), array.per_pe_stats());
+        assert!(lb[0] && !lb[69], "degenerate thresholds resolve as constants");
+    }
+
+    /// Whole-network equality: every field of the ForwardResult.
+    #[test]
+    fn forward_sliced_matches_scalar() {
+        let net = tiny_bnn(8, 4, 3);
+        let weights: Vec<BinWeights> = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 90 + i as u64))
+            .collect();
+        let packed = SlicedWeights::pack(&net, &weights);
+        let input = BitTensor::random(8, 8, 4, 17);
+        let mut array = small_array();
+        let mut sg = SequenceGenerator::new();
+        let a = forward_bin_cycle(&mut array, &mut sg, &input, &net, &weights);
+        let mut arr = SlicedArray::new(2, 4);
+        let mut sg2 = SequenceGenerator::new();
+        let b = forward_bin_sliced(&mut arr, &mut sg2, &input, &net, &weights, &packed);
+        assert_eq!(b.scores, a.scores);
+        assert_eq!(b.cycles, a.cycles);
+        assert_eq!(b.stats, a.stats);
+        assert_eq!(b.layers, a.layers);
+        assert_eq!(b.per_pe, a.per_pe);
     }
 
     /// Wall-clock cycles: PEs run the same program in lockstep, so batch

@@ -1,0 +1,187 @@
+//! Scalar vs bit-sliced engine equivalence (the tentpole contract of the
+//! lane-parallel execution path):
+//!
+//! * every layer executor — conv, maxpool, FC — produces bit-identical
+//!   outputs, wall-clock cycles, aggregate `PeStats` and per-PE partitions
+//!   across randomized shapes, including ragged tails where the pixel
+//!   count or `z2` is not a multiple of 64 and degenerate thresholds whose
+//!   comparison epilogues collapse to constants;
+//! * whole-network `ForwardResult`s are equal field for field on the zoo
+//!   networks;
+//! * `BatchExecutor` produces identical batches under either engine.
+
+use tulip::arch::unit::{PeArray, SlicedArray};
+use tulip::bnn::bitpack::{LaneWeights, PackedWeights};
+use tulip::bnn::layer::LayerKind;
+use tulip::bnn::tensor::{BinWeights, BitTensor};
+use tulip::bnn::{tiny_bnn, Layer, Network};
+use tulip::coordinator::{BatchExecutor, BatchRequest, ForwardEngine};
+use tulip::scheduler::seqgen::SequenceGenerator;
+use tulip::sim::cycle::{
+    conv_bin_cycle, conv_bin_sliced, fc_bin_cycle, fc_bin_sliced, forward_bin_cycle,
+    forward_bin_sliced, maxpool_cycle, maxpool_sliced, SlicedWeights,
+};
+use tulip::util::prop::forall;
+
+fn weights_for(net: &Network, seed: u64) -> Vec<BinWeights> {
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), seed + i as u64))
+        .collect()
+}
+
+/// Paired engines sharing one program cache (as the serving engine does).
+fn engines() -> (PeArray, SlicedArray, SequenceGenerator, SequenceGenerator) {
+    let sg = SequenceGenerator::new();
+    let sg2 = SequenceGenerator::with_cache(sg.cache());
+    (PeArray::new(2, 4), SlicedArray::new(2, 4), sg, sg2)
+}
+
+/// Conv: random geometry (padding, stride, channel counts beyond the
+/// 8-PE array, pixel counts far from multiples of 64) — output, cycles,
+/// stats and the per-PE partition must all match.
+#[test]
+fn prop_conv_scalar_vs_sliced() {
+    forall(
+        "conv-bitslice",
+        25,
+        |r| {
+            let h = 4 + r.gen_index(9); // 4..=12
+            let w = 4 + r.gen_index(9);
+            let c = 1 + r.gen_index(6); // 1..=6
+            let k = if r.gen_bool(0.25) { 1 } else { 3 };
+            let stride = 1 + r.gen_index(2);
+            let pad = r.gen_index(k / 2 + 1);
+            let z2 = 1 + r.gen_index(12); // ragged over the 8-PE array
+            let seed = r.gen_index(1 << 20) as u64;
+            (h, w, c, k, stride, pad, z2, seed)
+        },
+        |&(h, w, c, k, stride, pad, z2, seed)| {
+            let layer = Layer::conv("c", LayerKind::ConvBin, (w, h, c), k, stride, pad, z2, None);
+            let input = BitTensor::random(h, w, c, seed);
+            let weights = BinWeights::random(z2, layer.fanin(), seed ^ 0xABCD);
+            let packed = PackedWeights::pack(&weights);
+            let (mut array, mut arr, mut sg, mut sg2) = engines();
+            let scalar = conv_bin_cycle(&mut array, &mut sg, &input, &layer, &weights);
+            let sliced = conv_bin_sliced(&mut arr, &mut sg2, &input, &layer, &weights, &packed);
+            assert_eq!(sliced.output, scalar.output);
+            assert_eq!(sliced.cycles, scalar.cycles);
+            assert_eq!(sliced.stats, scalar.stats);
+            assert_eq!(arr.per_pe_stats(), array.per_pe_stats());
+        },
+    );
+}
+
+/// Maxpool: overlapping and non-overlapping windows, channel counts past
+/// the array width.
+#[test]
+fn prop_maxpool_scalar_vs_sliced() {
+    forall(
+        "maxpool-bitslice",
+        25,
+        |r| {
+            let k = 2 + r.gen_index(2); // 2..=3
+            let stride = 1 + r.gen_index(2);
+            let h = k + r.gen_index(9);
+            let w = k + r.gen_index(9);
+            let c = 1 + r.gen_index(11); // ragged over the 8-PE array
+            let seed = r.gen_index(1 << 20) as u64;
+            (h, w, c, k, stride, seed)
+        },
+        |&(h, w, c, k, stride, seed)| {
+            let input = BitTensor::random(h, w, c, seed);
+            let (mut array, mut arr, mut sg, mut sg2) = engines();
+            let scalar = maxpool_cycle(&mut array, &mut sg, &input, k, stride);
+            let sliced = maxpool_sliced(&mut arr, &mut sg2, &input, k, stride);
+            assert_eq!(sliced.output, scalar.output);
+            assert_eq!(sliced.cycles, scalar.cycles);
+            assert_eq!(sliced.stats, scalar.stats);
+            assert_eq!(arr.per_pe_stats(), array.per_pe_stats());
+        },
+    );
+}
+
+/// FC: fan-ins and output widths crossing the 64-lane boundary, plus
+/// forced degenerate thresholds (const-true / const-false epilogues).
+#[test]
+fn prop_fc_scalar_vs_sliced() {
+    forall(
+        "fc-bitslice",
+        25,
+        |r| {
+            let z1 = 8 + r.gen_index(143); // 8..=150
+            let z2 = 1 + r.gen_index(130); // crosses 64 and 128
+            let seed = r.gen_index(1 << 20) as u64;
+            (z1, z2, seed)
+        },
+        |&(z1, z2, seed)| {
+            let layer = Layer::fc("f", LayerKind::FcBin, z1, z2);
+            let mut weights = BinWeights::random(z2, z1, seed ^ 0x5EED);
+            weights.thresholds[0] = -3; // epilogue: const-true
+            weights.thresholds[z2 - 1] = z1 as i64 + 7; // epilogue: const-false
+            let lanes = LaneWeights::pack(&weights);
+            let input: Vec<bool> = {
+                let t = BitTensor::random(1, 1, z1, seed ^ 0xF00D);
+                t.data
+            };
+            let (mut array, mut arr, mut sg, mut sg2) = engines();
+            let (sb, ss, sc) = fc_bin_cycle(&mut array, &mut sg, &input, &layer, &weights);
+            let (lb, ls, lc) = fc_bin_sliced(&mut arr, &mut sg2, &input, &layer, &weights, &lanes);
+            assert_eq!(lb, sb);
+            assert_eq!(ls, ss);
+            assert_eq!(lc, sc);
+            assert_eq!(arr.stats(), array.stats());
+            assert_eq!(arr.per_pe_stats(), array.per_pe_stats());
+        },
+    );
+}
+
+/// Whole-network forward passes are equal field for field on the zoo
+/// networks (conv + fused pool + FC stack; 16×16 has 256 pixels = exactly
+/// four lane words, 8×8 leaves ragged groups everywhere).
+#[test]
+fn forward_results_identical_on_zoo_networks() {
+    for (net, seed) in [(tiny_bnn(8, 4, 3), 90u64), (tiny_bnn(16, 8, 5), 400u64)] {
+        let weights = weights_for(&net, seed);
+        let packed = SlicedWeights::pack(&net, &weights);
+        let l0 = &net.layers[0];
+        let input = BitTensor::random(l0.y1, l0.x1, l0.z1, seed + 17);
+        let (mut array, mut arr, mut sg, mut sg2) = engines();
+        let a = forward_bin_cycle(&mut array, &mut sg, &input, &net, &weights);
+        let b = forward_bin_sliced(&mut arr, &mut sg2, &input, &net, &weights, &packed);
+        assert_eq!(b.scores, a.scores, "{}", net.name);
+        assert_eq!(b.cycles, a.cycles, "{}", net.name);
+        assert_eq!(b.stats, a.stats, "{}", net.name);
+        assert_eq!(b.layers, a.layers, "{}", net.name);
+        assert_eq!(b.per_pe, a.per_pe, "{}", net.name);
+        // The per-layer records still partition the totals exactly.
+        let layer_cycles: u64 = b.layers.iter().map(|l| l.cycles).sum();
+        assert_eq!(layer_cycles, b.cycles, "{}", net.name);
+    }
+}
+
+/// The serving layer is engine-agnostic: batches are bit-identical under
+/// either engine, per image and in aggregate.
+#[test]
+fn batch_executor_engines_agree() {
+    let net = tiny_bnn(8, 4, 3);
+    let weights = weights_for(&net, 300);
+    let scalar = BatchExecutor::new(net.clone(), weights.clone())
+        .unwrap()
+        .with_array(2, 4)
+        .with_engine(ForwardEngine::Scalar);
+    let sliced = BatchExecutor::new(net, weights).unwrap().with_array(2, 4);
+    assert_eq!(sliced.engine(), ForwardEngine::BitSliced);
+    let req = BatchRequest::new((0..4).map(|i| BitTensor::random(8, 8, 4, 700 + i)).collect());
+    let a = scalar.run(&req).unwrap();
+    let b = sliced.run(&req).unwrap();
+    assert_eq!(a.classes(), b.classes());
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.stats, b.stats);
+    assert_eq!(a.per_pe(), b.per_pe());
+    for (x, y) in a.images.iter().zip(&b.images) {
+        assert_eq!(x.scores, y.scores, "image {}", x.index);
+        assert_eq!(x.layers, y.layers, "image {}", x.index);
+    }
+}
