@@ -1,0 +1,262 @@
+//! `load_client` — open-loop traffic generator for `tulip serve`.
+//!
+//! Drives configurable open-loop load (arrival rate, burst factor,
+//! deadline mix) over N connections against a running server, verifies
+//! every `ok` response bit-for-bit against a local `BatchExecutor`, and
+//! prints p50/p99 latency plus realized batch occupancy. Exits non-zero on
+//! any error, any rejection (unless `--allow-reject`), a shed when
+//! `--deadline-frac` is 0, or a p99 over `--assert-p99-us`.
+//!
+//! ```sh
+//! cargo run --release --example load_client -- \
+//!     --addr 127.0.0.1:7070 --model tiny --requests 200 --rate 2000 \
+//!     --conns 4 --deadline-frac 0.25 --deadline-ms 1 --drain
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tulip::bnn::tensor::BitTensor;
+use tulip::coordinator::BatchExecutor;
+use tulip::serve::{demo_network, pack_bits, ServeResponse, Status};
+
+#[derive(Clone)]
+struct Args {
+    addr: String,
+    model: String,
+    requests: usize,
+    rate: f64,
+    burst: usize,
+    conns: usize,
+    deadline_frac: f64,
+    deadline_ms: u64,
+    drain: bool,
+    allow_reject: bool,
+    assert_p99_us: Option<u64>,
+    verify: bool,
+}
+
+fn flag_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn parse_args() -> Args {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    Args {
+        addr: flag_value(&argv, "--addr").unwrap_or_else(|| "127.0.0.1:7070".into()),
+        model: flag_value(&argv, "--model").unwrap_or_else(|| "tiny".into()),
+        requests: flag_value(&argv, "--requests").and_then(|v| v.parse().ok()).unwrap_or(200),
+        rate: flag_value(&argv, "--rate").and_then(|v| v.parse().ok()).unwrap_or(2000.0),
+        burst: flag_value(&argv, "--burst").and_then(|v| v.parse().ok()).unwrap_or(1).max(1),
+        conns: flag_value(&argv, "--conns").and_then(|v| v.parse().ok()).unwrap_or(4).max(1),
+        deadline_frac: flag_value(&argv, "--deadline-frac")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0.0),
+        deadline_ms: flag_value(&argv, "--deadline-ms").and_then(|v| v.parse().ok()).unwrap_or(1),
+        drain: argv.iter().any(|a| a == "--drain"),
+        allow_reject: argv.iter().any(|a| a == "--allow-reject"),
+        assert_p99_us: flag_value(&argv, "--assert-p99-us").and_then(|v| v.parse().ok()),
+        verify: !argv.iter().any(|a| a == "--no-verify"),
+    }
+}
+
+/// Deterministic image for request `id` — the server never sees the seed,
+/// only the packed bits, so bit-identity checks are end-to-end.
+fn image_for(id: u64, h: usize, w: usize, c: usize) -> BitTensor {
+    BitTensor::random(h, w, c, 5000 + id)
+}
+
+/// One connection's worth of open-loop traffic: send this connection's
+/// request ids at the configured pace while a reader thread collects
+/// responses; returns them once one response per request has arrived.
+fn drive_connection(
+    args: &Args,
+    ids: Vec<u64>,
+    input: (usize, usize, usize),
+) -> anyhow::Result<Vec<ServeResponse>> {
+    let (h, w, c) = input;
+    let stream = TcpStream::connect(&args.addr)?;
+    let expected = ids.len();
+    let reader = {
+        let stream = stream.try_clone()?;
+        std::thread::spawn(move || -> anyhow::Result<Vec<ServeResponse>> {
+            let mut responses = Vec::with_capacity(expected);
+            for line in BufReader::new(stream).lines() {
+                responses.push(ServeResponse::parse(&line?)?);
+                if responses.len() == expected {
+                    break;
+                }
+            }
+            Ok(responses)
+        })
+    };
+    // Open-loop pacing: the fleet sends `rate` req/s overall, so each of
+    // the `conns` connections sends every conns/rate seconds; a burst of B
+    // sends B back-to-back and then sleeps B intervals.
+    let interval = Duration::from_secs_f64(args.conns as f64 / args.rate.max(1.0));
+    let mut sender = stream;
+    let deadline_cut = (args.deadline_frac * args.requests as f64) as u64;
+    for (k, &id) in ids.iter().enumerate() {
+        let image = image_for(id, h, w, c);
+        let deadline = if id < deadline_cut {
+            format!(", \"deadline_ms\": {}", args.deadline_ms)
+        } else {
+            String::new()
+        };
+        let line = format!(
+            "{{\"id\": {id}, \"h\": {h}, \"w\": {w}, \"c\": {c}, \"bits\": \"{}\"{deadline}}}\n",
+            pack_bits(&image.data)
+        );
+        sender.write_all(line.as_bytes())?;
+        if (k + 1) % args.burst == 0 {
+            sender.flush()?;
+            std::thread::sleep(interval * args.burst as u32);
+        }
+    }
+    sender.flush()?;
+    reader.join().expect("reader thread panicked")
+}
+
+/// Exact percentile over the collected per-request samples.
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = parse_args();
+    let (net, weights) =
+        demo_network(&args.model).ok_or_else(|| anyhow::anyhow!("unknown model {}", args.model))?;
+    let l0 = &net.layers[0];
+    let input = (l0.y1, l0.x1, l0.z1);
+    let oracle =
+        if args.verify { Some(Arc::new(BatchExecutor::new(net, weights)?)) } else { None };
+
+    println!(
+        "load_client: {} requests @ {} req/s (burst {}) over {} conns to {} [model {}]",
+        args.requests, args.rate, args.burst, args.conns, args.addr, args.model
+    );
+    let t0 = Instant::now();
+    let mut lanes: Vec<Vec<u64>> = vec![Vec::new(); args.conns];
+    for id in 0..args.requests as u64 {
+        lanes[id as usize % args.conns].push(id);
+    }
+    let workers: Vec<_> = lanes
+        .into_iter()
+        .map(|ids| {
+            let args = args.clone();
+            std::thread::spawn(move || drive_connection(&args, ids, input))
+        })
+        .collect();
+    let mut responses = Vec::with_capacity(args.requests);
+    for w in workers {
+        responses.extend(w.join().expect("connection thread panicked")?);
+    }
+    let wall = t0.elapsed();
+
+    // Tally outcomes and verify ok responses against the local oracle.
+    let (mut ok, mut shed, mut rejected, mut errors, mut mismatches) = (0u64, 0u64, 0u64, 0u64, 0);
+    let mut total_us: Vec<u64> = Vec::new();
+    let mut queue_us: Vec<u64> = Vec::new();
+    let mut occupancy: Vec<u64> = Vec::new();
+    for r in &responses {
+        match r.status {
+            Status::Ok => {
+                ok += 1;
+                total_us.push(r.total_us);
+                queue_us.push(r.queue_us);
+                occupancy.push(r.batch_n as u64);
+                if let Some(exec) = &oracle {
+                    let (h, w, c) = input;
+                    let direct = exec.run_one(0, &image_for(r.id, h, w, c))?;
+                    if r.scores != direct.scores || r.class != Some(direct.class) {
+                        mismatches += 1;
+                        eprintln!(
+                            "MISMATCH id {}: {:?} vs local {:?}",
+                            r.id,
+                            r.scores,
+                            direct.scores
+                        );
+                    }
+                }
+            }
+            Status::Shed => shed += 1,
+            Status::Rejected => rejected += 1,
+            Status::Error => {
+                errors += 1;
+                eprintln!("ERROR id {}: {}", r.id, r.error.as_deref().unwrap_or("?"));
+            }
+        }
+    }
+    total_us.sort_unstable();
+    queue_us.sort_unstable();
+    let mean_occ = if occupancy.is_empty() {
+        0.0
+    } else {
+        occupancy.iter().sum::<u64>() as f64 / occupancy.len() as f64
+    };
+
+    println!(
+        "{} responses in {:.1} ms: {} ok / {} shed / {} rejected / {} errors ({} verify mismatches)",
+        responses.len(),
+        wall.as_secs_f64() * 1e3,
+        ok,
+        shed,
+        rejected,
+        errors,
+        mismatches
+    );
+    println!(
+        "latency total p50 {} us / p99 {} us (queue p50 {} us / p99 {} us)",
+        percentile(&total_us, 0.50),
+        percentile(&total_us, 0.99),
+        percentile(&queue_us, 0.50),
+        percentile(&queue_us, 0.99)
+    );
+    println!(
+        "occupancy mean {:.1} images/batch (max {})",
+        mean_occ,
+        occupancy.iter().max().copied().unwrap_or(0)
+    );
+
+    if args.drain {
+        let mut s = TcpStream::connect(&args.addr)?;
+        s.write_all(b"{\"op\": \"drain\"}\n")?;
+        let mut ack = String::new();
+        BufReader::new(s).read_line(&mut ack)?;
+        println!("drain ack: {}", ack.trim());
+    }
+
+    let mut failed = false;
+    if responses.len() != args.requests {
+        eprintln!("FAIL: {} responses for {} requests", responses.len(), args.requests);
+        failed = true;
+    }
+    if errors > 0 || mismatches > 0 {
+        eprintln!("FAIL: {errors} errors, {mismatches} mismatches");
+        failed = true;
+    }
+    if rejected > 0 && !args.allow_reject {
+        eprintln!("FAIL: {rejected} rejections (pass --allow-reject to tolerate)");
+        failed = true;
+    }
+    if shed > 0 && args.deadline_frac == 0.0 {
+        eprintln!("FAIL: {shed} sheds with no deadlines requested");
+        failed = true;
+    }
+    if let Some(budget) = args.assert_p99_us {
+        let p99 = percentile(&total_us, 0.99);
+        if p99 > budget {
+            eprintln!("FAIL: p99 {p99} us exceeds budget {budget} us");
+            failed = true;
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    Ok(())
+}

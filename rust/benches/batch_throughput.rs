@@ -8,6 +8,12 @@
 //!
 //! Run: `cargo bench --bench batch_throughput`
 //!
+//! Emits `BENCH_batch_throughput.json` (schema
+//! `tulip.bench_batch_throughput/v1`) in the working directory: the serial
+//! baseline, every (threads × batch) sweep row, and the best multi-thread
+//! throughput with its speedup over serial. CI uploads the file next to
+//! `BENCH_hotpath.json`.
+//!
 //! Pass `--perf-out <path>` (after `--`) to additionally export a
 //! `tulip.perf_report/v1` JSON for the full-batch multi-thread run:
 //! `cargo bench --bench batch_throughput -- --perf-out perf-report.json`
@@ -31,6 +37,38 @@ fn perf_out_arg() -> Option<String> {
         }
     }
     None
+}
+
+/// One sweep configuration's measured throughput.
+struct SweepRow {
+    threads: usize,
+    batch: usize,
+    wall_ms: f64,
+    images_per_sec: f64,
+}
+
+fn write_report(serial_ips: f64, rows: &[SweepRow], best_ips: f64) {
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": \"tulip.bench_batch_throughput/v1\",\n");
+    s.push_str(&format!("  \"serial_images_per_sec\": {serial_ips:.2},\n  \"cases\": [\n"));
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"threads\": {}, \"batch\": {}, \"wall_ms\": {:.1}, \
+             \"images_per_sec\": {:.2}, \"speedup_vs_serial\": {:.2}}}{}\n",
+            r.threads,
+            r.batch,
+            r.wall_ms,
+            r.images_per_sec,
+            r.images_per_sec / serial_ips,
+            comma
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!("  \"best_images_per_sec\": {best_ips:.2},\n"));
+    s.push_str(&format!("  \"best_speedup_vs_serial\": {:.2}\n}}\n", best_ips / serial_ips));
+    std::fs::write("BENCH_batch_throughput.json", &s).expect("write BENCH_batch_throughput.json");
+    println!("wrote BENCH_batch_throughput.json (best {:.2}x serial)", best_ips / serial_ips);
 }
 
 fn weights_for(net: &Network) -> Vec<BinWeights> {
@@ -98,20 +136,32 @@ fn main() {
             for (i, r) in result.images.iter().enumerate() {
                 assert_eq!(r.scores, serial_scores[i], "threads={threads} batch={batch} image={i}");
             }
-            rows.push(vec![
-                threads.to_string(),
-                batch.to_string(),
-                format!("{:.1}", dt.as_secs_f64() * 1e3),
-                format!("{:.2}", ips),
-                format!("{:.2}X", ips / serial_ips),
-            ]);
+            rows.push(SweepRow {
+                threads,
+                batch,
+                wall_ms: dt.as_secs_f64() * 1e3,
+                images_per_sec: ips,
+            });
         }
     }
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.threads.to_string(),
+                r.batch.to_string(),
+                format!("{:.1}", r.wall_ms),
+                format!("{:.2}", r.images_per_sec),
+                format!("{:.2}X", r.images_per_sec / serial_ips),
+            ]
+        })
+        .collect();
     print_table(
         "Batched bit-true inference (outputs verified bit-identical to serial)",
         &["threads", "batch", "wall (ms)", "images/s", "vs serial"],
-        &rows,
+        &table,
     );
+    write_report(serial_ips, &rows, best_ips);
 
     // --- Optional PerfReport export --------------------------------------
     if let Some(path) = perf_out_arg() {

@@ -68,8 +68,10 @@ impl BatchRequest {
         self.images.len()
     }
 
-    /// Whether the request is empty (an empty batch is valid and yields an
-    /// empty result).
+    /// Whether the request is empty. Empty requests are rejected by
+    /// [`BatchExecutor::run`] — there is nothing to schedule, and silently
+    /// returning an empty result would hide caller bugs (a batcher that
+    /// flushed nothing).
     pub fn is_empty(&self) -> bool {
         self.images.is_empty()
     }
@@ -448,6 +450,10 @@ impl BatchExecutor {
     /// ```
     pub fn run(&self, req: &BatchRequest) -> Result<BatchResult> {
         let _span = crate::metrics::span("batch.run");
+        ensure!(!req.is_empty(), "empty batch: a BatchRequest must contain at least one image");
+        // Every image must match the network's input layer — which also
+        // guarantees all images in the batch agree with *each other*, so
+        // nothing deeper in the packing path ever sees mixed shapes.
         for (i, img) in req.images.iter().enumerate() {
             self.check_image(i, img)?;
         }
@@ -689,13 +695,23 @@ mod tests {
     }
 
     #[test]
-    fn empty_batch_is_fine() {
+    fn empty_batch_is_a_clean_error() {
         let exec = tiny_executor();
-        let got = exec.run(&BatchRequest::default()).unwrap();
-        assert!(got.images.is_empty());
-        assert_eq!(got.cycles, 0);
-        assert_eq!(got.images_per_sec(), 0.0);
-        assert_eq!(got.simulated_us_per_image(), 0.0);
+        let err = exec.run(&BatchRequest::default()).unwrap_err();
+        assert!(err.to_string().contains("empty batch"), "{err}");
+    }
+
+    #[test]
+    fn mixed_shape_batch_is_a_clean_error() {
+        let exec = tiny_executor();
+        // First image is valid, second disagrees — the error names the
+        // offending index instead of panicking deep in packing.
+        let req = BatchRequest::new(vec![
+            BitTensor::random(8, 8, 4, 1),
+            BitTensor::random(8, 4, 4, 2),
+        ]);
+        let err = exec.run(&req).unwrap_err();
+        assert!(err.to_string().contains("image 1"), "{err}");
     }
 
     #[test]

@@ -19,5 +19,5 @@ pub use batch::{
 };
 pub use crate::sim::cycle::ForwardEngine;
 pub use exec::{LayerPerf, NetworkPerf};
-pub use perf_report::{LayerReport, PeReport, PerfReport};
+pub use perf_report::{LayerReport, PeReport, PerfReport, ReportParts};
 pub use tiling::{table3, tiling, Tiling};

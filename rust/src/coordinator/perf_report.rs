@@ -32,11 +32,15 @@
 
 use crate::coordinator::batch::{BatchExecutor, BatchResult, WorkerSummary};
 use crate::energy::{EnergyBreakdown, EnergyModel};
-use crate::metrics::MetricsSnapshot;
+use crate::metrics::{HistogramSnapshot, MetricsSnapshot};
+use crate::pe::PeStats;
 use crate::scheduler::CacheStats;
+use crate::serve::ServeStats;
+use crate::sim::cycle::LayerObs;
 use crate::util::bench::print_table;
 use crate::Result;
 use std::path::Path;
+use std::time::Duration;
 
 /// One layer's row of a [`PerfReport`]: cycles, share, energy and
 /// utilization, merged across every image of the batch.
@@ -110,6 +114,46 @@ pub struct PerfReport {
     /// Optional embedded registry snapshot (see
     /// [`PerfReport::with_metrics`]).
     pub metrics: Option<MetricsSnapshot>,
+    /// Optional serving-layer accounting (see [`PerfReport::with_serve`]);
+    /// present on reports emitted by a draining `tulip serve`.
+    pub serve: Option<ServeStats>,
+}
+
+/// Raw aggregates for building a [`PerfReport`] without a single
+/// [`BatchResult`] in hand — the serve drain path accumulates these across
+/// every micro-batch of a server's lifetime.
+#[derive(Debug, Clone, Default)]
+pub struct ReportParts {
+    /// Total images executed.
+    pub batch: usize,
+    /// Summed engine wall time.
+    pub wall: Duration,
+    /// Summed simulated chip cycles.
+    pub cycles: u64,
+    /// Summed PE activity.
+    pub stats: PeStats,
+    /// Per-layer breakdown (merged; partitions `cycles` exactly).
+    pub layers: Vec<LayerObs>,
+    /// Per-PE activity (merged, array-flattened index order).
+    pub per_pe: Vec<PeStats>,
+    /// Per-worker accounting, sorted by worker index.
+    pub workers: Vec<WorkerSummary>,
+}
+
+impl ReportParts {
+    /// The parts of one batch result (what [`PerfReport::from_batch`]
+    /// feeds through [`PerfReport::from_parts`]).
+    pub fn of_batch(result: &BatchResult) -> Self {
+        ReportParts {
+            batch: result.images.len(),
+            wall: result.wall,
+            cycles: result.cycles,
+            stats: result.stats,
+            layers: result.per_layer(),
+            per_pe: result.per_pe(),
+            workers: result.worker_summaries(),
+        }
+    }
 }
 
 impl PerfReport {
@@ -117,26 +161,32 @@ impl PerfReport {
     /// energy prices each layer's activity delta at the default energy
     /// model, so Σ layer energy equals the batch PE energy.
     pub fn from_batch(exec: &BatchExecutor, result: &BatchResult) -> Self {
+        Self::from_parts(exec, ReportParts::of_batch(result))
+    }
+
+    /// Build a report from raw aggregates (the serve drain path merges
+    /// many micro-batches into one [`ReportParts`]).
+    pub fn from_parts(exec: &BatchExecutor, parts: ReportParts) -> Self {
         let model = EnergyModel::default();
-        let layers: Vec<LayerReport> = result
-            .per_layer()
+        let layers: Vec<LayerReport> = parts
+            .layers
             .iter()
             .map(|l| LayerReport {
                 name: l.name.clone(),
                 kind: l.kind.to_string(),
                 cycles: l.cycles,
-                cycle_share: if result.cycles == 0 {
+                cycle_share: if parts.cycles == 0 {
                     0.0
                 } else {
-                    l.cycles as f64 / result.cycles as f64
+                    l.cycles as f64 / parts.cycles as f64
                 },
                 energy_pj: model.energy(&l.stats.activity(l.cycles)).total_pj(),
                 utilization: l.utilization(),
                 neuron_evals: l.stats.neuron_evals,
             })
             .collect();
-        let pes: Vec<PeReport> = result
-            .per_pe()
+        let pes: Vec<PeReport> = parts
+            .per_pe
             .iter()
             .enumerate()
             .map(|(index, s)| PeReport {
@@ -146,28 +196,40 @@ impl PerfReport {
                 utilization: s.utilization(),
             })
             .collect();
+        let wall_s = parts.wall.as_secs_f64();
         let net = exec.network();
         PerfReport {
             network: net.name.clone(),
             dataset: net.dataset.clone(),
             engine: exec.engine().name().to_string(),
-            batch: result.images.len(),
-            wall_ms: result.wall.as_secs_f64() * 1e3,
-            images_per_sec: result.images_per_sec(),
-            total_cycles: result.cycles,
-            simulated_us_per_image: result.simulated_us_per_image(),
-            energy: result.energy(),
+            batch: parts.batch,
+            wall_ms: wall_s * 1e3,
+            images_per_sec: if wall_s > 0.0 { parts.batch as f64 / wall_s } else { 0.0 },
+            total_cycles: parts.cycles,
+            simulated_us_per_image: if parts.batch == 0 {
+                0.0
+            } else {
+                parts.cycles as f64 / parts.batch as f64 * crate::energy::calib::CLOCK_NS * 1e-3
+            },
+            energy: model.energy(&parts.stats.activity(parts.cycles)),
             layers,
             pes,
             cache: exec.cache_handle().snapshot(),
-            workers: result.worker_summaries(),
+            workers: parts.workers,
             metrics: None,
+            serve: None,
         }
     }
 
     /// Embed a registry snapshot under the report's `metrics` key.
     pub fn with_metrics(mut self, snapshot: MetricsSnapshot) -> Self {
         self.metrics = Some(snapshot);
+        self
+    }
+
+    /// Embed serving-layer accounting under the report's `serve` key.
+    pub fn with_serve(mut self, serve: ServeStats) -> Self {
+        self.serve = Some(serve);
         self
     }
 
@@ -258,6 +320,22 @@ impl PerfReport {
             ));
         }
         s.push_str("  ]");
+        if let Some(sv) = &self.serve {
+            s.push_str(&format!(
+                ",\n  \"serve\": {{\n    \"admitted\": {}, \"rejected\": {}, \"shed\": {}, \
+                 \"completed\": {}, \"failed\": {},\n    \"batch_occupancy\": {},\n    \
+                 \"latency_us\": {{\"queue\": {}, \"batch\": {}, \"total\": {}}}\n  }}",
+                sv.admitted,
+                sv.rejected,
+                sv.shed,
+                sv.completed,
+                sv.failed,
+                hist_json(&sv.occupancy),
+                hist_json(&sv.queue_us),
+                hist_json(&sv.batch_us),
+                hist_json(&sv.total_us)
+            ));
+        }
         if let Some(m) = &self.metrics {
             s.push_str(",\n  \"metrics\": ");
             s.push_str(&snapshot_json(m, "  "));
@@ -330,6 +408,19 @@ impl PerfReport {
                 w.busy_ns as f64 * 1e-6
             );
         }
+        if let Some(sv) = &self.serve {
+            println!(
+                "serve: {} admitted = {} completed + {} shed + {} failed ({} rejected at admission)",
+                sv.admitted, sv.completed, sv.shed, sv.failed, sv.rejected
+            );
+            println!(
+                "serve: occupancy mean {:.1}/batch (max {}), total latency p50 {} us / p99 {} us",
+                sv.occupancy.mean(),
+                sv.occupancy.max,
+                sv.total_us.quantile(0.5),
+                sv.total_us.quantile(0.99)
+            );
+        }
     }
 }
 
@@ -361,6 +452,22 @@ fn json_str(s: &str) -> String {
     out
 }
 
+/// Histogram summary object: exact count/sum/min/max plus bucket-estimated
+/// p50/p99 (shared by the `serve` section and embedded snapshots).
+fn hist_json(h: &HistogramSnapshot) -> String {
+    format!(
+        "{{\"count\": {}, \"sum\": {}, \"min\": {}, \"max\": {}, \"mean\": {}, \"p50\": {}, \
+         \"p99\": {}}}",
+        h.count,
+        h.sum,
+        h.min,
+        h.max,
+        json_f64(h.mean()),
+        h.quantile(0.5),
+        h.quantile(0.99)
+    )
+}
+
 /// JSON number: non-finite floats become `0` (JSON has no NaN/Infinity).
 fn json_f64(v: f64) -> String {
     if v.is_finite() {
@@ -387,19 +494,7 @@ fn snapshot_json(m: &MetricsSnapshot, indent: &str) -> String {
     s.push_str("},\n");
     s.push_str(&format!("{indent}  \"histograms\": {{"));
     for (i, (k, h)) in m.histograms.iter().enumerate() {
-        s.push_str(&format!(
-            "{}{}: {{\"count\": {}, \"sum\": {}, \"min\": {}, \"max\": {}, \"mean\": {}, \
-             \"p50\": {}, \"p99\": {}}}",
-            comma_lead(i),
-            json_str(k),
-            h.count,
-            h.sum,
-            h.min,
-            h.max,
-            json_f64(h.mean()),
-            h.quantile(0.5),
-            h.quantile(0.99)
-        ));
+        s.push_str(&format!("{}{}: {}", comma_lead(i), json_str(k), hist_json(h)));
     }
     s.push_str("}\n");
     s.push_str(&format!("{indent}}}"));

@@ -19,6 +19,8 @@
 //!   ([`scheduler`]), the YodaNN baseline ([`baseline`]), the top-level
 //!   architecture ([`arch`]), the tiling / network-walk coordinator and
 //!   the batched rayon-parallel inference engine ([`coordinator`]),
+//!   the TCP serving front-end with micro-batching, backpressure and
+//!   deadline shedding ([`serve`]),
 //!   energy model ([`energy`]),
 //!   BNN IR + model zoo ([`bnn`]), bit-true & analytic simulation engines
 //!   ([`sim`]), PJRT golden-model runtime ([`runtime`]) and paper-table
@@ -49,6 +51,7 @@ pub mod neuron;
 pub mod pe;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod sim;
 pub mod util;
 

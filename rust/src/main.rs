@@ -9,6 +9,9 @@
 //! tulip simulate [--network ...] [--arch tulip|yodann] [--pes N]
 //! tulip schedule <fanin> [threshold]           # RPO schedule stats
 //! tulip golden <artifact-stem>                 # load + run a golden model
+//! tulip serve [--addr H:P] [--model tiny|tiny8] [--max-batch N]
+//!             [--max-wait-us N] [--queue-cap N] [--policy block|reject]
+//!             [--perf-out PATH]                # TCP inference front-end
 //! ```
 
 use tulip::bnn::{alexnet, binarynet_cifar10, Network};
@@ -19,12 +22,15 @@ use tulip::scheduler::adder_tree;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: tulip <tables|table|simulate|schedule|golden> [args]\n\
+        "usage: tulip <tables|table|simulate|schedule|golden|serve> [args]\n\
          \n  tulip tables [--network binarynet|alexnet]\
          \n  tulip table <1|2|3|4|5|fig7> [--network ...]\
          \n  tulip simulate [--network ...] [--arch tulip|yodann] [--pes N]\
          \n  tulip schedule <fanin> [threshold]\
-         \n  tulip golden <artifact-stem>"
+         \n  tulip golden <artifact-stem>\
+         \n  tulip serve [--addr 127.0.0.1:7070] [--model tiny|tiny8] [--max-batch 64]\
+         \n              [--max-wait-us 2000] [--queue-cap 1024] [--policy block|reject]\
+         \n              [--perf-out PATH]"
     );
     std::process::exit(2);
 }
@@ -156,6 +162,114 @@ fn cmd_golden(args: &[String]) {
     }
 }
 
+/// SIGINT/SIGTERM → request a graceful drain. Installed with the raw
+/// libc `signal` syscall binding (no signal-handling crate in the vendored
+/// set); the handler only sets an atomic flag, which is async-signal-safe.
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" fn on_signal(_sig: i32) {
+        tulip::serve::request_drain();
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal as extern "C" fn(i32) as usize);
+        signal(SIGTERM, on_signal as extern "C" fn(i32) as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+fn cmd_serve(args: &[String]) {
+    use tulip::coordinator::BatchExecutor;
+    use tulip::serve::{demo_network, serve, BackpressurePolicy, ServeConfig};
+
+    let model = flag_value(args, "--model").unwrap_or_else(|| "tiny".to_string());
+    let (net, weights) = match demo_network(&model) {
+        Some(nw) => nw,
+        None => {
+            eprintln!("unknown model '{model}' (tiny|tiny8)");
+            std::process::exit(2);
+        }
+    };
+    let mut cfg = ServeConfig {
+        addr: flag_value(args, "--addr").unwrap_or_else(|| "127.0.0.1:7070".to_string()),
+        ..ServeConfig::default()
+    };
+    if let Some(v) = flag_value(args, "--max-batch").and_then(|v| v.parse().ok()) {
+        cfg.max_batch = v;
+    }
+    if let Some(v) = flag_value(args, "--max-wait-us").and_then(|v| v.parse().ok()) {
+        cfg.max_wait_us = v;
+    }
+    if let Some(v) = flag_value(args, "--queue-cap").and_then(|v| v.parse().ok()) {
+        cfg.queue_cap = v;
+    }
+    if let Some(p) = flag_value(args, "--policy") {
+        cfg.policy = match BackpressurePolicy::from_name(&p) {
+            Some(p) => p,
+            None => {
+                eprintln!("unknown policy '{p}' (block|reject)");
+                std::process::exit(2);
+            }
+        };
+    }
+    let perf_out = flag_value(args, "--perf-out");
+
+    install_signal_handlers();
+    let exec = match BatchExecutor::new(net, weights) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let handle = match serve(exec, cfg.clone()) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "tulip serve: {} on {} (max_batch {}, max_wait {} us, queue {} [{}])",
+        model,
+        handle.local_addr(),
+        cfg.max_batch,
+        cfg.max_wait_us,
+        cfg.queue_cap,
+        cfg.policy.name()
+    );
+    println!("protocol tulip.serve/v1 — one JSON request per line; ctrl-c or {{\"op\": \"drain\"}} to drain");
+    handle.wait_for_drain();
+    println!("draining: flushing queued requests…");
+    match handle.drain() {
+        Ok(report) => {
+            report.print_summary();
+            if let Some(path) = perf_out {
+                if let Err(e) = report.write_json(&path) {
+                    eprintln!("error: {e:#}");
+                    std::process::exit(1);
+                }
+                println!("perf report written to {path}");
+            }
+            let ok = report.serve.as_ref().is_some_and(|s| s.accounted());
+            if !ok {
+                eprintln!("accounting discrepancy: admitted != completed + shed + failed");
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
@@ -164,6 +278,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("schedule") => cmd_schedule(&args[1..]),
         Some("golden") => cmd_golden(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         _ => usage(),
     }
 }

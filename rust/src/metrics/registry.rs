@@ -81,6 +81,18 @@ impl Gauge {
         }
     }
 
+    /// Increment by one (occupancy-style gauges, e.g. `serve.queue_depth`).
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1.0);
+    }
+
+    /// Decrement by one.
+    #[inline]
+    pub fn dec(&self) {
+        self.add(-1.0);
+    }
+
     /// Current value.
     #[inline]
     pub fn get(&self) -> f64 {
@@ -333,8 +345,12 @@ mod tests {
         g.set(2.5);
         g.add(1.25);
         assert_eq!(g.get(), 3.75);
+        g.inc();
+        g.dec();
+        g.dec();
+        assert_eq!(g.get(), 2.75);
         // Handles alias the same storage.
-        assert_eq!(reg.gauge("t.level").get(), 3.75);
+        assert_eq!(reg.gauge("t.level").get(), 2.75);
     }
 
     #[test]

@@ -11,10 +11,12 @@
 //! (`adder_tree::plan_placements`), which is by far the most expensive
 //! per-layer setup cost.
 //!
-//! Reads take a shared `RwLock` guard (the steady state is read-only);
-//! misses build outside any lock and insert with last-writer-loses
-//! semantics so every consumer ends up broadcasting the same `Arc`, exactly
-//! like the hardware broadcasts one control stream.
+//! Reads take a shared `RwLock` guard (the steady state is read-only).
+//! Misses are **single-flight**: each descriptor owns a `OnceLock` cell, so
+//! when N threads race on a cold key exactly one runs the planner (one
+//! miss) while the rest block on the cell and are served the finished
+//! program (N−1 hits) — planning happens once per key per process, period,
+//! exactly like the hardware broadcasts one control stream.
 
 use super::seqgen::{CachedProgram, OpDesc};
 use super::{adder_tree, ops, Loc, Schedule};
@@ -28,11 +30,11 @@ use std::time::Instant;
 /// what perf reports embed as their `cache` section.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
-    /// Lookups served from the cache.
+    /// Lookups served from the cache — including lookups that arrived
+    /// while another thread was building the same key and waited for it.
     pub hits: u64,
-    /// Lookups that had to build a program. Under concurrent misses of the
-    /// same descriptor both builders count a miss; the cached program is
-    /// still unique.
+    /// Lookups that ran the planner. Builds are single-flight, so N
+    /// threads racing on one cold key record exactly **one** miss.
     pub misses: u64,
     /// Distinct programs currently cached.
     pub entries: usize,
@@ -98,7 +100,10 @@ impl Default for ArchParams {
 #[derive(Debug, Default)]
 pub struct ProgramCache {
     params: ArchParams,
-    map: RwLock<HashMap<OpDesc, Arc<CachedProgram>>>,
+    /// One cell per descriptor: the cell is created under the write lock
+    /// (cheap), but the program inside is built via `OnceLock::get_or_init`
+    /// *outside* any map lock — the single-flight point.
+    map: RwLock<HashMap<OpDesc, Arc<OnceLock<Arc<CachedProgram>>>>>,
     hits: AtomicU64,
     misses: AtomicU64,
     planning_ns: AtomicU64,
@@ -156,22 +161,39 @@ impl ProgramCache {
     /// assert!(s.planning_ns > 0 && s.hit_rate() > 0.0);
     /// ```
     pub fn program(&self, desc: &OpDesc) -> Arc<CachedProgram> {
-        if let Some(p) = self.map.read().expect("program cache poisoned").get(desc) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(p);
+        // Fast path: initialized cell under a shared read guard.
+        if let Some(cell) = self.map.read().expect("program cache poisoned").get(desc) {
+            if let Some(p) = cell.get() {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(p);
+            }
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        // Build outside any lock: generation may recurse into `program`
-        // (a threshold node shares its sum-tree plan) and can take
-        // milliseconds for large fan-ins.
-        let _span = crate::metrics::span("scheduler.plan");
-        let t0 = Instant::now();
-        let built = Arc::new(self.build(desc));
-        self.planning_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        let mut map = self.map.write().expect("program cache poisoned");
-        // A racing thread may have inserted meanwhile; keep the first entry
-        // so every consumer broadcasts the same `Arc`.
-        Arc::clone(&*map.entry(desc.clone()).or_insert(built))
+        // Create (or fetch) the key's cell, then drop the map lock before
+        // building: generation may recurse into `program` (a threshold
+        // node shares its sum-tree plan — a *different* key, so the
+        // recursion cannot self-deadlock) and can take milliseconds for
+        // large fan-ins.
+        let cell = {
+            let mut map = self.map.write().expect("program cache poisoned");
+            Arc::clone(map.entry(desc.clone()).or_default())
+        };
+        let mut built_here = false;
+        let p = cell.get_or_init(|| {
+            built_here = true;
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            let _span = crate::metrics::span("scheduler.plan");
+            let t0 = Instant::now();
+            let built = Arc::new(self.build(desc));
+            self.planning_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            built
+        });
+        if !built_here {
+            // Either the cell was initialized between our read and write
+            // guards, or we blocked while the in-flight builder finished;
+            // both are served from the cache.
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        Arc::clone(p)
     }
 
     /// Cycle count for an op (cached; the analytic model's entry point).
@@ -179,16 +201,22 @@ impl ProgramCache {
         self.program(desc).schedule.cycles() as u64
     }
 
-    /// (cache hits, misses) since construction. Under concurrent misses of
-    /// the same descriptor both builders count a miss; the cached program
-    /// is still unique.
+    /// (cache hits, misses) since construction. Builds are single-flight,
+    /// so concurrent lookups of one cold key record exactly one miss; the
+    /// waiters count as hits.
     pub fn stats(&self) -> (u64, u64) {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
-    /// Number of distinct programs cached.
+    /// Number of distinct programs cached (cells still being built by an
+    /// in-flight miss don't count until they hold a program).
     pub fn len(&self) -> usize {
-        self.map.read().expect("program cache poisoned").len()
+        self.map
+            .read()
+            .expect("program cache poisoned")
+            .values()
+            .filter(|cell| cell.get().is_some())
+            .count()
     }
 
     /// Whether no program has been cached yet.

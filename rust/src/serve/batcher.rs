@@ -1,0 +1,255 @@
+//! Dynamic micro-batching: the loop that turns single-image requests into
+//! full lane words.
+//!
+//! The bit-sliced engine advances 64 lanes per broadcast control word, so
+//! the efficiency of the whole server reduces to one question: *how full
+//! are the words it executes?* The [`Batcher`] dequeues micro-batches from
+//! the admission queue (flushing on `max_batch` or `max_wait`, whichever
+//! first), sheds expired requests, runs the survivors through the shared
+//! [`BatchExecutor`], and replies per request. Batch occupancy is recorded
+//! in the `serve.batch_occupancy` histogram — the key efficiency metric —
+//! and per-request latency splits into `serve.latency_us.{queue,batch,total}`.
+
+use super::queue::{BoundedQueue, ServeRequest};
+use super::shed::Shedder;
+use crate::coordinator::{BatchExecutor, BatchRequest, BatchResult, WorkerSummary};
+use crate::metrics::{Counter, Histogram, MetricsRegistry};
+use crate::pe::PeStats;
+use crate::serve::protocol::ServeResponse;
+use crate::sim::cycle::LayerObs;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Engine-side aggregates accumulated across every micro-batch a server
+/// executed — the raw material for the final drain-time `PerfReport`.
+#[derive(Debug, Clone, Default)]
+pub struct ServeAggregate {
+    /// Micro-batches executed.
+    pub batches: u64,
+    /// Images classified (== `serve.completed`).
+    pub images: u64,
+    /// Simulated chip cycles summed over all batches.
+    pub cycles: u64,
+    /// PE activity summed over all batches.
+    pub stats: PeStats,
+    /// Per-layer breakdown merged across all batches.
+    pub layers: Vec<LayerObs>,
+    /// Per-PE activity merged across all batches.
+    pub per_pe: Vec<PeStats>,
+    /// Summed engine wall time (the `host` block of the report).
+    pub busy: Duration,
+    /// Per-worker accounting merged across all batches.
+    pub workers: BTreeMap<usize, WorkerSummary>,
+}
+
+impl ServeAggregate {
+    /// Fold one micro-batch's result into the running totals.
+    pub fn merge(&mut self, result: &BatchResult) {
+        self.batches += 1;
+        self.images += result.images.len() as u64;
+        self.cycles += result.cycles;
+        self.stats.merge(&result.stats);
+        let layers = result.per_layer();
+        if self.layers.is_empty() {
+            self.layers = layers;
+        } else {
+            for (m, l) in self.layers.iter_mut().zip(&layers) {
+                m.merge(l);
+            }
+        }
+        let per_pe = result.per_pe();
+        if self.per_pe.is_empty() {
+            self.per_pe = per_pe;
+        } else {
+            for (m, s) in self.per_pe.iter_mut().zip(&per_pe) {
+                m.merge(s);
+            }
+        }
+        self.busy += result.wall;
+        for w in result.worker_summaries() {
+            let slot = self.workers.entry(w.worker).or_default();
+            slot.worker = w.worker;
+            slot.images += w.images;
+            slot.busy_ns += w.busy_ns;
+        }
+    }
+
+    /// Per-worker summaries sorted by worker index.
+    pub fn worker_summaries(&self) -> Vec<WorkerSummary> {
+        self.workers.values().copied().collect()
+    }
+
+    /// Mean images per executed micro-batch (the realized occupancy).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.images as f64 / self.batches as f64
+        }
+    }
+}
+
+/// The micro-batching loop (see [module docs](self)).
+pub struct Batcher {
+    exec: Arc<BatchExecutor>,
+    queue: Arc<BoundedQueue>,
+    registry: Arc<MetricsRegistry>,
+    max_batch: usize,
+    max_wait: Duration,
+    shedder: Shedder,
+    completed: Counter,
+    failed: Counter,
+    occupancy: Histogram,
+    queue_us: Histogram,
+    batch_us: Histogram,
+    total_us: Histogram,
+}
+
+impl Batcher {
+    /// Build a batcher over a shared executor and admission queue,
+    /// registering its instruments in `registry`.
+    pub fn new(
+        exec: Arc<BatchExecutor>,
+        queue: Arc<BoundedQueue>,
+        registry: Arc<MetricsRegistry>,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> Self {
+        assert!(max_batch > 0, "max_batch must be positive");
+        Batcher {
+            shedder: Shedder::new(&registry),
+            completed: registry.counter("serve.completed"),
+            failed: registry.counter("serve.failed"),
+            occupancy: registry.histogram("serve.batch_occupancy"),
+            queue_us: registry.histogram("serve.latency_us.queue"),
+            batch_us: registry.histogram("serve.latency_us.batch"),
+            total_us: registry.histogram("serve.latency_us.total"),
+            exec,
+            queue,
+            registry,
+            max_batch,
+            max_wait,
+        }
+    }
+
+    /// Run until the queue is closed *and* drained, then return the
+    /// engine-side aggregates. Every dequeued request is answered exactly
+    /// once: shed, completed, or failed.
+    pub fn run(&self) -> ServeAggregate {
+        let mut agg = ServeAggregate::default();
+        loop {
+            let batch = self.queue.next_batch(self.max_batch, self.max_wait);
+            if batch.is_empty() {
+                return agg; // closed and fully drained
+            }
+            let dequeued = Instant::now();
+            let live = self.shedder.shed_expired(batch, dequeued);
+            if live.is_empty() {
+                continue;
+            }
+            self.occupancy.observe(live.len() as u64);
+            let req = BatchRequest::new(live.iter().map(|r| r.image.clone()).collect());
+            match self.exec.run(&req) {
+                Ok(result) => {
+                    self.exec.publish_to(&self.registry, &result);
+                    let batch_us = result.wall.as_micros() as u64;
+                    self.batch_us.observe(batch_us);
+                    let done = Instant::now();
+                    for (r, img) in live.iter().zip(&result.images) {
+                        let queue_us = (dequeued - r.enqueued).as_micros() as u64;
+                        let total_us = (done - r.enqueued).as_micros() as u64;
+                        self.queue_us.observe(queue_us);
+                        self.total_us.observe(total_us);
+                        self.completed.inc();
+                        let resp = ServeResponse::ok(
+                            r.id,
+                            img.class,
+                            img.scores.clone(),
+                            live.len(),
+                            queue_us,
+                            batch_us,
+                            total_us,
+                        );
+                        let _ = r.resp.send(resp.to_json_line());
+                    }
+                    agg.merge(&result);
+                }
+                Err(e) => {
+                    // Engine failure: every request in the batch is
+                    // answered (and counted) as failed — never dropped.
+                    let msg = format!("execution failed: {e:#}");
+                    for r in &live {
+                        self.failed.inc();
+                        let _ = r.resp.send(ServeResponse::error(r.id, &msg).to_json_line());
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::tensor::{BinWeights, BitTensor};
+    use crate::bnn::tiny_bnn;
+    use crate::serve::protocol::Status;
+    use crate::serve::queue::BackpressurePolicy;
+    use std::sync::mpsc::channel;
+
+    fn tiny_exec() -> Arc<BatchExecutor> {
+        let net = tiny_bnn(8, 4, 3);
+        let weights: Vec<BinWeights> = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 1000 + i as u64))
+            .collect();
+        Arc::new(BatchExecutor::new(net, weights).unwrap().with_array(1, 4))
+    }
+
+    #[test]
+    fn batcher_drains_replies_and_aggregates() {
+        let exec = tiny_exec();
+        let reg = Arc::new(MetricsRegistry::new());
+        let queue = Arc::new(BoundedQueue::new(8, BackpressurePolicy::Block, &reg));
+        let batcher = Batcher::new(
+            Arc::clone(&exec),
+            Arc::clone(&queue),
+            Arc::clone(&reg),
+            4,
+            Duration::from_millis(1),
+        );
+        let mut rxs = Vec::new();
+        for i in 0..3u64 {
+            let (tx, rx) = channel();
+            queue
+                .push(ServeRequest {
+                    id: i,
+                    image: BitTensor::random(8, 8, 4, 100 + i),
+                    deadline: None,
+                    enqueued: Instant::now(),
+                    resp: tx,
+                })
+                .unwrap();
+            rxs.push(rx);
+        }
+        queue.close();
+        let agg = batcher.run();
+        assert_eq!(agg.images, 3);
+        assert!(agg.batches >= 1 && agg.cycles > 0);
+        assert_eq!(agg.mean_occupancy(), 3.0 / agg.batches as f64);
+        assert_eq!(reg.counter("serve.completed").get(), 3);
+        assert_eq!(reg.histogram("serve.batch_occupancy").snapshot().count, agg.batches);
+        for (i, rx) in rxs.iter().enumerate() {
+            let resp = ServeResponse::parse(&rx.try_recv().expect("reply sent")).unwrap();
+            assert_eq!(resp.id, i as u64);
+            assert_eq!(resp.status, Status::Ok);
+            // Bit-identical to a direct single-image run.
+            let direct = exec.run_one(i, &BitTensor::random(8, 8, 4, 100 + i as u64)).unwrap();
+            assert_eq!(resp.scores, direct.scores);
+            assert_eq!(resp.class, Some(direct.class));
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! `serve` — the production inference front-end.
+//!
+//! Everything below `serve` exists to keep the bit-sliced engine's 64-lane
+//! control words full while staying honest about what happens to every
+//! request. The subsystem is a small pipeline:
+//!
+//! 1. [`protocol`] — the `tulip.serve/v1` JSON-lines wire format (std-only
+//!    parser, packed-bits codec, typed requests/responses);
+//! 2. [`queue`] — a bounded admission queue with configurable backpressure
+//!    ([`BackpressurePolicy::Block`] vs [`BackpressurePolicy::Reject`]);
+//! 3. [`shed`] — deadline enforcement at dequeue: expired requests are
+//!    answered `shed` and counted, never executed and never dropped;
+//! 4. [`batcher`] — dynamic micro-batching (flush on `max_batch` or
+//!    `max_wait_us`) over the shared
+//!    [`BatchExecutor`](crate::coordinator::BatchExecutor);
+//! 5. [`server`] — the TCP accept loop, per-connection reader/writer
+//!    threads, and graceful drain with a final
+//!    [`PerfReport`](crate::coordinator::PerfReport).
+//!
+//! The accounting invariant the whole design is built around:
+//! **`admitted == completed + shed + failed`** at drain time — every
+//! admitted request is answered exactly once, and the final report proves
+//! it ([`ServeStats::accounted`]).
+
+pub mod batcher;
+pub mod protocol;
+pub mod queue;
+pub mod server;
+pub mod shed;
+
+pub use batcher::{Batcher, ServeAggregate};
+pub use protocol::{pack_bits, unpack_bits, ServeResponse, Status};
+pub use queue::{BackpressurePolicy, BoundedQueue, ServeRequest};
+pub use server::{request_drain, serve, ServeHandle};
+pub use shed::Shedder;
+
+use crate::bnn::tensor::BinWeights;
+use crate::bnn::{tiny_bnn, Network};
+use crate::metrics::{HistogramSnapshot, MetricsRegistry};
+
+/// Server configuration (CLI flags of `tulip serve` map 1:1 onto these).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks a free port (tests do this).
+    pub addr: String,
+    /// Micro-batch flush size. The default, 64, is one bit-sliced lane
+    /// word — the point where the SWAR engine's occupancy saturates.
+    pub max_batch: usize,
+    /// Maximum time a dequeued micro-batch waits to fill, microseconds.
+    pub max_wait_us: u64,
+    /// Admission queue capacity.
+    pub queue_cap: usize,
+    /// What to do with new requests when the queue is full.
+    pub policy: BackpressurePolicy,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            max_batch: 64,
+            max_wait_us: 2_000,
+            queue_cap: 1_024,
+            policy: BackpressurePolicy::default(),
+        }
+    }
+}
+
+/// Frozen serving-layer accounting: the counters and latency/occupancy
+/// histograms a draining server embeds in its final
+/// [`PerfReport`](crate::coordinator::PerfReport).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeStats {
+    /// Requests admitted to the queue.
+    pub admitted: u64,
+    /// Requests refused at admission (queue full under `Reject`, or
+    /// draining).
+    pub rejected: u64,
+    /// Admitted requests shed at dequeue because their deadline expired.
+    pub shed: u64,
+    /// Admitted requests classified and answered `ok`.
+    pub completed: u64,
+    /// Admitted requests answered `error` because the engine failed.
+    pub failed: u64,
+    /// `serve.batch_occupancy` — images per executed micro-batch.
+    pub occupancy: HistogramSnapshot,
+    /// `serve.latency_us.queue` — admission-to-dequeue time.
+    pub queue_us: HistogramSnapshot,
+    /// `serve.latency_us.batch` — engine wall time per micro-batch.
+    pub batch_us: HistogramSnapshot,
+    /// `serve.latency_us.total` — admission-to-response time.
+    pub total_us: HistogramSnapshot,
+}
+
+impl ServeStats {
+    /// Snapshot the serve instruments out of a registry.
+    pub fn from_registry(reg: &MetricsRegistry) -> Self {
+        ServeStats {
+            admitted: reg.counter("serve.admitted").get(),
+            rejected: reg.counter("serve.rejected").get(),
+            shed: reg.counter("serve.shed").get(),
+            completed: reg.counter("serve.completed").get(),
+            failed: reg.counter("serve.failed").get(),
+            occupancy: reg.histogram("serve.batch_occupancy").snapshot(),
+            queue_us: reg.histogram("serve.latency_us.queue").snapshot(),
+            batch_us: reg.histogram("serve.latency_us.batch").snapshot(),
+            total_us: reg.histogram("serve.latency_us.total").snapshot(),
+        }
+    }
+
+    /// The drain invariant: every admitted request was answered exactly
+    /// once — `admitted == completed + shed + failed`. (Rejected requests
+    /// were never admitted, so they are not part of the sum.)
+    pub fn accounted(&self) -> bool {
+        self.admitted == self.completed + self.shed + self.failed
+    }
+
+    /// One-line JSON (the reply to the `{"op": "stats"}` control message).
+    pub fn to_json_line(&self) -> String {
+        format!(
+            "{{\"op\": \"stats\", \"admitted\": {}, \"rejected\": {}, \"shed\": {}, \
+             \"completed\": {}, \"failed\": {}, \"occupancy_mean\": {:.3}, \
+             \"queue_p99_us\": {}, \"total_p99_us\": {}}}",
+            self.admitted,
+            self.rejected,
+            self.shed,
+            self.completed,
+            self.failed,
+            self.occupancy.mean(),
+            self.queue_us.quantile(0.99),
+            self.total_us.quantile(0.99)
+        )
+    }
+}
+
+/// The demo networks `tulip serve`, `load_client` and the integration
+/// tests agree on, keyed by name (weights are seeded deterministically, so
+/// client and server can be built independently and still match bit for
+/// bit): `"tiny"` → `tiny_bnn(16, 8, 4)` (16×16×8 input), `"tiny8"` →
+/// `tiny_bnn(8, 4, 3)` (8×8×4 input).
+pub fn demo_network(name: &str) -> Option<(Network, Vec<BinWeights>)> {
+    let net = match name {
+        "tiny" => tiny_bnn(16, 8, 4),
+        "tiny8" => tiny_bnn(8, 4, 3),
+        _ => return None,
+    };
+    let weights: Vec<BinWeights> = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 1000 + i as u64))
+        .collect();
+    Some((net, weights))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_networks_resolve() {
+        let (net, w) = demo_network("tiny8").unwrap();
+        assert_eq!(net.layers.len(), w.len());
+        assert_eq!((net.layers[0].y1, net.layers[0].x1, net.layers[0].z1), (8, 8, 4));
+        assert!(demo_network("tiny").is_some());
+        assert!(demo_network("nope").is_none());
+    }
+
+    #[test]
+    fn stats_accounting_invariant() {
+        let reg = MetricsRegistry::new();
+        reg.counter("serve.admitted").add(10);
+        reg.counter("serve.completed").add(7);
+        reg.counter("serve.shed").add(2);
+        reg.counter("serve.failed").add(1);
+        reg.counter("serve.rejected").add(5);
+        let s = ServeStats::from_registry(&reg);
+        assert!(s.accounted());
+        assert!(s.to_json_line().contains("\"admitted\": 10"));
+        let reg = MetricsRegistry::new();
+        reg.counter("serve.admitted").add(3);
+        assert!(!ServeStats::from_registry(&reg).accounted());
+    }
+}

@@ -1,0 +1,676 @@
+//! `tulip.serve/v1` — the std-only JSON-lines wire protocol.
+//!
+//! One request or response per line. The vendored dependency set has no
+//! serde, so this module carries a minimal hand-rolled JSON parser (the
+//! mirror of the hand-rolled encoder in `coordinator::perf_report`) plus
+//! the typed request/response shapes and the packed-bits codec.
+//!
+//! Request (`{"op": …}` lines are control messages instead):
+//!
+//! ```json
+//! {"id": 7, "bits": "a3f0…", "h": 16, "w": 16, "c": 8, "deadline_ms": 50}
+//! ```
+//!
+//! * `id` — client-chosen, echoed on the response;
+//! * `bits` — the HWC activation bits, packed LSB-first into bytes and
+//!   hex-encoded (see [`pack_bits`]);
+//! * `h`/`w`/`c` — optional declared shape, validated against the served
+//!   network;
+//! * `deadline_ms` — optional: if the request is still queued this many
+//!   milliseconds after receipt it is **shed** (never executed), and the
+//!   response carries `"status": "shed"`.
+//!
+//! Response: `{"id": 7, "status": "ok", "class": 2, "scores": [...],
+//! "batch_n": 64, "lat_us": {"queue": …, "batch": …, "total": …}}`, or
+//! `status` ∈ `shed` / `rejected` (429-style admission failure) / `error`
+//! with an `"error"` message.
+
+use crate::bnn::tensor::BitTensor;
+use anyhow::{bail, ensure, Result};
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any JSON number, held as `f64`.
+    Num(f64),
+    /// A string.
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object, fields in source order.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup (`None` for non-objects and missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The value as a non-negative integer, if it is one exactly.
+    pub fn as_u64(&self) -> Option<u64> {
+        match *self {
+            Json::Num(v) if v >= 0.0 && v.fract() == 0.0 && v <= u64::MAX as f64 => Some(v as u64),
+            _ => None,
+        }
+    }
+
+    /// The value as a signed integer, if it is one exactly.
+    pub fn as_i64(&self) -> Option<i64> {
+        match *self {
+            Json::Num(v) if v.fract() == 0.0 && v.abs() <= i64::MAX as f64 => Some(v as i64),
+            _ => None,
+        }
+    }
+
+    /// The value as a string slice, if it is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one JSON document (one request or response line).
+pub fn parse_json(s: &str) -> Result<Json> {
+    let mut p = Parser { b: s.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    ensure!(p.i == p.b.len(), "trailing bytes after JSON document at offset {}", p.i);
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        ensure!(
+            self.peek() == Some(c),
+            "expected '{}' at offset {}, found {:?}",
+            c as char,
+            self.i,
+            self.peek().map(|b| b as char)
+        );
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        ensure!(
+            self.b[self.i..].starts_with(word.as_bytes()),
+            "malformed literal at offset {}",
+            self.i
+        );
+        self.i += word.len();
+        Ok(v)
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => bail!("unexpected byte '{}' at offset {}", c as char, self.i),
+            None => bail!("unexpected end of input"),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            fields.push((key, self.value()?));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => bail!("expected ',' or '}}' at offset {}", self.i),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => bail!("expected ',' or ']' at offset {}", self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string"),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let cp = self.hex4()?;
+                            // Surrogate pair: a high surrogate must be
+                            // followed by an escaped low surrogate.
+                            let c = if (0xD800..0xDC00).contains(&cp) {
+                                ensure!(
+                                    self.b[self.i + 1..].starts_with(br"\u"),
+                                    "lone high surrogate at offset {}",
+                                    self.i
+                                );
+                                self.i += 2;
+                                let lo = self.hex4()?;
+                                ensure!((0xDC00..0xE000).contains(&lo), "invalid low surrogate");
+                                0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                cp
+                            };
+                            out.push(
+                                char::from_u32(c)
+                                    .ok_or_else(|| anyhow::anyhow!("invalid codepoint {c:#x}"))?,
+                            );
+                        }
+                        _ => bail!("invalid escape at offset {}", self.i),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Consume one UTF-8 character (the input is a &str, so
+                    // boundaries are valid by construction).
+                    let rest = std::str::from_utf8(&self.b[self.i..]).expect("input was a str");
+                    let c = rest.chars().next().expect("peeked non-empty");
+                    ensure!((c as u32) >= 0x20, "unescaped control character in string");
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    /// Four hex digits after `\u`, cursor left on the last digit.
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            self.i += 1;
+            let d = match self.peek() {
+                Some(c @ b'0'..=b'9') => (c - b'0') as u32,
+                Some(c @ b'a'..=b'f') => (c - b'a' + 10) as u32,
+                Some(c @ b'A'..=b'F') => (c - b'A' + 10) as u32,
+                _ => bail!("invalid \\u escape at offset {}", self.i),
+            };
+            v = v << 4 | d;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E') | Some(b'0'..=b'9')
+        ) {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).expect("ascii digits");
+        match text.parse::<f64>() {
+            Ok(v) if v.is_finite() => Ok(Json::Num(v)),
+            _ => bail!("malformed number '{text}' at offset {start}"),
+        }
+    }
+}
+
+/// JSON string literal with escaping (the encoder half of the protocol).
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Pack HWC-ordered activation bits for the wire: bit `k` of the tensor is
+/// bit `k % 8` (LSB first) of byte `k / 8`; bytes are lowercase hex.
+pub fn pack_bits(bits: &[bool]) -> String {
+    let mut out = String::with_capacity(bits.len().div_ceil(8) * 2);
+    for chunk in bits.chunks(8) {
+        let mut byte = 0u8;
+        for (i, &b) in chunk.iter().enumerate() {
+            byte |= (b as u8) << i;
+        }
+        out.push_str(&format!("{byte:02x}"));
+    }
+    out
+}
+
+/// Decode exactly `n` activation bits from a hex payload (inverse of
+/// [`pack_bits`]; spare high bits of the last byte are ignored).
+pub fn unpack_bits(hex: &str, n: usize) -> Result<Vec<bool>> {
+    let bytes = n.div_ceil(8);
+    ensure!(
+        hex.len() == bytes * 2,
+        "bits payload is {} hex chars, expected {} for {} bits",
+        hex.len(),
+        bytes * 2,
+        n
+    );
+    let nibble = |c: u8| -> Result<u8> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => bail!("invalid hex byte '{}'", c as char),
+        }
+    };
+    let hb = hex.as_bytes();
+    let mut decoded = Vec::with_capacity(bytes);
+    for k in 0..bytes {
+        decoded.push(nibble(hb[2 * k])? << 4 | nibble(hb[2 * k + 1])?);
+    }
+    Ok((0..n).map(|k| decoded[k / 8] >> (k % 8) & 1 != 0).collect())
+}
+
+/// A decoded client line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientMsg {
+    /// One single-image inference request.
+    Infer(InferRequest),
+    /// `{"op": "stats"}` — snapshot the server's serve counters.
+    Stats,
+    /// `{"op": "drain"}` — graceful shutdown: stop accepting, flush the
+    /// queue, emit the final perf report and exit.
+    Drain,
+}
+
+/// A single-image inference request (see the [module docs](self) for the
+/// wire form).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferRequest {
+    /// Client-chosen request id, echoed on the response.
+    pub id: u64,
+    /// Unpacked HWC activation bits (already validated to the network's
+    /// input geometry).
+    pub bits: Vec<bool>,
+    /// Optional deadline in milliseconds from receipt.
+    pub deadline_ms: Option<u64>,
+}
+
+impl InferRequest {
+    /// The request's image as a tensor of the given geometry.
+    pub fn image(self, h: usize, w: usize, c: usize) -> BitTensor {
+        debug_assert_eq!(self.bits.len(), h * w * c);
+        BitTensor { h, w, c, data: self.bits }
+    }
+}
+
+/// A protocol-level failure: the id to blame it on (0 when the line never
+/// yielded one) and the message for the `error` response.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtocolError {
+    /// Best-effort request id extracted from the offending line.
+    pub id: u64,
+    /// Human-readable cause.
+    pub msg: String,
+}
+
+impl std::fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request {}: {}", self.id, self.msg)
+    }
+}
+
+/// Parse one client line against the served network's input geometry.
+/// Declared `h`/`w`/`c` fields, when present, must match; the `bits`
+/// payload must carry exactly `h·w·c` bits.
+pub fn parse_client_msg(
+    line: &str,
+    input: (usize, usize, usize),
+) -> std::result::Result<ClientMsg, ProtocolError> {
+    let fail = |id: u64, msg: String| ProtocolError { id, msg };
+    let v = parse_json(line).map_err(|e| fail(0, format!("{e:#}")))?;
+    if let Some(op) = v.get("op").and_then(Json::as_str) {
+        return match op {
+            "stats" => Ok(ClientMsg::Stats),
+            "drain" => Ok(ClientMsg::Drain),
+            other => Err(fail(0, format!("unknown op '{other}' (stats|drain)"))),
+        };
+    }
+    let id = v
+        .get("id")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| fail(0, "missing numeric 'id'".into()))?;
+    let (h, w, c) = input;
+    for (key, expect) in [("h", h), ("w", w), ("c", c)] {
+        if let Some(got) = v.get(key).and_then(Json::as_u64) {
+            if got != expect as u64 {
+                return Err(fail(
+                    id,
+                    format!("shape mismatch: request {key}={got}, network expects {expect}"),
+                ));
+            }
+        }
+    }
+    let hex = v
+        .get("bits")
+        .and_then(Json::as_str)
+        .ok_or_else(|| fail(id, "missing string 'bits'".into()))?;
+    let bits = unpack_bits(hex, h * w * c).map_err(|e| fail(id, format!("{e:#}")))?;
+    let deadline_ms = match v.get("deadline_ms") {
+        None | Some(Json::Null) => None,
+        Some(d) => Some(
+            d.as_u64()
+                .ok_or_else(|| fail(id, "'deadline_ms' must be a non-negative integer".into()))?,
+        ),
+    };
+    Ok(ClientMsg::Infer(InferRequest { id, bits, deadline_ms }))
+}
+
+/// Response status over the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Classified; `class`/`scores`/`lat_us` are present.
+    Ok,
+    /// Deadline expired while queued — shed before execution.
+    Shed,
+    /// Refused at admission (queue full under `Reject`, or draining) —
+    /// the 429 of this protocol.
+    Rejected,
+    /// Malformed request or internal execution failure.
+    Error,
+}
+
+impl Status {
+    /// Wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Status::Ok => "ok",
+            Status::Shed => "shed",
+            Status::Rejected => "rejected",
+            Status::Error => "error",
+        }
+    }
+
+    /// Parse a wire name.
+    pub fn from_name(s: &str) -> Option<Status> {
+        match s {
+            "ok" => Some(Status::Ok),
+            "shed" => Some(Status::Shed),
+            "rejected" => Some(Status::Rejected),
+            "error" => Some(Status::Error),
+            _ => None,
+        }
+    }
+}
+
+/// One response line (the server's half of `tulip.serve/v1`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeResponse {
+    /// Echo of the request id.
+    pub id: u64,
+    /// Outcome.
+    pub status: Status,
+    /// Predicted class (`ok` only).
+    pub class: Option<usize>,
+    /// Raw final-layer scores (`ok` only).
+    pub scores: Vec<i64>,
+    /// Occupancy of the micro-batch this request ran in (`ok` only).
+    pub batch_n: usize,
+    /// Time spent queued before dequeue, µs (`ok` only).
+    pub queue_us: u64,
+    /// Execution wall time of the micro-batch, µs (`ok` only).
+    pub batch_us: u64,
+    /// Receipt-to-response time, µs (`ok` only).
+    pub total_us: u64,
+    /// Failure cause (`shed`/`rejected`/`error`).
+    pub error: Option<String>,
+}
+
+impl ServeResponse {
+    fn base(id: u64, status: Status) -> Self {
+        ServeResponse {
+            id,
+            status,
+            class: None,
+            scores: Vec::new(),
+            batch_n: 0,
+            queue_us: 0,
+            batch_us: 0,
+            total_us: 0,
+            error: None,
+        }
+    }
+
+    /// A successful classification.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ok(
+        id: u64,
+        class: usize,
+        scores: Vec<i64>,
+        batch_n: usize,
+        queue_us: u64,
+        batch_us: u64,
+        total_us: u64,
+    ) -> Self {
+        ServeResponse {
+            class: Some(class),
+            scores,
+            batch_n,
+            queue_us,
+            batch_us,
+            total_us,
+            ..Self::base(id, Status::Ok)
+        }
+    }
+
+    /// A deadline shed (counted, never executed).
+    pub fn shed(id: u64) -> Self {
+        ServeResponse {
+            error: Some("deadline expired before execution".into()),
+            ..Self::base(id, Status::Shed)
+        }
+    }
+
+    /// An admission rejection (queue full / draining).
+    pub fn rejected(id: u64, why: &str) -> Self {
+        ServeResponse { error: Some(why.to_string()), ..Self::base(id, Status::Rejected) }
+    }
+
+    /// A request-level error.
+    pub fn error(id: u64, why: &str) -> Self {
+        ServeResponse { error: Some(why.to_string()), ..Self::base(id, Status::Error) }
+    }
+
+    /// Encode as one JSON line (no trailing newline).
+    pub fn to_json_line(&self) -> String {
+        let mut s = format!("{{\"id\": {}, \"status\": {}", self.id, json_str(self.status.name()));
+        if let Some(class) = self.class {
+            let scores: Vec<String> = self.scores.iter().map(|v| v.to_string()).collect();
+            s.push_str(&format!(
+                ", \"class\": {class}, \"scores\": [{}], \"batch_n\": {}, \
+                 \"lat_us\": {{\"queue\": {}, \"batch\": {}, \"total\": {}}}",
+                scores.join(", "),
+                self.batch_n,
+                self.queue_us,
+                self.batch_us,
+                self.total_us
+            ));
+        }
+        if let Some(e) = &self.error {
+            s.push_str(&format!(", \"error\": {}", json_str(e)));
+        }
+        s.push('}');
+        s
+    }
+
+    /// Decode one response line (used by clients and tests).
+    pub fn parse(line: &str) -> Result<ServeResponse> {
+        let v = parse_json(line)?;
+        let id = v.get("id").and_then(Json::as_u64).unwrap_or(0);
+        let status = v
+            .get("status")
+            .and_then(Json::as_str)
+            .and_then(Status::from_name)
+            .ok_or_else(|| anyhow::anyhow!("missing/unknown 'status' in response"))?;
+        let mut resp = Self::base(id, status);
+        resp.class = v.get("class").and_then(Json::as_u64).map(|c| c as usize);
+        if let Some(Json::Arr(items)) = v.get("scores") {
+            resp.scores = items.iter().filter_map(Json::as_i64).collect();
+            ensure!(resp.scores.len() == items.len(), "non-integer score in response");
+        }
+        resp.batch_n = v.get("batch_n").and_then(Json::as_u64).unwrap_or(0) as usize;
+        if let Some(lat) = v.get("lat_us") {
+            resp.queue_us = lat.get("queue").and_then(Json::as_u64).unwrap_or(0);
+            resp.batch_us = lat.get("batch").and_then(Json::as_u64).unwrap_or(0);
+            resp.total_us = lat.get("total").and_then(Json::as_u64).unwrap_or(0);
+        }
+        resp.error = v.get("error").and_then(Json::as_str).map(str::to_string);
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trip_basics() {
+        let v = parse_json(r#"{"a": [1, -2.5, true, null], "b": "x\"\\\nAé"}"#).unwrap();
+        assert_eq!(v.get("a").unwrap(), &Json::Arr(vec![
+            Json::Num(1.0),
+            Json::Num(-2.5),
+            Json::Bool(true),
+            Json::Null
+        ]));
+        assert_eq!(v.get("b").and_then(Json::as_str), Some("x\"\\\nAé"));
+        assert!(parse_json("{\"a\": 1,}").is_err(), "trailing comma rejected");
+        assert!(parse_json("{} extra").is_err(), "trailing bytes rejected");
+        assert!(parse_json("[1, 1e999]").is_err(), "non-finite number rejected");
+    }
+
+    #[test]
+    fn surrogate_pairs_decode() {
+        let v = parse_json(r#""😀""#).unwrap();
+        assert_eq!(v.as_str(), Some("😀"));
+        assert!(parse_json(r#""\ud83d""#).is_err(), "lone surrogate rejected");
+    }
+
+    #[test]
+    fn bits_pack_unpack_round_trip() {
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 100] {
+            let bits: Vec<bool> = (0..n).map(|i| i % 3 == 0).collect();
+            let hex = pack_bits(&bits);
+            assert_eq!(hex.len(), n.div_ceil(8) * 2);
+            assert_eq!(unpack_bits(&hex, n).unwrap(), bits, "n = {n}");
+        }
+        assert!(unpack_bits("zz", 8).is_err());
+        assert!(unpack_bits("00", 16).is_err(), "length must match");
+    }
+
+    #[test]
+    fn request_parse_validates_shape_and_bits() {
+        let input = (2, 2, 2); // 8 bits = 1 byte
+        let ok = parse_client_msg(r#"{"id": 3, "bits": "a5", "deadline_ms": 10}"#, input).unwrap();
+        match ok {
+            ClientMsg::Infer(r) => {
+                assert_eq!(r.id, 3);
+                assert_eq!(r.deadline_ms, Some(10));
+                assert_eq!(r.bits, unpack_bits("a5", 8).unwrap());
+            }
+            other => panic!("expected Infer, got {other:?}"),
+        }
+        // Declared shape must match the served network.
+        let e = parse_client_msg(r#"{"id": 4, "h": 3, "bits": "a5"}"#, input).unwrap_err();
+        assert_eq!(e.id, 4);
+        assert!(e.msg.contains("shape mismatch"), "{e}");
+        // Wrong payload length.
+        assert!(parse_client_msg(r#"{"id": 5, "bits": "a5ff"}"#, input).is_err());
+        // Control messages.
+        assert_eq!(parse_client_msg(r#"{"op": "stats"}"#, input).unwrap(), ClientMsg::Stats);
+        assert_eq!(parse_client_msg(r#"{"op": "drain"}"#, input).unwrap(), ClientMsg::Drain);
+        assert!(parse_client_msg(r#"{"op": "reboot"}"#, input).is_err());
+    }
+
+    #[test]
+    fn response_encode_decode_round_trip() {
+        let ok = ServeResponse::ok(9, 2, vec![-4, 7, 12], 64, 120, 900, 1100);
+        let back = ServeResponse::parse(&ok.to_json_line()).unwrap();
+        assert_eq!(back, ok);
+        let shed = ServeResponse::shed(5);
+        let back = ServeResponse::parse(&shed.to_json_line()).unwrap();
+        assert_eq!(back.status, Status::Shed);
+        assert!(back.error.unwrap().contains("deadline"));
+        let rej = ServeResponse::rejected(1, "queue full");
+        assert_eq!(ServeResponse::parse(&rej.to_json_line()).unwrap().status, Status::Rejected);
+    }
+}

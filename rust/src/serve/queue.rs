@@ -1,0 +1,298 @@
+//! Bounded admission queue with configurable backpressure.
+//!
+//! The queue is the single hand-off point between connection readers and
+//! the batcher. It is bounded (`cap`) so a traffic burst turns into
+//! *explicit* backpressure instead of unbounded memory growth: under
+//! [`BackpressurePolicy::Block`] producers wait for space (never exceeding
+//! capacity), under [`BackpressurePolicy::Reject`] a full queue returns the
+//! request to the caller for a 429-style `rejected` reply.
+//!
+//! Admission accounting happens here: every successful [`BoundedQueue::push`]
+//! bumps `serve.admitted`, every refusal bumps `serve.rejected`, and the
+//! `serve.queue_depth` gauge tracks occupancy.
+
+use crate::bnn::tensor::BitTensor;
+use crate::metrics::{Counter, Gauge, MetricsRegistry};
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One admitted inference request flowing from a connection reader to the
+/// batcher. Carries its own response channel so the batcher can reply
+/// without knowing anything about sockets.
+#[derive(Debug)]
+pub struct ServeRequest {
+    /// Client-chosen request id, echoed on the response.
+    pub id: u64,
+    /// The unpacked input image.
+    pub image: BitTensor,
+    /// Absolute shed deadline, if the client set `deadline_ms`.
+    pub deadline: Option<Instant>,
+    /// When the request was admitted (for queue-latency accounting).
+    pub enqueued: Instant,
+    /// Where to send the encoded response line.
+    pub resp: Sender<String>,
+}
+
+/// What to do with a new request when the queue is at capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackpressurePolicy {
+    /// Block the connection reader until space frees up (per-connection
+    /// backpressure; the queue never exceeds capacity).
+    #[default]
+    Block,
+    /// Refuse immediately with a `rejected` response (429-style).
+    Reject,
+}
+
+impl BackpressurePolicy {
+    /// CLI/wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackpressurePolicy::Block => "block",
+            BackpressurePolicy::Reject => "reject",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "block" => Some(BackpressurePolicy::Block),
+            "reject" => Some(BackpressurePolicy::Reject),
+            _ => None,
+        }
+    }
+}
+
+/// Why a push failed; the request is handed back for the reply.
+#[derive(Debug)]
+pub enum PushError {
+    /// Queue at capacity under [`BackpressurePolicy::Reject`].
+    Full(ServeRequest),
+    /// The queue was closed (server draining) — no new admissions.
+    Closed(ServeRequest),
+}
+
+struct Inner {
+    items: VecDeque<ServeRequest>,
+    closed: bool,
+}
+
+/// The bounded, policy-aware admission queue.
+pub struct BoundedQueue {
+    inner: Mutex<Inner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+    policy: BackpressurePolicy,
+    depth: Gauge,
+    admitted: Counter,
+    rejected: Counter,
+}
+
+impl BoundedQueue {
+    /// Build a queue of the given capacity, registering its metrics
+    /// (`serve.queue_depth`, `serve.admitted`, `serve.rejected`) in `reg`.
+    pub fn new(cap: usize, policy: BackpressurePolicy, reg: &MetricsRegistry) -> Self {
+        assert!(cap > 0, "queue capacity must be positive");
+        BoundedQueue {
+            inner: Mutex::new(Inner { items: VecDeque::with_capacity(cap), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+            policy,
+            depth: reg.gauge("serve.queue_depth"),
+            admitted: reg.counter("serve.admitted"),
+            rejected: reg.counter("serve.rejected"),
+        }
+    }
+
+    /// Maximum number of queued requests.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Current queue depth.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("queue lock").items.len()
+    }
+
+    /// Whether the queue is currently empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admit a request, applying the backpressure policy when full.
+    pub fn push(&self, req: ServeRequest) -> Result<(), PushError> {
+        let mut inner = self.inner.lock().expect("queue lock");
+        if inner.closed {
+            self.rejected.inc();
+            return Err(PushError::Closed(req));
+        }
+        while inner.items.len() >= self.cap {
+            match self.policy {
+                BackpressurePolicy::Reject => {
+                    self.rejected.inc();
+                    return Err(PushError::Full(req));
+                }
+                BackpressurePolicy::Block => {
+                    inner = self.not_full.wait(inner).expect("queue lock");
+                    if inner.closed {
+                        self.rejected.inc();
+                        return Err(PushError::Closed(req));
+                    }
+                }
+            }
+        }
+        inner.items.push_back(req);
+        self.admitted.inc();
+        self.depth.set(inner.items.len() as f64);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue the next micro-batch: wait (forever) for at least one
+    /// request, then gather more until `max_batch` items are in hand or
+    /// `max_wait` has elapsed since the *first* dequeue, whichever comes
+    /// first. Returns an empty vec only when the queue is closed **and**
+    /// fully drained — the batcher's signal to exit.
+    pub fn next_batch(&self, max_batch: usize, max_wait: Duration) -> Vec<ServeRequest> {
+        let mut inner = self.inner.lock().expect("queue lock");
+        // Phase 1: wait for the first request (or close+drain).
+        while inner.items.is_empty() {
+            if inner.closed {
+                return Vec::new();
+            }
+            inner = self.not_empty.wait(inner).expect("queue lock");
+        }
+        let mut batch = Vec::with_capacity(max_batch.min(inner.items.len()));
+        batch.push(inner.items.pop_front().expect("non-empty"));
+        let flush_at = Instant::now() + max_wait;
+        // Phase 2: top up until full or the wait budget is spent. Once the
+        // queue closes there is no reason to linger — take what's there.
+        loop {
+            while batch.len() < max_batch {
+                match inner.items.pop_front() {
+                    Some(req) => batch.push(req),
+                    None => break,
+                }
+            }
+            if batch.len() >= max_batch || inner.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= flush_at {
+                break;
+            }
+            let (guard, timeout) =
+                self.not_empty.wait_timeout(inner, flush_at - now).expect("queue lock");
+            inner = guard;
+            if timeout.timed_out() && inner.items.is_empty() {
+                break;
+            }
+        }
+        self.depth.set(inner.items.len() as f64);
+        self.not_full.notify_all();
+        batch
+    }
+
+    /// Close the queue: refuse all future pushes, wake every waiter. Queued
+    /// requests remain and will still be drained by [`Self::next_batch`].
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().expect("queue lock");
+        inner.closed = true;
+        drop(inner);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Whether [`Self::close`] has been called.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().expect("queue lock").closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> (ServeRequest, std::sync::mpsc::Receiver<String>) {
+        let (tx, rx) = channel();
+        let r = ServeRequest {
+            id,
+            image: BitTensor::random(2, 2, 2, id),
+            deadline: None,
+            enqueued: Instant::now(),
+            resp: tx,
+        };
+        (r, rx)
+    }
+
+    #[test]
+    fn reject_policy_refuses_when_full() {
+        let reg = MetricsRegistry::new();
+        let q = BoundedQueue::new(2, BackpressurePolicy::Reject, &reg);
+        assert!(q.push(req(1).0).is_ok());
+        assert!(q.push(req(2).0).is_ok());
+        match q.push(req(3).0) {
+            Err(PushError::Full(r)) => assert_eq!(r.id, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        assert_eq!(reg.counter("serve.admitted").get(), 2);
+        assert_eq!(reg.counter("serve.rejected").get(), 1);
+    }
+
+    #[test]
+    fn block_policy_never_exceeds_capacity() {
+        let reg = MetricsRegistry::new();
+        let q = Arc::new(BoundedQueue::new(2, BackpressurePolicy::Block, &reg));
+        for i in 0..2 {
+            q.push(req(i).0).unwrap();
+        }
+        // A third push must block until the consumer makes room.
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || q2.push(req(99).0).map_err(|_| "refused"));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 2, "blocked producer must not overfill");
+        let batch = q.next_batch(1, Duration::from_millis(1));
+        assert_eq!(batch.len(), 1);
+        producer.join().unwrap().unwrap();
+        assert!(q.len() <= 2);
+        assert_eq!(reg.counter("serve.admitted").get(), 3);
+    }
+
+    #[test]
+    fn next_batch_flushes_on_max_batch() {
+        let reg = MetricsRegistry::new();
+        let q = BoundedQueue::new(16, BackpressurePolicy::Block, &reg);
+        for i in 0..5 {
+            q.push(req(i).0).unwrap();
+        }
+        // max_wait is generous, but max_batch=3 flushes immediately.
+        let b = q.next_batch(3, Duration::from_secs(5));
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let b = q.next_batch(3, Duration::from_millis(1));
+        assert_eq!(b.len(), 2, "partial flush on max_wait");
+    }
+
+    #[test]
+    fn close_drains_then_signals_exit() {
+        let reg = MetricsRegistry::new();
+        let q = BoundedQueue::new(4, BackpressurePolicy::Reject, &reg);
+        q.push(req(1).0).unwrap();
+        q.close();
+        match q.push(req(2).0) {
+            Err(PushError::Closed(r)) => assert_eq!(r.id, 2),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // Residual items still drain…
+        let b = q.next_batch(8, Duration::from_millis(1));
+        assert_eq!(b.len(), 1);
+        // …then the empty vec signals exit, without blocking.
+        assert!(q.next_batch(8, Duration::from_secs(5)).is_empty());
+    }
+}

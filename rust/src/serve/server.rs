@@ -1,0 +1,274 @@
+//! The TCP front-end: connection handling, admission, graceful drain.
+//!
+//! [`serve`] binds a listener and returns a [`ServeHandle`] immediately —
+//! the accept loop and the batcher run on background threads. Each
+//! connection gets a reader (parses request lines, pushes into the
+//! admission queue) and a writer thread (drains an `mpsc` channel of
+//! encoded response lines), so responses from the batcher never block the
+//! engine on a slow client socket.
+//!
+//! Shutdown is graceful by construction: a `{"op": "drain"}` control
+//! message — or SIGTERM/ctrl-c via [`request_drain`] — stops the accept
+//! loop and closes the queue; the batcher then flushes everything still
+//! queued (deadline sheds still apply), and [`ServeHandle::drain`] joins
+//! the threads and freezes the final [`PerfReport`].
+
+use super::batcher::Batcher;
+use super::protocol::{parse_client_msg, ClientMsg, ServeResponse};
+use super::queue::{BoundedQueue, PushError, ServeRequest};
+use super::{ServeConfig, ServeStats};
+use crate::coordinator::{BatchExecutor, PerfReport, ReportParts};
+use crate::metrics::MetricsRegistry;
+use crate::Result;
+use anyhow::Context;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Process-wide drain flag set by the CLI's SIGTERM/SIGINT handlers (a
+/// signal means the whole process is going down, so *every* server in the
+/// process honors it). Programmatic drains — the wire `{"op": "drain"}` or
+/// [`ServeHandle::drain`] — use a per-server flag instead, so concurrent
+/// servers (e.g. parallel tests) never drain each other.
+static SIGNAL_DRAIN: AtomicBool = AtomicBool::new(false);
+
+/// Request a process-wide graceful drain (what the signal handlers call).
+pub fn request_drain() {
+    SIGNAL_DRAIN.store(true, Ordering::SeqCst);
+}
+
+/// A running server: background accept loop + batcher, plus everything
+/// needed to account for and report on them at drain time.
+pub struct ServeHandle {
+    addr: SocketAddr,
+    exec: Arc<BatchExecutor>,
+    queue: Arc<BoundedQueue>,
+    registry: Arc<MetricsRegistry>,
+    draining: Arc<AtomicBool>,
+    accept: JoinHandle<()>,
+    batcher: JoinHandle<super::batcher::ServeAggregate>,
+    started: Instant,
+}
+
+impl ServeHandle {
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// This server's scoped metrics registry.
+    pub fn registry(&self) -> &Arc<MetricsRegistry> {
+        &self.registry
+    }
+
+    /// Whether a drain has been requested (by signal, wire, or handle).
+    pub fn drain_requested(&self) -> bool {
+        SIGNAL_DRAIN.load(Ordering::SeqCst)
+            || self.draining.load(Ordering::SeqCst)
+            || self.queue.is_closed()
+    }
+
+    /// Block until a drain is requested, polling the flags.
+    pub fn wait_for_drain(&self) {
+        while !self.drain_requested() {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Gracefully drain: stop accepting, flush the queue through the
+    /// batcher (deadline sheds still apply), join the background threads,
+    /// and freeze the final report. The returned [`PerfReport`] carries
+    /// the [`ServeStats`] accounting — `admitted == completed + shed +
+    /// failed` holds at this point, every admitted request answered.
+    pub fn drain(self) -> Result<PerfReport> {
+        self.draining.store(true, Ordering::SeqCst);
+        self.queue.close();
+        self.accept.join().map_err(|_| anyhow::anyhow!("accept loop panicked"))?;
+        let agg = self.batcher.join().map_err(|_| anyhow::anyhow!("batcher panicked"))?;
+        let uptime = self.started.elapsed();
+        let parts = ReportParts {
+            batch: agg.images as usize,
+            wall: agg.busy,
+            cycles: agg.cycles,
+            stats: agg.stats,
+            layers: agg.layers.clone(),
+            per_pe: agg.per_pe.clone(),
+            workers: agg.worker_summaries(),
+        };
+        let stats = ServeStats::from_registry(&self.registry);
+        self.registry.gauge("serve.uptime_ms").set(uptime.as_secs_f64() * 1e3);
+        Ok(PerfReport::from_parts(&self.exec, parts)
+            .with_serve(stats)
+            .with_metrics(self.registry.snapshot()))
+    }
+}
+
+/// Bind and start serving. Returns as soon as the listener is bound; use
+/// the returned handle to wait and drain.
+pub fn serve(exec: BatchExecutor, cfg: ServeConfig) -> Result<ServeHandle> {
+    let exec = Arc::new(exec);
+    let registry = Arc::new(MetricsRegistry::new());
+    let queue = Arc::new(BoundedQueue::new(cfg.queue_cap, cfg.policy, &registry));
+    let draining = Arc::new(AtomicBool::new(false));
+    let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let addr = listener.local_addr().context("local addr")?;
+
+    let batcher = Batcher::new(
+        Arc::clone(&exec),
+        Arc::clone(&queue),
+        Arc::clone(&registry),
+        cfg.max_batch,
+        Duration::from_micros(cfg.max_wait_us),
+    );
+    let batcher = std::thread::Builder::new()
+        .name("serve-batcher".into())
+        .spawn(move || batcher.run())
+        .context("spawning batcher")?;
+
+    let accept = {
+        let exec = Arc::clone(&exec);
+        let queue = Arc::clone(&queue);
+        let registry = Arc::clone(&registry);
+        let draining = Arc::clone(&draining);
+        std::thread::Builder::new()
+            .name("serve-accept".into())
+            .spawn(move || accept_loop(listener, exec, queue, registry, draining))
+            .context("spawning accept loop")?
+    };
+
+    Ok(ServeHandle {
+        addr,
+        exec,
+        queue,
+        registry,
+        draining,
+        accept,
+        batcher,
+        started: Instant::now(),
+    })
+}
+
+/// Poll-accept until a drain is requested (nonblocking listener + short
+/// sleep, so the loop notices the flags without a connection arriving).
+fn accept_loop(
+    listener: TcpListener,
+    exec: Arc<BatchExecutor>,
+    queue: Arc<BoundedQueue>,
+    registry: Arc<MetricsRegistry>,
+    draining: Arc<AtomicBool>,
+) {
+    let connections = registry.gauge("serve.connections");
+    while !SIGNAL_DRAIN.load(Ordering::SeqCst)
+        && !draining.load(Ordering::SeqCst)
+        && !queue.is_closed()
+    {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let exec = Arc::clone(&exec);
+                let queue = Arc::clone(&queue);
+                let registry = Arc::clone(&registry);
+                let draining = Arc::clone(&draining);
+                let connections = connections.clone();
+                connections.inc();
+                let _ = std::thread::Builder::new().name("serve-conn".into()).spawn(move || {
+                    let _ = handle_connection(stream, &exec, &queue, &registry, &draining);
+                    connections.dec();
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Spawn the writer thread for one connection: drains encoded response
+/// lines from `rx` into the socket. Exits when every `Sender` clone is
+/// gone (reader done *and* no request of this connection still queued).
+fn spawn_writer(stream: TcpStream, rx: Receiver<String>) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("serve-writer".into())
+        .spawn(move || {
+            let mut w = BufWriter::new(stream);
+            while let Ok(line) = rx.recv() {
+                if w.write_all(line.as_bytes()).is_err() || w.write_all(b"\n").is_err() {
+                    break; // client gone; replies are best-effort
+                }
+                let _ = w.flush();
+            }
+        })
+        .expect("spawning connection writer")
+}
+
+/// One connection's reader: parse request lines, admit them, reply
+/// directly on protocol/admission errors.
+fn handle_connection(
+    stream: TcpStream,
+    exec: &BatchExecutor,
+    queue: &BoundedQueue,
+    registry: &MetricsRegistry,
+    draining: &AtomicBool,
+) -> Result<()> {
+    let l0 = &exec.network().layers[0];
+    let input = (l0.y1, l0.x1, l0.z1);
+    let write_stream = stream.try_clone().context("cloning stream for writer")?;
+    let (tx, rx): (Sender<String>, Receiver<String>) = channel();
+    let writer = spawn_writer(write_stream, rx);
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break, // connection reset
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_client_msg(&line, input) {
+            Ok(ClientMsg::Infer(req)) => {
+                let (h, w, c) = input;
+                let deadline =
+                    req.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+                let sreq = ServeRequest {
+                    id: req.id,
+                    image: req.image(h, w, c),
+                    deadline,
+                    enqueued: Instant::now(),
+                    resp: tx.clone(),
+                };
+                match queue.push(sreq) {
+                    Ok(()) => {}
+                    Err(PushError::Full(r)) => {
+                        let _ = tx.send(ServeResponse::rejected(r.id, "queue full").to_json_line());
+                    }
+                    Err(PushError::Closed(r)) => {
+                        let _ = tx
+                            .send(ServeResponse::rejected(r.id, "server draining").to_json_line());
+                    }
+                }
+            }
+            Ok(ClientMsg::Stats) => {
+                let _ = tx.send(ServeStats::from_registry(registry).to_json_line());
+            }
+            Ok(ClientMsg::Drain) => {
+                let _ = tx.send("{\"op\": \"drain\", \"ack\": true}".to_string());
+                draining.store(true, Ordering::SeqCst);
+                queue.close();
+                break;
+            }
+            Err(e) => {
+                let _ = tx.send(ServeResponse::error(e.id, &e.msg).to_json_line());
+            }
+        }
+    }
+    // Drop our sender; the writer exits once queued requests (which hold
+    // clones) have been answered and released by the batcher.
+    drop(tx);
+    let _ = writer.join();
+    Ok(())
+}

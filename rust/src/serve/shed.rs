@@ -1,0 +1,102 @@
+//! Deadline-aware load shedding.
+//!
+//! Deadlines are enforced **at dequeue**, not at admission: a request that
+//! sat in the queue past its `deadline_ms` will miss its SLO no matter how
+//! fast the engine is, so running it would only steal lane slots from
+//! requests that can still make theirs. The [`Shedder`] filters each
+//! freshly dequeued micro-batch, replies `shed` to every expired request,
+//! and counts them in `serve.shed` — shed work is *accounted*, never
+//! silently dropped (the drain invariant `admitted == completed + shed +
+//! failed` depends on it).
+
+use super::protocol::ServeResponse;
+use super::queue::ServeRequest;
+use crate::metrics::{Counter, MetricsRegistry};
+use std::time::Instant;
+
+/// Drops expired requests from dequeued batches (see [module docs](self)).
+pub struct Shedder {
+    shed: Counter,
+}
+
+impl Shedder {
+    /// Build a shedder counting into `serve.shed` of `reg`.
+    pub fn new(reg: &MetricsRegistry) -> Self {
+        Shedder { shed: reg.counter("serve.shed") }
+    }
+
+    /// Total requests shed so far.
+    pub fn count(&self) -> u64 {
+        self.shed.get()
+    }
+
+    /// Partition a dequeued batch: requests whose deadline has passed at
+    /// `now` get a `shed` response and are counted; the survivors are
+    /// returned for execution.
+    pub fn shed_expired(&self, batch: Vec<ServeRequest>, now: Instant) -> Vec<ServeRequest> {
+        let mut live = Vec::with_capacity(batch.len());
+        for req in batch {
+            match req.deadline {
+                Some(d) if now > d => {
+                    self.shed.inc();
+                    // A gone client is not an error: the reply is
+                    // best-effort, the count is what must survive.
+                    let _ = req.resp.send(ServeResponse::shed(req.id).to_json_line());
+                }
+                _ => live.push(req),
+            }
+        }
+        live
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::tensor::BitTensor;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    fn req(id: u64, deadline: Option<Instant>) -> (ServeRequest, std::sync::mpsc::Receiver<String>)
+    {
+        let (tx, rx) = channel();
+        let r = ServeRequest {
+            id,
+            image: BitTensor::random(2, 2, 2, id),
+            deadline,
+            enqueued: Instant::now(),
+            resp: tx,
+        };
+        (r, rx)
+    }
+
+    #[test]
+    fn expired_requests_are_shed_and_counted() {
+        let reg = MetricsRegistry::new();
+        let shedder = Shedder::new(&reg);
+        let now = Instant::now();
+        let (expired, rx_expired) = req(1, Some(now - Duration::from_millis(5)));
+        let (alive, _rx_alive) = req(2, Some(now + Duration::from_secs(5)));
+        let (no_deadline, _rx_nd) = req(3, None);
+        let live = shedder.shed_expired(vec![expired, alive, no_deadline], now);
+        assert_eq!(live.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(shedder.count(), 1);
+        assert_eq!(reg.counter("serve.shed").get(), 1);
+        let line = rx_expired.try_recv().expect("shed response sent");
+        let resp = ServeResponse::parse(&line).unwrap();
+        assert_eq!(resp.id, 1);
+        assert_eq!(resp.status, super::super::protocol::Status::Shed);
+    }
+
+    #[test]
+    fn shed_reply_to_gone_client_is_not_fatal() {
+        let reg = MetricsRegistry::new();
+        let shedder = Shedder::new(&reg);
+        let now = Instant::now();
+        let (expired, rx) = req(7, Some(now - Duration::from_millis(1)));
+        drop(rx); // client hung up
+        let live = shedder.shed_expired(vec![expired], now);
+        assert!(live.is_empty());
+        assert_eq!(shedder.count(), 1, "still counted");
+    }
+}

@@ -116,8 +116,8 @@ fn aggregates_equal_sum_of_single_runs() {
 fn program_cache_plans_once_per_process_shape() {
     let cache = Arc::new(ProgramCache::new());
     let req = BatchRequest::new(tiny_images(8, 700));
-    // Cold pass on a single worker: miss accounting is exact (parallel
-    // cold misses may double-count builds that race, by design).
+    // Cold pass on a single worker (builds are single-flight, so the miss
+    // count would be identical under parallel cold lookups too).
     let serial = tiny_executor(3).with_cache(Arc::clone(&cache)).with_threads(1);
     serial.run(&req).unwrap();
     let (hits_warm, misses_cold) = cache.stats();
@@ -147,6 +147,38 @@ fn cache_hit_equals_fresh_generation() {
     assert_eq!(hit.schedule.ext_map, fresh.schedule.ext_map);
     assert_eq!(hit.out_neuron, fresh.out_neuron);
     assert_eq!(hit.out_loc, fresh.out_loc);
+}
+
+/// Single-flight under contention: N threads racing one cold key must
+/// plan exactly once — one miss, N−1 hits, one entry, one shared `Arc` —
+/// and must not deadlock (the barrier maximizes the race window).
+#[test]
+fn cache_contention_plans_exactly_once() {
+    const THREADS: usize = 8;
+    let cache = Arc::new(ProgramCache::new());
+    // A large fan-in makes planning slow enough that every thread arrives
+    // while the build is still in flight.
+    let d = OpDesc::SumTree { n: 511 };
+    let barrier = Arc::new(std::sync::Barrier::new(THREADS));
+    let handles: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let cache = Arc::clone(&cache);
+            let d = d.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                cache.program(&d)
+            })
+        })
+        .collect();
+    let progs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let s = cache.snapshot();
+    assert_eq!(s.misses, 1, "exactly one thread may run the planner");
+    assert_eq!(s.hits, (THREADS - 1) as u64, "the rest wait and hit");
+    assert_eq!(s.entries, 1);
+    for p in &progs {
+        assert!(Arc::ptr_eq(p, &progs[0]), "all threads hold the same broadcast Arc");
+    }
 }
 
 /// The analytic batch model is exactly `batch ×` the single-image model:

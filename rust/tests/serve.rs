@@ -1,0 +1,263 @@
+//! Contracts of the serving front-end (`serve`), end-to-end over TCP:
+//!
+//! * **Bit-identity** — a response produced through the socket, the
+//!   admission queue and the micro-batcher is bit-identical to calling
+//!   [`BatchExecutor::run_one`] directly on the same input;
+//! * **Bounded admission** — the queue refuses when full under `Reject`
+//!   and never exceeds capacity under `Block`;
+//! * **Deadline shedding** — expired requests are answered `shed`, counted
+//!   in `serve.shed`, and never executed;
+//! * **Accountable drain** — shutdown flushes in-flight requests and the
+//!   final `PerfReport` proves `admitted == completed + shed + failed`
+//!   with a non-empty batch-occupancy histogram.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tulip::bnn::tensor::BitTensor;
+use tulip::coordinator::BatchExecutor;
+use tulip::metrics::MetricsRegistry;
+use tulip::serve::{
+    demo_network, pack_bits, serve, BackpressurePolicy, BoundedQueue, ServeConfig, ServeHandle,
+    ServeRequest, ServeResponse, Status,
+};
+
+/// The `tiny8` demo model (8×8×4 input) on a small array — the server
+/// and the oracle build it independently from the same seeds.
+fn tiny8_executor() -> BatchExecutor {
+    let (net, weights) = demo_network("tiny8").unwrap();
+    BatchExecutor::new(net, weights).unwrap().with_array(2, 4)
+}
+
+fn boot(cfg: ServeConfig) -> ServeHandle {
+    serve(tiny8_executor(), cfg).unwrap()
+}
+
+fn image(id: u64) -> BitTensor {
+    BitTensor::random(8, 8, 4, 9000 + id)
+}
+
+fn request_line(id: u64, deadline_ms: Option<u64>) -> String {
+    let deadline = deadline_ms.map(|ms| format!(", \"deadline_ms\": {ms}")).unwrap_or_default();
+    format!("{{\"id\": {id}, \"bits\": \"{}\"{deadline}}}\n", pack_bits(&image(id).data))
+}
+
+/// Send `lines` on one connection, close the write half, and read exactly
+/// `expect` response lines back.
+fn round_trip(addr: std::net::SocketAddr, lines: &[String], expect: usize) -> Vec<ServeResponse> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    for l in lines {
+        stream.write_all(l.as_bytes()).unwrap();
+    }
+    stream.flush().unwrap();
+    stream.shutdown(Shutdown::Write).unwrap();
+    let mut out = Vec::with_capacity(expect);
+    for line in BufReader::new(stream).lines() {
+        out.push(ServeResponse::parse(&line.unwrap()).unwrap());
+        if out.len() == expect {
+            break;
+        }
+    }
+    out
+}
+
+/// (a) End-to-end bit-identity: scores and class through the socket equal
+/// a direct `run_one` on the same image.
+#[test]
+fn responses_bit_identical_to_direct_execution() {
+    let handle = boot(ServeConfig { max_batch: 4, max_wait_us: 500, ..ServeConfig::default() });
+    let oracle = tiny8_executor();
+    let n = 10u64;
+    let lines: Vec<String> = (0..n).map(|id| request_line(id, None)).collect();
+    let mut responses = round_trip(handle.local_addr(), &lines, n as usize);
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), n as usize);
+    for r in &responses {
+        assert_eq!(r.status, Status::Ok, "request {}: {:?}", r.id, r.error);
+        let direct = oracle.run_one(0, &image(r.id)).unwrap();
+        assert_eq!(r.scores, direct.scores, "request {} scores drifted through serving", r.id);
+        assert_eq!(r.class, Some(direct.class));
+        assert!(r.batch_n >= 1 && r.batch_n <= 4, "occupancy within max_batch");
+    }
+    let report = handle.drain().unwrap();
+    let stats = report.serve.expect("drain report carries serve stats");
+    assert_eq!(stats.completed, n);
+    assert!(stats.accounted());
+}
+
+/// (b) Admission is bounded. The queue (the exact object the server runs
+/// on) refuses when full under `Reject` and never exceeds capacity under
+/// `Block` — producers wait instead of overfilling.
+#[test]
+fn admission_queue_is_bounded_under_both_policies() {
+    let mk = |id: u64| {
+        let (tx, _rx) = channel();
+        // The receiver is intentionally dropped: this test is about
+        // admission, and replies are best-effort by design.
+        ServeRequest {
+            id,
+            image: image(id),
+            deadline: None,
+            enqueued: Instant::now(),
+            resp: tx,
+        }
+    };
+
+    // Reject: a full queue refuses immediately and counts the rejection.
+    let reg = MetricsRegistry::new();
+    let q = BoundedQueue::new(3, BackpressurePolicy::Reject, &reg);
+    for id in 0..3 {
+        q.push(mk(id)).unwrap();
+    }
+    assert!(q.push(mk(3)).is_err(), "push beyond capacity must be refused");
+    assert_eq!(q.len(), 3, "a refused push must not grow the queue");
+    assert_eq!(reg.counter("serve.admitted").get(), 3);
+    assert_eq!(reg.counter("serve.rejected").get(), 1);
+
+    // Block: 16 producers race 4 slots; the queue never exceeds capacity
+    // and every producer eventually gets in as the consumer drains.
+    let reg = MetricsRegistry::new();
+    let q = Arc::new(BoundedQueue::new(4, BackpressurePolicy::Block, &reg));
+    let producers: Vec<_> = (0..16u64)
+        .map(|id| {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || q.push(mk(id)).expect("Block admits eventually"))
+        })
+        .collect();
+    let mut drained = 0usize;
+    while drained < 16 {
+        assert!(q.len() <= 4, "Block policy exceeded capacity: {}", q.len());
+        drained += q.next_batch(2, Duration::from_millis(5)).len();
+    }
+    for p in producers {
+        p.join().unwrap();
+    }
+    assert_eq!(reg.counter("serve.admitted").get(), 16);
+    assert_eq!(reg.counter("serve.rejected").get(), 0);
+}
+
+/// (c) Expired requests are shed before execution: with a long batch wait
+/// and a 1 ms deadline, both queued requests expire while the batcher is
+/// topping up, are answered `shed`, counted, and never run (completed 0).
+#[test]
+fn expired_requests_shed_before_execution_and_counted() {
+    let handle = boot(ServeConfig {
+        max_batch: 64,
+        max_wait_us: 60_000, // the top-up window outlives the deadline
+        ..ServeConfig::default()
+    });
+    let lines = vec![request_line(0, Some(1)), request_line(1, Some(1))];
+    let responses = round_trip(handle.local_addr(), &lines, 2);
+    for r in &responses {
+        assert_eq!(r.status, Status::Shed, "request {}: {:?}", r.id, r.error);
+        assert!(r.error.as_deref().unwrap_or("").contains("deadline"));
+    }
+    let report = handle.drain().unwrap();
+    let stats = report.serve.expect("serve stats");
+    assert_eq!(stats.shed, 2, "both sheds counted in serve.shed");
+    assert_eq!(stats.completed, 0, "shed requests must never execute");
+    assert!(stats.accounted());
+}
+
+/// (d)+(e) Drain accounts for every admitted request with zero
+/// discrepancy, and the batch-occupancy histogram is non-empty.
+#[test]
+fn drain_accounts_every_admitted_request() {
+    let handle = boot(ServeConfig { max_batch: 8, max_wait_us: 300, ..ServeConfig::default() });
+    let n = 24u64;
+    // A mixed load: a third carries aggressive 1 ms deadlines, so the
+    // final tally may split between completed and shed — the invariant
+    // must hold either way.
+    let lines: Vec<String> =
+        (0..n).map(|id| request_line(id, (id % 3 == 0).then_some(1))).collect();
+    let responses = round_trip(handle.local_addr(), &lines, n as usize);
+    assert_eq!(responses.len(), n as usize, "every request answered exactly once");
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n).collect::<Vec<_>>());
+
+    let report = handle.drain().unwrap();
+    let stats = report.serve.expect("serve stats");
+    assert_eq!(stats.admitted, n, "all {n} requests admitted");
+    assert_eq!(
+        stats.admitted,
+        stats.completed + stats.shed + stats.failed,
+        "accounting discrepancy: admitted {} vs completed {} + shed {} + failed {}",
+        stats.admitted,
+        stats.completed,
+        stats.shed,
+        stats.failed
+    );
+    assert!(stats.accounted());
+    assert_eq!(stats.failed, 0, "no engine failures expected");
+    // (e) Occupancy histogram published and non-empty under load.
+    assert!(stats.occupancy.count > 0, "batch-occupancy histogram must be non-empty");
+    assert!(stats.occupancy.max <= 8, "occupancy bounded by max_batch");
+    assert_eq!(stats.completed, stats.occupancy.sum, "occupancy sums to completed images");
+    // Latency histograms cover every completed request.
+    assert_eq!(stats.total_us.count, stats.completed);
+    // And the report serializes the serve section.
+    let json = report.to_json();
+    assert!(json.contains("\"serve\""), "report JSON embeds the serve section");
+    assert!(json.contains("\"batch_occupancy\""));
+}
+
+/// The wire control ops work: `{"op": "stats"}` answers with counters and
+/// `{"op": "drain"}` acks, closes admission, and unblocks the handle.
+#[test]
+fn wire_stats_and_drain_ops() {
+    let handle = boot(ServeConfig { max_batch: 4, max_wait_us: 300, ..ServeConfig::default() });
+    let addr = handle.local_addr();
+    let lines = vec![request_line(0, None)];
+    let r = round_trip(addr, &lines, 1);
+    assert_eq!(r[0].status, Status::Ok);
+
+    // Stats snapshot over the wire.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"{\"op\": \"stats\"}\n").unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    let mut line = String::new();
+    BufReader::new(s).read_line(&mut line).unwrap();
+    assert!(line.contains("\"op\": \"stats\""), "{line}");
+    assert!(line.contains("\"admitted\": 1"), "{line}");
+
+    // Drain over the wire: ack, then the handle sees the request.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"{\"op\": \"drain\"}\n").unwrap();
+    let mut ack = String::new();
+    BufReader::new(s.try_clone().unwrap()).read_line(&mut ack).unwrap();
+    assert!(ack.contains("\"ack\": true"), "{ack}");
+    handle.wait_for_drain();
+    assert!(handle.drain_requested());
+    let report = handle.drain().unwrap();
+    let stats = report.serve.expect("serve stats");
+    assert_eq!(stats.completed, 1);
+    assert!(stats.accounted());
+    // New connections are refused once the server is gone.
+    std::thread::sleep(Duration::from_millis(20));
+    assert!(TcpStream::connect(addr).is_err(), "listener must be closed after drain");
+}
+
+/// Malformed lines are answered `error` without poisoning the connection:
+/// a good request after a bad one still completes.
+#[test]
+fn protocol_errors_are_per_request_not_per_connection() {
+    let handle = boot(ServeConfig { max_batch: 4, max_wait_us: 300, ..ServeConfig::default() });
+    let lines = vec![
+        "{\"id\": 1, \"bits\": \"zz\"}\n".to_string(), // bad payload
+        "not json at all\n".to_string(),               // unparseable
+        request_line(7, None),                         // still served
+    ];
+    let responses = round_trip(handle.local_addr(), &lines, 3);
+    let ok: Vec<_> = responses.iter().filter(|r| r.status == Status::Ok).collect();
+    let errors = responses.iter().filter(|r| r.status == Status::Error).count();
+    assert_eq!(errors, 2, "both bad lines answered error");
+    assert_eq!(ok.len(), 1);
+    assert_eq!(ok[0].id, 7);
+    let report = handle.drain().unwrap();
+    let stats = report.serve.expect("serve stats");
+    assert_eq!(stats.admitted, 1, "bad lines are never admitted");
+    assert!(stats.accounted());
+}
