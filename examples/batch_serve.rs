@@ -13,8 +13,8 @@
 //!
 //! Run: `cargo run --release --example batch_serve [-- --perf-out perf.json]`
 
-use tulip::bnn::tensor::{BinWeights, BitTensor};
-use tulip::bnn::tiny_bnn;
+use tulip::bnn::tensor::BitTensor;
+use tulip::bnn::Model;
 use tulip::config::ArchConfig;
 use tulip::coordinator::{BatchExecutor, BatchPerf, BatchRequest, PerfReport};
 use tulip::metrics::MetricsRegistry;
@@ -35,13 +35,10 @@ fn perf_out_arg() -> Option<String> {
 
 fn main() {
     const BATCH: u64 = 32;
-    let net = tiny_bnn(16, 8, 4);
-    let weights: Vec<BinWeights> = net
-        .layers
-        .iter()
-        .enumerate()
-        .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 1000 + i as u64))
-        .collect();
+    // The built-in "tiny" demo model: tiny_bnn(16, 8, 4) with frozen
+    // deterministic weights.
+    let model = Model::demo("tiny").expect("built-in demo model");
+    let net = model.network().clone();
     println!(
         "serving {} ({} layers, {:.2} MOp/inference)",
         net.name,
@@ -49,8 +46,8 @@ fn main() {
         net.total_mops()
     );
 
-    let parallel = BatchExecutor::new(net.clone(), weights.clone()).unwrap();
-    let serial = BatchExecutor::new(net.clone(), weights).unwrap().with_threads(1);
+    let parallel = BatchExecutor::for_model(&model).unwrap();
+    let serial = BatchExecutor::for_model(&model).unwrap().with_threads(1);
     let req = BatchRequest::new((0..BATCH).map(|i| BitTensor::random(16, 16, 8, i)).collect());
 
     // Serve the batch on all cores, then re-serve it single-threaded and

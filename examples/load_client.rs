@@ -7,6 +7,14 @@
 //! any error, any rejection (unless `--allow-reject`), a shed when
 //! `--deadline-frac` is 0, or a p99 over `--assert-p99-us`.
 //!
+//! Multi-model knobs: every request carries `"model": NAME` (from
+//! `--model`), so one client exercises exactly one lane of a multi-model
+//! server. `--model-file PATH` builds the local verification oracle from a
+//! `tulip.model/v1` file instead of the built-in demo models;
+//! `--load-model` first hot-loads that document onto the server under
+//! NAME (wire `{"op": "load_model"}`); `--unload` retires the lane after
+//! traffic and fails unless the server reports `"accounted": true`.
+//!
 //! ```sh
 //! cargo run --release --example load_client -- \
 //!     --addr 127.0.0.1:7070 --model tiny --requests 200 --rate 2000 \
@@ -18,13 +26,18 @@ use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use tulip::bnn::tensor::BitTensor;
+use tulip::bnn::Model;
 use tulip::coordinator::BatchExecutor;
-use tulip::serve::{demo_network, pack_bits, ServeResponse, Status};
+use tulip::serve::protocol::{json_str, parse_json, Json};
+use tulip::serve::{pack_bits, ServeResponse, Status};
 
 #[derive(Clone)]
 struct Args {
     addr: String,
     model: String,
+    model_file: Option<String>,
+    load_model: bool,
+    unload: bool,
     requests: usize,
     rate: f64,
     burst: usize,
@@ -46,6 +59,9 @@ fn parse_args() -> Args {
     Args {
         addr: flag_value(&argv, "--addr").unwrap_or_else(|| "127.0.0.1:7070".into()),
         model: flag_value(&argv, "--model").unwrap_or_else(|| "tiny".into()),
+        model_file: flag_value(&argv, "--model-file"),
+        load_model: argv.iter().any(|a| a == "--load-model"),
+        unload: argv.iter().any(|a| a == "--unload"),
         requests: flag_value(&argv, "--requests").and_then(|v| v.parse().ok()).unwrap_or(200),
         rate: flag_value(&argv, "--rate").and_then(|v| v.parse().ok()).unwrap_or(2000.0),
         burst: flag_value(&argv, "--burst").and_then(|v| v.parse().ok()).unwrap_or(1).max(1),
@@ -65,6 +81,17 @@ fn parse_args() -> Args {
 /// only the packed bits, so bit-identity checks are end-to-end.
 fn image_for(id: u64, h: usize, w: usize, c: usize) -> BitTensor {
     BitTensor::random(h, w, c, 5000 + id)
+}
+
+/// Send one control line and return the parsed reply object.
+fn control_op(addr: &str, line: &str) -> anyhow::Result<Json> {
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(line.as_bytes())?;
+    s.write_all(b"\n")?;
+    s.flush()?;
+    let mut reply = String::new();
+    BufReader::new(s).read_line(&mut reply)?;
+    parse_json(reply.trim())
 }
 
 /// One connection's worth of open-loop traffic: send this connection's
@@ -97,6 +124,7 @@ fn drive_connection(
     let interval = Duration::from_secs_f64(args.conns as f64 / args.rate.max(1.0));
     let mut sender = stream;
     let deadline_cut = (args.deadline_frac * args.requests as f64) as u64;
+    let model = json_str(&args.model);
     for (k, &id) in ids.iter().enumerate() {
         let image = image_for(id, h, w, c);
         let deadline = if id < deadline_cut {
@@ -105,7 +133,8 @@ fn drive_connection(
             String::new()
         };
         let line = format!(
-            "{{\"id\": {id}, \"h\": {h}, \"w\": {w}, \"c\": {c}, \"bits\": \"{}\"{deadline}}}\n",
+            "{{\"id\": {id}, \"model\": {model}, \"h\": {h}, \"w\": {w}, \"c\": {c}, \
+             \"bits\": \"{}\"{deadline}}}\n",
             pack_bits(&image.data)
         );
         sender.write_all(line.as_bytes())?;
@@ -129,12 +158,30 @@ fn percentile(sorted: &[u64], q: f64) -> u64 {
 
 fn main() -> anyhow::Result<()> {
     let args = parse_args();
-    let (net, weights) =
-        demo_network(&args.model).ok_or_else(|| anyhow::anyhow!("unknown model {}", args.model))?;
-    let l0 = &net.layers[0];
-    let input = (l0.y1, l0.x1, l0.z1);
-    let oracle =
-        if args.verify { Some(Arc::new(BatchExecutor::new(net, weights)?)) } else { None };
+    let model = match &args.model_file {
+        Some(path) => Model::load(path)?,
+        None => Model::demo(&args.model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {} (pass --model-file?)", args.model))?,
+    };
+    let input = model.input_dims();
+    let oracle = if args.verify { Some(Arc::new(BatchExecutor::for_model(&model)?)) } else { None };
+
+    if args.load_model {
+        let line = format!(
+            "{{\"op\": \"load_model\", \"name\": {}, \"model\": {}}}",
+            json_str(&args.model),
+            model.to_json()
+        );
+        let reply = control_op(&args.addr, &line)?;
+        if reply.get("ok") != Some(&Json::Bool(true)) {
+            anyhow::bail!(
+                "load_model '{}' refused: {}",
+                args.model,
+                reply.get("error").and_then(Json::as_str).unwrap_or("?")
+            );
+        }
+        println!("hot-loaded model '{}' onto {}", args.model, args.addr);
+    }
 
     println!(
         "load_client: {} requests @ {} req/s (burst {}) over {} conns to {} [model {}]",
@@ -223,15 +270,28 @@ fn main() -> anyhow::Result<()> {
         occupancy.iter().max().copied().unwrap_or(0)
     );
 
-    if args.drain {
-        let mut s = TcpStream::connect(&args.addr)?;
-        s.write_all(b"{\"op\": \"drain\"}\n")?;
-        let mut ack = String::new();
-        BufReader::new(s).read_line(&mut ack)?;
-        println!("drain ack: {}", ack.trim());
+    let mut failed = false;
+    if args.unload {
+        let line = format!("{{\"op\": \"unload_model\", \"name\": {}}}", json_str(&args.model));
+        let reply = control_op(&args.addr, &line)?;
+        let accounted = reply.get("accounted") == Some(&Json::Bool(true));
+        if reply.get("ok") != Some(&Json::Bool(true)) || !accounted {
+            eprintln!("FAIL: unload '{}' not cleanly accounted: {reply:?}", args.model);
+            failed = true;
+        } else {
+            println!(
+                "unloaded model '{}' — accounted, {} completed",
+                args.model,
+                reply.get("completed").and_then(Json::as_u64).unwrap_or(0)
+            );
+        }
     }
 
-    let mut failed = false;
+    if args.drain {
+        let reply = control_op(&args.addr, "{\"op\": \"drain\"}")?;
+        println!("drain ack: {reply:?}");
+    }
+
     if responses.len() != args.requests {
         eprintln!("FAIL: {} responses for {} requests", responses.len(), args.requests);
         failed = true;

@@ -19,8 +19,8 @@
 //! `cargo bench --bench batch_throughput -- --perf-out perf-report.json`
 
 use std::time::Instant;
-use tulip::bnn::tensor::{BinWeights, BitTensor};
-use tulip::bnn::{tiny_bnn, Network};
+use tulip::bnn::tensor::BitTensor;
+use tulip::bnn::Model;
 use tulip::coordinator::{BatchExecutor, BatchRequest, PerfReport};
 use tulip::metrics::MetricsRegistry;
 use tulip::util::bench::print_table;
@@ -71,21 +71,14 @@ fn write_report(serial_ips: f64, rows: &[SweepRow], best_ips: f64) {
     println!("wrote BENCH_batch_throughput.json (best {:.2}x serial)", best_ips / serial_ips);
 }
 
-fn weights_for(net: &Network) -> Vec<BinWeights> {
-    net.layers
-        .iter()
-        .enumerate()
-        .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 1000 + i as u64))
-        .collect()
-}
-
 fn make_exec(threads: usize) -> BatchExecutor {
-    let net = tiny_bnn(16, 8, 4);
-    let weights = weights_for(&net);
+    // The built-in "tiny" demo model: tiny_bnn(16, 8, 4) with the same
+    // deterministic weights every serving component builds.
+    let model = Model::demo("tiny").expect("built-in demo model");
     // 8 PEs per worker: plenty for the tiny net's widest layer and cheap
     // to replicate per thread. All executors share the global program
     // cache, exactly like production serving would.
-    BatchExecutor::new(net, weights).unwrap().with_array(2, 4).with_threads(threads)
+    BatchExecutor::for_model(&model).unwrap().with_array(2, 4).with_threads(threads)
 }
 
 fn main() {

@@ -14,13 +14,13 @@
 use tulip::arch::unit::{PeArray, SlicedArray};
 use tulip::bnn::layer::LayerKind;
 use tulip::bnn::tensor::{BinWeights, BitTensor};
-use tulip::bnn::{alexnet, binarynet_cifar10, tiny_bnn, Layer};
+use tulip::bnn::{alexnet, binarynet_cifar10, tiny_bnn, Layer, Model};
 use tulip::config::ArchConfig;
 use tulip::coordinator::NetworkPerf;
 use tulip::pe::TulipPe;
 use tulip::scheduler::adder_tree;
 use tulip::scheduler::seqgen::{OpDesc, SequenceGenerator};
-use tulip::sim::cycle::{self, SlicedWeights};
+use tulip::sim::cycle;
 use tulip::util::bench::{bench, BenchResult};
 
 fn json_str(s: &str) -> String {
@@ -136,25 +136,17 @@ fn main() {
     // same warm program cache, scalar reference engine vs the 64-lane SWAR
     // engine. Both closures reuse the array (forward_* resets stats on
     // entry), so the measurement is pure execution, not setup.
-    let net = tiny_bnn(16, 8, 10);
-    let net_weights: Vec<BinWeights> = net
-        .layers
-        .iter()
-        .enumerate()
-        .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 40 + i as u64))
-        .collect();
-    let packed = SlicedWeights::pack(&net, &net_weights);
+    let model = Model::random(tiny_bnn(16, 8, 10), 40).expect("demo network is valid");
     let image = BitTensor::random(16, 16, 8, 77);
     let mut sg_fwd = SequenceGenerator::new();
     let mut sg_sliced = SequenceGenerator::with_cache(sg_fwd.cache());
     let mut array = PeArray::new(2, 4);
     let mut arr = SlicedArray::new(2, 4);
     let scalar = bench("forward tiny_bnn(16,8,10) scalar", 5, || {
-        cycle::forward_bin_cycle(&mut array, &mut sg_fwd, &image, &net, &net_weights).cycles
+        model.forward_scalar(&mut array, &mut sg_fwd, &image).cycles
     });
     let sliced = bench("forward tiny_bnn(16,8,10) bit-sliced", 5, || {
-        cycle::forward_bin_sliced(&mut arr, &mut sg_sliced, &image, &net, &net_weights, &packed)
-            .cycles
+        model.forward_sliced(&mut arr, &mut sg_sliced, &image).cycles
     });
     println!(
         "\nforward speedup (scalar / bit-sliced): {:.2}x",

@@ -4,13 +4,16 @@
 
 pub mod bitpack;
 pub mod layer;
+pub mod model;
 pub mod reference;
 pub mod tensor;
 pub mod zoo;
 
 pub use layer::{Layer, LayerKind};
+pub use model::Model;
 pub use zoo::{alexnet, binarynet_cifar10, mnist_mlp, svhn_net, tiny_bnn};
 
+use crate::error::Error;
 
 /// A BNN as a sequence of layers (the DAG of §I specialized to the chain
 /// topology both evaluation networks have).
@@ -49,14 +52,17 @@ impl Network {
 
     /// Sanity-check layer chaining: each layer's input dims must match the
     /// previous layer's output dims.
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), Error> {
+        if self.layers.is_empty() {
+            return Err(Error::InvalidNetwork(format!("network '{}' has no layers", self.name)));
+        }
         for w in self.layers.windows(2) {
             let (a, b) = (&w[0], &w[1]);
             let (ox, oy, oz) = a.output_dims_after_pool();
             let flat_ok = b.is_fc() && b.z1 == ox * oy * oz;
             let dims_ok = b.x1 == ox && b.y1 == oy && b.z1 == oz;
             if !(dims_ok || flat_ok) {
-                return Err(format!(
+                return Err(Error::InvalidNetwork(format!(
                     "layer '{}' output {:?} does not feed '{}' input ({},{},{})",
                     a.name,
                     (ox, oy, oz),
@@ -64,7 +70,7 @@ impl Network {
                     b.x1,
                     b.y1,
                     b.z1
-                ));
+                )));
             }
         }
         Ok(())

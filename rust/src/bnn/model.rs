@@ -1,0 +1,523 @@
+//! `model` — the loadable BNN artifact the rest of the crate consumes.
+//!
+//! TULIP's premise is an *arbitrary* BNN executing on a fixed PE fabric
+//! (§IV mapping algorithms), so the network description is data, not code:
+//! a [`Model`] owns a validated [`Network`] plus its per-layer weights and
+//! lazily builds the engine-specific packings
+//! ([`SlicedWeights`]/[`PackedWeights`]) on first use. The type is a cheap
+//! `Arc` handle — clones share the caches — which is what lets the serve
+//! registry hand the same artifact to an executor, a batcher lane and an
+//! oracle client without re-packing.
+//!
+//! ## On-disk format: `tulip.model/v1`
+//!
+//! One JSON document (the std-only parser/encoder shared with
+//! [`serve::protocol`](crate::serve::protocol) — no serde in the
+//! dependency set):
+//!
+//! ```json
+//! {"schema": "tulip.model/v1", "name": "tiny-bnn-16", "dataset": "synthetic",
+//!  "layers": [{"name": "conv1", "kind": "conv_bin", "x1": 16, "y1": 16,
+//!              "z1": 8, "k": 3, "stride": 1, "padding": 1, "z2": 8,
+//!              "pool": [2, 2], "image_parts": 1}, …],
+//!  "weights": [{"signs": "a3f0…", "thresholds": [36, 41, …]}, …]}
+//! ```
+//!
+//! `signs` is the layer's ±1 weight matrix, filter-major, one bit per
+//! weight (`+1 → 1`), packed LSB-first into bytes and hex-encoded exactly
+//! like wire activations ([`pack_bits`]). `thresholds` are the per-channel
+//! popcount thresholds with batch-norm folded in. Every structural
+//! mistake — bad JSON, missing field, wrong blob length, unchained layers
+//! — surfaces as a typed [`Error`], never a panic.
+
+use super::tensor::{BinWeights, BitTensor};
+use super::{Layer, LayerKind, Network};
+use crate::arch::unit::{PeArray, SlicedArray};
+use crate::bnn::bitpack::PackedWeights;
+use crate::error::Error;
+use crate::scheduler::seqgen::SequenceGenerator;
+use crate::serve::protocol::{json_str, pack_bits, parse_json, unpack_bits, Json};
+use crate::sim::cycle::{ForwardResult, SlicedWeights};
+use std::path::Path;
+use std::sync::{Arc, OnceLock};
+
+/// The `schema` string every `tulip.model/v1` document must carry.
+pub const MODEL_SCHEMA: &str = "tulip.model/v1";
+
+/// A validated, immutable BNN artifact: network description + weights +
+/// lazily-built engine packings. Cheap to clone (an `Arc` handle); see the
+/// [module docs](self) for the on-disk format.
+#[derive(Debug, Clone)]
+pub struct Model {
+    inner: Arc<Inner>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    net: Network,
+    weights: Vec<BinWeights>,
+    sliced: OnceLock<SlicedWeights>,
+    packed: OnceLock<Vec<PackedWeights>>,
+}
+
+impl Model {
+    /// Build a model from a network and its per-layer weights, validating
+    /// layer chaining and weight shapes. This is the only constructor —
+    /// every loaded or assembled model has passed it.
+    pub fn from_parts(
+        net: Network,
+        weights: Vec<BinWeights>,
+    ) -> std::result::Result<Self, Error> {
+        net.validate()?;
+        if weights.len() != net.layers.len() {
+            return Err(Error::InvalidNetwork(format!(
+                "{} weight sets for {} layers",
+                weights.len(),
+                net.layers.len()
+            )));
+        }
+        for (l, w) in net.layers.iter().zip(&weights) {
+            if w.z2 != l.z2 || w.fanin != l.fanin() {
+                return Err(Error::InvalidNetwork(format!(
+                    "layer '{}' expects {}×{} weights, got {}×{}",
+                    l.name,
+                    l.z2,
+                    l.fanin(),
+                    w.z2,
+                    w.fanin
+                )));
+            }
+            if w.data.len() != w.z2 * w.fanin {
+                return Err(Error::InvalidNetwork(format!(
+                    "layer '{}' weight blob holds {} entries, expected {}",
+                    l.name,
+                    w.data.len(),
+                    w.z2 * w.fanin
+                )));
+            }
+            if w.thresholds.len() != l.z2 {
+                return Err(Error::InvalidNetwork(format!(
+                    "layer '{}' has {} thresholds for {} output channels",
+                    l.name,
+                    w.thresholds.len(),
+                    l.z2
+                )));
+            }
+        }
+        Ok(Model {
+            inner: Arc::new(Inner {
+                net,
+                weights,
+                sliced: OnceLock::new(),
+                packed: OnceLock::new(),
+            }),
+        })
+    }
+
+    /// A model with deterministic pseudo-random weights: layer `i` gets
+    /// [`BinWeights::random`] seeded `base_seed + i`. The seeding scheme is
+    /// part of the crate's compatibility surface — clients and servers
+    /// built independently from the same `(network, base_seed)` match bit
+    /// for bit.
+    pub fn random(net: Network, base_seed: u64) -> std::result::Result<Self, Error> {
+        let weights = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), base_seed + i as u64))
+            .collect();
+        Model::from_parts(net, weights)
+    }
+
+    /// The demo models `tulip serve`, `load_client` and the integration
+    /// tests agree on, keyed by name (weights seeded with base 1000, see
+    /// [`Model::random`]): `"tiny"` → `tiny_bnn(16, 8, 4)` (16×16×8
+    /// input), `"tiny8"` → `tiny_bnn(8, 4, 3)` (8×8×4 input).
+    pub fn demo(name: &str) -> Option<Model> {
+        let net = match name {
+            "tiny" => super::tiny_bnn(16, 8, 4),
+            "tiny8" => super::tiny_bnn(8, 4, 3),
+            _ => return None,
+        };
+        Some(Model::random(net, 1000).expect("demo networks are valid by construction"))
+    }
+
+    /// The network description.
+    pub fn network(&self) -> &Network {
+        &self.inner.net
+    }
+
+    /// Per-layer weights, index-aligned with `network().layers`.
+    pub fn weights(&self) -> &[BinWeights] {
+        &self.inner.weights
+    }
+
+    /// The network's name.
+    pub fn name(&self) -> &str {
+        &self.inner.net.name
+    }
+
+    /// Input geometry `(h, w, c)` of the first layer.
+    pub fn input_dims(&self) -> (usize, usize, usize) {
+        let l0 = &self.inner.net.layers[0];
+        (l0.y1, l0.x1, l0.z1)
+    }
+
+    /// Number of classes (output length of the final layer).
+    pub fn num_classes(&self) -> usize {
+        self.inner.net.layers.last().expect("validated networks are non-empty").z2
+    }
+
+    /// Total weight bits across all layers.
+    pub fn weight_bits(&self) -> u64 {
+        self.inner.net.layers.iter().map(|l| l.weight_bits()).sum()
+    }
+
+    /// Can the serving engines run this model bit-true? Requires every
+    /// layer binary (integer layers route to MACs the simulator does not
+    /// serve, §V-C) and an FC classifier head.
+    pub fn servable(&self) -> std::result::Result<(), Error> {
+        for l in &self.inner.net.layers {
+            if !l.is_binary() {
+                return Err(Error::Unservable(format!(
+                    "layer '{}' is integer ({:?}); the bit-true engines serve binary layers only",
+                    l.name, l.kind
+                )));
+            }
+        }
+        let last = self.inner.net.layers.last().expect("validated networks are non-empty");
+        if !last.is_fc() {
+            return Err(Error::Unservable(format!(
+                "final layer '{}' is not fully connected — no classifier head to read scores from",
+                last.name
+            )));
+        }
+        Ok(())
+    }
+
+    /// The bit-sliced engine's per-layer weight packing, built on first
+    /// use and shared by every clone of this model.
+    pub fn sliced(&self) -> &SlicedWeights {
+        self.inner
+            .sliced
+            .get_or_init(|| SlicedWeights::pack(&self.inner.net, &self.inner.weights))
+    }
+
+    /// Per-layer sign-packed filters ([`PackedWeights`]), built on first
+    /// use and shared by every clone of this model.
+    pub fn packed(&self) -> &[PackedWeights] {
+        self.inner.packed.get_or_init(|| self.inner.weights.iter().map(PackedWeights::pack).collect())
+    }
+
+    /// Bit-true whole-network forward pass on the scalar engine (the
+    /// readable reference oracle).
+    pub fn forward_scalar(
+        &self,
+        array: &mut PeArray,
+        sg: &mut SequenceGenerator,
+        input: &BitTensor,
+    ) -> ForwardResult {
+        crate::sim::cycle::forward_scalar_impl(array, sg, input, &self.inner.net, &self.inner.weights)
+    }
+
+    /// Bit-true whole-network forward pass on the 64-lane bit-sliced
+    /// engine — bit-identical to [`Model::forward_scalar`].
+    pub fn forward_sliced(
+        &self,
+        arr: &mut SlicedArray,
+        sg: &mut SequenceGenerator,
+        input: &BitTensor,
+    ) -> ForwardResult {
+        crate::sim::cycle::forward_sliced_impl(
+            arr,
+            sg,
+            input,
+            &self.inner.net,
+            &self.inner.weights,
+            self.sliced(),
+        )
+    }
+
+    /// Encode as one compact `tulip.model/v1` JSON line (single-line by
+    /// design, so an artifact can ride the JSON-lines wire protocol
+    /// unmodified — see the `load_model` op).
+    pub fn to_json(&self) -> String {
+        let net = &self.inner.net;
+        let layers: Vec<String> = net.layers.iter().map(layer_json).collect();
+        let weights: Vec<String> = self.inner.weights.iter().map(weight_json).collect();
+        format!(
+            "{{\"schema\": {}, \"name\": {}, \"dataset\": {}, \"layers\": [{}], \"weights\": [{}]}}",
+            json_str(MODEL_SCHEMA),
+            json_str(&net.name),
+            json_str(&net.dataset),
+            layers.join(", "),
+            weights.join(", ")
+        )
+    }
+
+    /// Decode a `tulip.model/v1` document.
+    pub fn from_json(s: &str) -> std::result::Result<Self, Error> {
+        let v = parse_json(s).map_err(|e| Error::ModelFormat(format!("{e:#}")))?;
+        Model::from_json_value(&v)
+    }
+
+    /// Decode an already-parsed `tulip.model/v1` document (the `load_model`
+    /// wire op arrives pre-parsed inside its request line).
+    pub fn from_json_value(v: &Json) -> std::result::Result<Self, Error> {
+        let schema = str_field(v, "schema")?;
+        if schema != MODEL_SCHEMA {
+            return Err(Error::UnsupportedVersion {
+                found: schema.to_string(),
+                expected: MODEL_SCHEMA,
+            });
+        }
+        let name = str_field(v, "name")?.to_string();
+        let dataset = str_field(v, "dataset")?.to_string();
+        let layers = arr_field(v, "layers")?
+            .iter()
+            .enumerate()
+            .map(|(i, l)| layer_from_json(l).map_err(|e| e.in_context(&format!("layers[{i}]"))))
+            .collect::<std::result::Result<Vec<Layer>, Error>>()?;
+        let wdocs = arr_field(v, "weights")?;
+        if wdocs.len() != layers.len() {
+            return Err(Error::ModelFormat(format!(
+                "{} weight blobs for {} layers",
+                wdocs.len(),
+                layers.len()
+            )));
+        }
+        let weights = layers
+            .iter()
+            .zip(wdocs)
+            .enumerate()
+            .map(|(i, (l, w))| {
+                weights_from_json(w, l).map_err(|e| e.in_context(&format!("weights[{i}]")))
+            })
+            .collect::<std::result::Result<Vec<BinWeights>, Error>>()?;
+        Model::from_parts(Network { name, dataset, layers }, weights)
+    }
+
+    /// Load a model artifact from disk.
+    pub fn load(path: impl AsRef<Path>) -> std::result::Result<Self, Error> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|source| Error::Io { path: path.display().to_string(), source })?;
+        Model::from_json(text.trim())
+    }
+
+    /// Write the model artifact to disk (one JSON line + newline).
+    pub fn save(&self, path: impl AsRef<Path>) -> std::result::Result<(), Error> {
+        let path = path.as_ref();
+        let mut text = self.to_json();
+        text.push('\n');
+        std::fs::write(path, text)
+            .map_err(|source| Error::Io { path: path.display().to_string(), source })
+    }
+}
+
+impl Error {
+    /// Prefix a `ModelFormat` message with its document location.
+    fn in_context(self, ctx: &str) -> Error {
+        match self {
+            Error::ModelFormat(m) => Error::ModelFormat(format!("{ctx}: {m}")),
+            other => other,
+        }
+    }
+}
+
+fn kind_name(k: LayerKind) -> &'static str {
+    match k {
+        LayerKind::ConvInt => "conv_int",
+        LayerKind::ConvBin => "conv_bin",
+        LayerKind::FcInt => "fc_int",
+        LayerKind::FcBin => "fc_bin",
+    }
+}
+
+fn kind_from_name(s: &str) -> std::result::Result<LayerKind, Error> {
+    match s {
+        "conv_int" => Ok(LayerKind::ConvInt),
+        "conv_bin" => Ok(LayerKind::ConvBin),
+        "fc_int" => Ok(LayerKind::FcInt),
+        "fc_bin" => Ok(LayerKind::FcBin),
+        other => Err(Error::ModelFormat(format!(
+            "unknown layer kind '{other}' (conv_int|conv_bin|fc_int|fc_bin)"
+        ))),
+    }
+}
+
+fn layer_json(l: &Layer) -> String {
+    let pool = match l.pool {
+        Some((k, s)) => format!("[{k}, {s}]"),
+        None => "null".into(),
+    };
+    format!(
+        "{{\"name\": {}, \"kind\": {}, \"x1\": {}, \"y1\": {}, \"z1\": {}, \"k\": {}, \
+         \"stride\": {}, \"padding\": {}, \"z2\": {}, \"pool\": {}, \"image_parts\": {}}}",
+        json_str(&l.name),
+        json_str(kind_name(l.kind)),
+        l.x1,
+        l.y1,
+        l.z1,
+        l.k,
+        l.stride,
+        l.padding,
+        l.z2,
+        pool,
+        l.image_parts
+    )
+}
+
+fn weight_json(w: &BinWeights) -> String {
+    let signs: Vec<bool> = w.data.iter().map(|&v| v > 0).collect();
+    let thresholds: Vec<String> = w.thresholds.iter().map(|t| t.to_string()).collect();
+    format!(
+        "{{\"signs\": {}, \"thresholds\": [{}]}}",
+        json_str(&pack_bits(&signs)),
+        thresholds.join(", ")
+    )
+}
+
+fn str_field<'a>(v: &'a Json, key: &str) -> std::result::Result<&'a str, Error> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::ModelFormat(format!("missing string field '{key}'")))
+}
+
+fn usize_field(v: &Json, key: &str) -> std::result::Result<usize, Error> {
+    v.get(key)
+        .and_then(Json::as_u64)
+        .map(|n| n as usize)
+        .ok_or_else(|| Error::ModelFormat(format!("missing non-negative integer field '{key}'")))
+}
+
+fn arr_field<'a>(v: &'a Json, key: &str) -> std::result::Result<&'a [Json], Error> {
+    match v.get(key) {
+        Some(Json::Arr(items)) => Ok(items),
+        _ => Err(Error::ModelFormat(format!("missing array field '{key}'"))),
+    }
+}
+
+fn layer_from_json(v: &Json) -> std::result::Result<Layer, Error> {
+    let kind = kind_from_name(str_field(v, "kind")?)?;
+    let pool = match v.get("pool") {
+        None | Some(Json::Null) => None,
+        Some(Json::Arr(items)) => {
+            let two: Vec<usize> =
+                items.iter().filter_map(Json::as_u64).map(|n| n as usize).collect();
+            if two.len() != 2 || two.len() != items.len() {
+                return Err(Error::ModelFormat(
+                    "'pool' must be null or a [window, stride] pair".into(),
+                ));
+            }
+            Some((two[0], two[1]))
+        }
+        Some(_) => {
+            return Err(Error::ModelFormat("'pool' must be null or a [window, stride] pair".into()))
+        }
+    };
+    Ok(Layer {
+        name: str_field(v, "name")?.to_string(),
+        kind,
+        x1: usize_field(v, "x1")?,
+        y1: usize_field(v, "y1")?,
+        z1: usize_field(v, "z1")?,
+        k: usize_field(v, "k")?,
+        stride: usize_field(v, "stride")?,
+        padding: usize_field(v, "padding")?,
+        z2: usize_field(v, "z2")?,
+        pool,
+        input_bits: if matches!(kind, LayerKind::ConvInt | LayerKind::FcInt) { 12 } else { 1 },
+        image_parts: usize_field(v, "image_parts")?,
+    })
+}
+
+fn weights_from_json(v: &Json, layer: &Layer) -> std::result::Result<BinWeights, Error> {
+    let n = layer.z2 * layer.fanin();
+    let hex = str_field(v, "signs")?;
+    let signs = unpack_bits(hex, n).map_err(|e| Error::ModelFormat(format!("'signs': {e:#}")))?;
+    let data: Vec<i8> = signs.iter().map(|&b| if b { 1i8 } else { -1 }).collect();
+    let Some(Json::Arr(items)) = v.get("thresholds") else {
+        return Err(Error::ModelFormat("missing array field 'thresholds'".into()));
+    };
+    let thresholds: Vec<i64> = items.iter().filter_map(Json::as_i64).collect();
+    if thresholds.len() != items.len() {
+        return Err(Error::ModelFormat("non-integer threshold".into()));
+    }
+    if thresholds.len() != layer.z2 {
+        return Err(Error::ModelFormat(format!(
+            "{} thresholds for {} output channels",
+            thresholds.len(),
+            layer.z2
+        )));
+    }
+    Ok(BinWeights { z2: layer.z2, fanin: layer.fanin(), data, thresholds })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::tiny_bnn;
+
+    #[test]
+    fn from_parts_validates_shapes() {
+        let net = tiny_bnn(8, 4, 3);
+        let mut weights: Vec<BinWeights> = net
+            .layers
+            .iter()
+            .map(|l| BinWeights::random(l.z2, l.fanin(), 7))
+            .collect();
+        assert!(Model::from_parts(net.clone(), weights.clone()).is_ok());
+        weights[1].thresholds.pop();
+        match Model::from_parts(net.clone(), weights).unwrap_err() {
+            Error::InvalidNetwork(m) => assert!(m.contains("thresholds"), "{m}"),
+            other => panic!("expected InvalidNetwork, got {other:?}"),
+        }
+        match Model::from_parts(net, Vec::new()).unwrap_err() {
+            Error::InvalidNetwork(m) => assert!(m.contains("weight sets"), "{m}"),
+            other => panic!("expected InvalidNetwork, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let m = Model::demo("tiny8").unwrap();
+        let back = Model::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.to_json(), m.to_json());
+        assert_eq!(back.network().layers.len(), m.network().layers.len());
+        for (a, b) in back.weights().iter().zip(m.weights()) {
+            assert_eq!(a.data, b.data);
+            assert_eq!(a.thresholds, b.thresholds);
+        }
+    }
+
+    #[test]
+    fn wrong_schema_is_typed() {
+        let doc =
+            Model::demo("tiny8").unwrap().to_json().replace("tulip.model/v1", "tulip.model/v9");
+        match Model::from_json(&doc).unwrap_err() {
+            Error::UnsupportedVersion { found, expected } => {
+                assert_eq!(found, "tulip.model/v9");
+                assert_eq!(expected, MODEL_SCHEMA);
+            }
+            other => panic!("expected UnsupportedVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn servable_gates_integer_and_headless_nets() {
+        assert!(Model::demo("tiny").unwrap().servable().is_ok());
+        let alex = Model::random(crate::bnn::alexnet(), 3).unwrap();
+        assert!(matches!(alex.servable(), Err(Error::Unservable(_))));
+    }
+
+    #[test]
+    fn caches_are_shared_across_clones() {
+        let m = Model::demo("tiny8").unwrap();
+        let c = m.clone();
+        let a = m.sliced() as *const SlicedWeights;
+        let b = c.sliced() as *const SlicedWeights;
+        assert_eq!(a, b, "clones share the lazily-built packing");
+        assert_eq!(m.packed().len(), m.network().layers.len());
+    }
+}

@@ -13,18 +13,12 @@
 //! exactly the sum of the per-image single-run numbers.
 //!
 //! ```no_run
-//! use tulip::bnn::tensor::{BinWeights, BitTensor};
-//! use tulip::bnn::tiny_bnn;
+//! use tulip::bnn::tensor::BitTensor;
+//! use tulip::bnn::{tiny_bnn, Model};
 //! use tulip::coordinator::{BatchExecutor, BatchRequest};
 //!
-//! let net = tiny_bnn(16, 8, 4);
-//! let weights: Vec<BinWeights> = net
-//!     .layers
-//!     .iter()
-//!     .enumerate()
-//!     .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 1000 + i as u64))
-//!     .collect();
-//! let exec = BatchExecutor::new(net, weights).unwrap();
+//! let model = Model::random(tiny_bnn(16, 8, 4), 1000).unwrap();
+//! let exec = BatchExecutor::for_model(&model).unwrap();
 //! let req = BatchRequest::new((0..32).map(|i| BitTensor::random(16, 16, 8, i)).collect());
 //! let result = exec.run(&req).unwrap();
 //! println!("{:?} energy {:.1} nJ", result.classes(), result.energy().total_pj() * 1e-3);
@@ -32,17 +26,16 @@
 
 use crate::arch::unit::{PeArray, SlicedArray};
 use crate::bnn::tensor::{BinWeights, BitTensor};
-use crate::bnn::Network;
+use crate::bnn::{Model, Network};
 use crate::config::ArchConfig;
 use crate::coordinator::exec::NetworkPerf;
 use crate::energy::{calib, Activity, EnergyBreakdown, EnergyModel};
+use crate::error::Error;
 use crate::metrics::MetricsRegistry;
 use crate::pe::PeStats;
 use crate::scheduler::seqgen::SequenceGenerator;
 use crate::scheduler::ProgramCache;
-use crate::sim::cycle::{
-    forward_bin_cycle, forward_bin_sliced, ForwardEngine, LayerObs, SlicedWeights,
-};
+use crate::sim::cycle::{ForwardEngine, LayerObs};
 use crate::Result;
 use anyhow::ensure;
 use rayon::prelude::*;
@@ -239,18 +232,14 @@ impl BatchResult {
     }
 }
 
-/// The batch executor: a frozen binary network + weights, a shared program
-/// cache, and a rayon-sharded bit-true backend. Construct once, serve many
-/// batches; the executor is `Sync`, so one instance can serve concurrent
-/// callers. A dedicated worker pool (when requested via
+/// The batch executor: a frozen [`Model`], a shared program cache, and a
+/// rayon-sharded bit-true backend. Construct once, serve many batches; the
+/// executor is `Sync`, so one instance can serve concurrent callers. A
+/// dedicated worker pool (when requested via
 /// [`BatchExecutor::with_threads`]) is built once at configuration time,
 /// not per batch.
 pub struct BatchExecutor {
-    net: Network,
-    weights: Vec<BinWeights>,
-    /// Lane-packed weights for the bit-sliced engine (prepared once at
-    /// construction, like the hardware's kernel-buffer load).
-    sliced: SlicedWeights,
+    model: Model,
     engine: ForwardEngine,
     cache: Arc<ProgramCache>,
     units: usize,
@@ -262,8 +251,8 @@ pub struct BatchExecutor {
 impl std::fmt::Debug for BatchExecutor {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("BatchExecutor")
-            .field("network", &self.net.name)
-            .field("layers", &self.net.layers.len())
+            .field("network", &self.model.name())
+            .field("layers", &self.model.network().layers.len())
             .field("engine", &self.engine)
             .field("units", &self.units)
             .field("pes_per_unit", &self.pes_per_unit)
@@ -279,41 +268,35 @@ enum Scratch {
 }
 
 impl BatchExecutor {
-    /// Build an executor for a fully binary network ending in an FC
-    /// classifier head. Shapes are validated once, here, not per batch.
-    pub fn new(net: Network, weights: Vec<BinWeights>) -> Result<Self> {
-        ensure!(net.layers.len() == weights.len(), "one weight set per layer");
-        ensure!(
-            net.layers.iter().all(|l| l.is_binary()),
-            "batched bit-true serving covers binary networks only (§V-C routes integer layers to MACs)"
-        );
-        ensure!(
-            net.layers.last().is_some_and(|l| l.is_fc()),
-            "network must end in an FC classifier head"
-        );
-        for (l, w) in net.layers.iter().zip(&weights) {
-            ensure!(
-                w.z2 == l.z2 && w.fanin == l.fanin(),
-                "weight shape mismatch at layer '{}': ({}, {}) vs ({}, {})",
-                l.name,
-                w.z2,
-                w.fanin,
-                l.z2,
-                l.fanin()
-            );
-        }
-        net.validate().map_err(anyhow::Error::msg)?;
-        let sliced = SlicedWeights::pack(&net, &weights);
+    /// Build an executor for a servable [`Model`] (fully binary, FC
+    /// classifier head — checked here, typed, not per batch). The model
+    /// handle is cloned cheaply; its lane packing is primed eagerly, like
+    /// the hardware's kernel-buffer load, so the first batch pays no
+    /// packing cost.
+    pub fn for_model(model: &Model) -> std::result::Result<Self, Error> {
+        model.servable()?;
+        model.sliced();
         Ok(BatchExecutor {
-            net,
-            weights,
-            sliced,
+            model: model.clone(),
             engine: ForwardEngine::default(),
             cache: ProgramCache::global(),
             units: calib::NUM_MACS,
             pes_per_unit: calib::PES_PER_UNIT,
             pool: None,
         })
+    }
+
+    /// Deprecated tuple-shaped constructor — assemble a
+    /// [`Model`](crate::bnn::Model) with [`Model::from_parts`] and call
+    /// [`BatchExecutor::for_model`] instead.
+    #[deprecated(
+        since = "0.2.0",
+        note = "build a bnn::Model and call BatchExecutor::for_model; removed next release"
+    )]
+    #[doc(hidden)]
+    pub fn new(net: Network, weights: Vec<BinWeights>) -> Result<Self> {
+        let model = Model::from_parts(net, weights)?;
+        Ok(Self::for_model(&model)?)
     }
 
     /// Share a specific program cache (default: the process-global cache).
@@ -362,9 +345,15 @@ impl BatchExecutor {
         self
     }
 
-    /// The frozen network this executor serves.
+    /// The frozen model this executor serves.
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// The frozen network this executor serves (shorthand for
+    /// `model().network()`).
     pub fn network(&self) -> &Network {
-        &self.net
+        self.model.network()
     }
 
     /// A handle on this executor's shared program cache (for snapshotting
@@ -383,10 +372,8 @@ impl BatchExecutor {
         let _span = crate::metrics::span("batch.image");
         let t0 = Instant::now();
         let f = match scratch {
-            Scratch::Scalar(array) => forward_bin_cycle(array, sg, image, &self.net, &self.weights),
-            Scratch::Sliced(arr) => {
-                forward_bin_sliced(arr, sg, image, &self.net, &self.weights, &self.sliced)
-            }
+            Scratch::Scalar(array) => self.model.forward_scalar(array, sg, image),
+            Scratch::Sliced(arr) => self.model.forward_sliced(arr, sg, image),
         };
         let host_ns = t0.elapsed().as_nanos() as u64;
         let class = argmax(&f.scores);
@@ -428,18 +415,12 @@ impl BatchExecutor {
     /// batch.
     ///
     /// ```
-    /// use tulip::bnn::tensor::{BinWeights, BitTensor};
-    /// use tulip::bnn::tiny_bnn;
+    /// use tulip::bnn::tensor::BitTensor;
+    /// use tulip::bnn::{tiny_bnn, Model};
     /// use tulip::coordinator::{BatchExecutor, BatchRequest};
     ///
-    /// let net = tiny_bnn(8, 4, 3);
-    /// let weights: Vec<BinWeights> = net
-    ///     .layers
-    ///     .iter()
-    ///     .enumerate()
-    ///     .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 1 + i as u64))
-    ///     .collect();
-    /// let exec = BatchExecutor::new(net, weights)?.with_array(1, 4);
+    /// let model = Model::random(tiny_bnn(8, 4, 3), 1)?;
+    /// let exec = BatchExecutor::for_model(&model)?.with_array(1, 4);
     /// let req = BatchRequest::new(vec![BitTensor::random(8, 8, 4, 9)]);
     /// let result = exec.run(&req)?;
     /// assert_eq!(result.images.len(), 1);
@@ -508,17 +489,14 @@ impl BatchExecutor {
     }
 
     fn check_image(&self, index: usize, img: &BitTensor) -> Result<()> {
-        let l0 = &self.net.layers[0];
-        ensure!(
-            img.h == l0.y1 && img.w == l0.x1 && img.c == l0.z1,
-            "image {index}: got {}x{}x{}, network expects {}x{}x{}",
-            img.h,
-            img.w,
-            img.c,
-            l0.y1,
-            l0.x1,
-            l0.z1
-        );
+        let (h, w, c) = self.model.input_dims();
+        if img.h != h || img.w != w || img.c != c {
+            return Err(Error::ShapeMismatch(format!(
+                "image {index}: got {}x{}x{}, network expects {h}x{w}x{c}",
+                img.h, img.w, img.c
+            ))
+            .into());
+        }
         Ok(())
     }
 
@@ -598,14 +576,8 @@ mod tests {
     use crate::bnn::tiny_bnn;
 
     fn tiny_executor() -> BatchExecutor {
-        let net = tiny_bnn(8, 4, 3);
-        let weights: Vec<BinWeights> = net
-            .layers
-            .iter()
-            .enumerate()
-            .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 7 + i as u64))
-            .collect();
-        BatchExecutor::new(net, weights).unwrap().with_array(1, 4)
+        let model = Model::random(tiny_bnn(8, 4, 3), 7).unwrap();
+        BatchExecutor::for_model(&model).unwrap().with_array(1, 4)
     }
 
     #[test]
@@ -642,7 +614,7 @@ mod tests {
     fn executor_rejects_bad_inputs() {
         use crate::bnn::layer::LayerKind;
         use crate::bnn::{Layer, Network};
-        // Integer layer → rejected.
+        // Integer layer → typed Unservable at construction.
         let net = Network {
             name: "int".into(),
             dataset: "t".into(),
@@ -653,13 +625,14 @@ mod tests {
         };
         let w: Vec<BinWeights> =
             net.layers.iter().map(|l| BinWeights::random(l.z2, l.fanin(), 1)).collect();
-        assert!(BatchExecutor::new(net, w).is_err());
-        // Weight shape mismatch → rejected.
+        let model = Model::from_parts(net, w).unwrap();
+        assert!(matches!(BatchExecutor::for_model(&model), Err(Error::Unservable(_))));
+        // Weight shape mismatch → typed InvalidNetwork at model assembly.
         let net = tiny_bnn(8, 4, 3);
         let mut w: Vec<BinWeights> =
             net.layers.iter().map(|l| BinWeights::random(l.z2, l.fanin(), 1)).collect();
         w[1] = BinWeights::random(3, 9, 1);
-        assert!(BatchExecutor::new(net, w).is_err());
+        assert!(matches!(Model::from_parts(net, w), Err(Error::InvalidNetwork(_))));
         // Wrong image geometry → rejected per request.
         let exec = tiny_executor();
         let req = BatchRequest::new(vec![BitTensor::random(4, 4, 4, 1)]);

@@ -9,18 +9,12 @@
 //! documented in the repository README under *Observability*.
 //!
 //! ```
-//! use tulip::bnn::tensor::{BinWeights, BitTensor};
-//! use tulip::bnn::tiny_bnn;
+//! use tulip::bnn::tensor::BitTensor;
+//! use tulip::bnn::{tiny_bnn, Model};
 //! use tulip::coordinator::{BatchExecutor, BatchRequest, PerfReport};
 //!
-//! let net = tiny_bnn(8, 4, 3);
-//! let weights: Vec<BinWeights> = net
-//!     .layers
-//!     .iter()
-//!     .enumerate()
-//!     .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 1 + i as u64))
-//!     .collect();
-//! let exec = BatchExecutor::new(net, weights)?.with_array(1, 4);
+//! let model = Model::random(tiny_bnn(8, 4, 3), 1);
+//! let exec = BatchExecutor::for_model(&model)?.with_array(1, 4);
 //! let req = BatchRequest::new(vec![BitTensor::random(8, 8, 4, 2)]);
 //! let result = exec.run(&req)?;
 //! let report = PerfReport::from_batch(&exec, &result);
@@ -513,20 +507,14 @@ fn comma_lead(i: usize) -> &'static str {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bnn::tensor::{BinWeights, BitTensor};
-    use crate::bnn::tiny_bnn;
+    use crate::bnn::tensor::BitTensor;
+    use crate::bnn::{tiny_bnn, Model};
     use crate::coordinator::{BatchExecutor, BatchRequest};
     use crate::metrics::MetricsRegistry;
 
     fn tiny_report() -> PerfReport {
-        let net = tiny_bnn(8, 4, 3);
-        let weights: Vec<BinWeights> = net
-            .layers
-            .iter()
-            .enumerate()
-            .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 60 + i as u64))
-            .collect();
-        let exec = BatchExecutor::new(net, weights).unwrap().with_array(1, 4);
+        let model = Model::random(tiny_bnn(8, 4, 3), 60);
+        let exec = BatchExecutor::for_model(&model).unwrap().with_array(1, 4);
         let req = BatchRequest::new((0..3).map(|i| BitTensor::random(8, 8, 4, i)).collect());
         let result = exec.run(&req).unwrap();
         PerfReport::from_batch(&exec, &result)

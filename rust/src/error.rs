@@ -1,0 +1,137 @@
+//! `error` — the crate-wide typed error.
+//!
+//! Every fallible public API in the crate reports failures through
+//! [`Error`]: network/schedule validation, model-artifact parsing, serve
+//! routing and the wire protocol. The enum implements
+//! [`std::error::Error`], so it composes with `anyhow` (the crate-level
+//! [`Result`](crate::Result) alias) via `?` — callers that want typed
+//! matching get it, callers that just want context-chained reporting lose
+//! nothing.
+//!
+//! Stringly-typed errors (`Result<_, String>`) are gone from the public
+//! API as of the `Model` redesign; the variants below partition the
+//! failure domains instead.
+
+use std::fmt;
+
+/// The crate-wide error type.
+///
+/// Variants partition by failure domain rather than by module, so a
+/// caller can match on *what went wrong* (bad artifact vs. unknown model
+/// vs. malformed wire line) without knowing which layer detected it.
+#[derive(Debug)]
+#[non_exhaustive]
+pub enum Error {
+    /// A [`Network`](crate::bnn::Network) is internally inconsistent
+    /// (layer chaining, weight shapes, empty layer list).
+    InvalidNetwork(String),
+    /// A schedule or control word violates a hardware constraint
+    /// (see [`ControlWord::validate`](crate::pe::ControlWord::validate)).
+    InvalidSchedule(String),
+    /// An input tensor does not match the shape a network expects.
+    ShapeMismatch(String),
+    /// A structurally valid model cannot run on the serving engines
+    /// (e.g. integer first layer, non-FC head).
+    Unservable(String),
+    /// A serve request referenced a model name the registry doesn't hold.
+    UnknownModel(String),
+    /// `load_model` for a name that is already registered.
+    DuplicateModel(String),
+    /// A `tulip.model/v1` document is malformed (bad JSON, missing or
+    /// mistyped field, wrong weight-blob length).
+    ModelFormat(String),
+    /// A model artifact declares a schema this build doesn't speak.
+    UnsupportedVersion {
+        /// The `schema` string found in the document.
+        found: String,
+        /// The schema string this build expects.
+        expected: &'static str,
+    },
+    /// An I/O failure while reading or writing an artifact.
+    Io {
+        /// The path being read or written.
+        path: String,
+        /// The underlying OS error.
+        source: std::io::Error,
+    },
+    /// A malformed client line on the serve wire. `id` is the request id
+    /// if one was parsed (0 otherwise) so the error reply can blame it.
+    Protocol {
+        /// Request id to blame in the error reply (0 if unknown).
+        id: u64,
+        /// Human-readable description of the parse failure.
+        msg: String,
+    },
+}
+
+impl Error {
+    /// The request id a protocol error should be blamed on (0 when the
+    /// failure is not tied to a specific request).
+    pub fn request_id(&self) -> u64 {
+        match self {
+            Error::Protocol { id, .. } => *id,
+            _ => 0,
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidNetwork(m) => write!(f, "invalid network: {m}"),
+            Error::InvalidSchedule(m) => write!(f, "invalid schedule: {m}"),
+            Error::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
+            Error::Unservable(m) => write!(f, "model not servable: {m}"),
+            Error::UnknownModel(n) => write!(f, "unknown model '{n}'"),
+            Error::DuplicateModel(n) => write!(f, "model '{n}' already loaded"),
+            Error::ModelFormat(m) => write!(f, "bad model document: {m}"),
+            Error::UnsupportedVersion { found, expected } => {
+                write!(f, "unsupported model schema '{found}' (expected '{expected}')")
+            }
+            Error::Io { path, source } => write!(f, "{path}: {source}"),
+            Error::Protocol { id, msg } => write!(f, "protocol error (id {id}): {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_source() {
+        let e = Error::UnknownModel("alex".into());
+        assert_eq!(e.to_string(), "unknown model 'alex'");
+        assert!(std::error::Error::source(&e).is_none());
+        let io = Error::Io {
+            path: "/tmp/x".into(),
+            source: std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        };
+        assert!(io.to_string().contains("/tmp/x"));
+        assert!(std::error::Error::source(&io).is_some());
+    }
+
+    #[test]
+    fn request_id_blame() {
+        assert_eq!(Error::Protocol { id: 7, msg: "x".into() }.request_id(), 7);
+        assert_eq!(Error::ShapeMismatch("x".into()).request_id(), 0);
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn f() -> crate::Result<()> {
+            Err(Error::Unservable("integer first layer".into()))?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("not servable"));
+    }
+}

@@ -46,6 +46,7 @@ pub mod bnn;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod error;
 pub mod metrics;
 pub mod neuron;
 pub mod pe;
@@ -54,6 +55,8 @@ pub mod scheduler;
 pub mod serve;
 pub mod sim;
 pub mod util;
+
+pub use error::Error;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

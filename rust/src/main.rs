@@ -9,12 +9,20 @@
 //! tulip simulate [--network ...] [--arch tulip|yodann] [--pes N]
 //! tulip schedule <fanin> [threshold]           # RPO schedule stats
 //! tulip golden <artifact-stem>                 # load + run a golden model
-//! tulip serve [--addr H:P] [--model tiny|tiny8] [--max-batch N]
-//!             [--max-wait-us N] [--queue-cap N] [--policy block|reject]
+//! tulip model export --model <name> [--seed N] [--out PATH]
+//! tulip model inspect <PATH>                   # tulip.model/v1 artifacts
+//! tulip serve [--addr H:P] [--model NAME | --model NAME=PATH]...
+//!             [--max-batch N] [--max-wait-us N] [--queue-cap N]
+//!             [--policy block|reject] [--engine scalar|bit_sliced]
 //!             [--perf-out PATH]                # TCP inference front-end
 //! ```
+//!
+//! `serve` takes `--model` repeatedly; each is either a built-in demo name
+//! (`tiny`, `tiny8`) or `name=path` pointing at a `tulip.model/v1` file
+//! (as written by `tulip model export`). The first model is the default
+//! route for requests that omit the `model` field.
 
-use tulip::bnn::{alexnet, binarynet_cifar10, Network};
+use tulip::bnn::{alexnet, binarynet_cifar10, Model, Network};
 use tulip::config::ArchConfig;
 use tulip::coordinator::NetworkPerf;
 use tulip::metrics;
@@ -22,14 +30,17 @@ use tulip::scheduler::adder_tree;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: tulip <tables|table|simulate|schedule|golden|serve> [args]\n\
+        "usage: tulip <tables|table|simulate|schedule|golden|model|serve> [args]\n\
          \n  tulip tables [--network binarynet|alexnet]\
          \n  tulip table <1|2|3|4|5|fig7> [--network ...]\
          \n  tulip simulate [--network ...] [--arch tulip|yodann] [--pes N]\
          \n  tulip schedule <fanin> [threshold]\
          \n  tulip golden <artifact-stem>\
-         \n  tulip serve [--addr 127.0.0.1:7070] [--model tiny|tiny8] [--max-batch 64]\
-         \n              [--max-wait-us 2000] [--queue-cap 1024] [--policy block|reject]\
+         \n  tulip model export --model <tiny|tiny8|binarynet|alexnet> [--seed N] [--out PATH]\
+         \n  tulip model inspect <PATH>\
+         \n  tulip serve [--addr 127.0.0.1:7070] [--model NAME | --model NAME=PATH]...\
+         \n              [--max-batch 64] [--max-wait-us 2000] [--queue-cap 1024]\
+         \n              [--policy block|reject] [--engine scalar|bit_sliced]\
          \n              [--perf-out PATH]"
     );
     std::process::exit(2);
@@ -37,6 +48,33 @@ fn usage() -> ! {
 
 fn flag_value(args: &[String], flag: &str) -> Option<String> {
     args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Every value of a repeatable flag, in order (`--model a --model b=c.json`).
+fn flag_values(args: &[String], flag: &str) -> Vec<String> {
+    args.iter()
+        .enumerate()
+        .filter(|(_, a)| *a == flag)
+        .filter_map(|(i, _)| args.get(i + 1).cloned())
+        .collect()
+}
+
+/// Resolve one `--model` spec: a demo name (`tiny`, `tiny8`), a
+/// `tulip.model/v1` file path, or `name=path`.
+fn resolve_model(spec: &str) -> Result<(String, Model), String> {
+    if let Some((name, path)) = spec.split_once('=') {
+        let model = Model::load(path).map_err(|e| format!("{e}"))?;
+        return Ok((name.to_string(), model));
+    }
+    if let Some(model) = Model::demo(spec) {
+        return Ok((spec.to_string(), model));
+    }
+    if spec.ends_with(".json") {
+        let model = Model::load(spec).map_err(|e| format!("{e}"))?;
+        let name = model.name().to_string();
+        return Ok((name, model));
+    }
+    Err(format!("unknown model '{spec}' (tiny|tiny8, a .json path, or name=path)"))
 }
 
 fn pick_network(args: &[String]) -> Network {
@@ -184,51 +222,129 @@ fn install_signal_handlers() {
 #[cfg(not(unix))]
 fn install_signal_handlers() {}
 
-fn cmd_serve(args: &[String]) {
-    use tulip::coordinator::BatchExecutor;
-    use tulip::serve::{demo_network, serve, BackpressurePolicy, ServeConfig};
+fn cmd_model(args: &[String]) {
+    match args.first().map(String::as_str) {
+        Some("export") => {
+            let name = match flag_value(args, "--model") {
+                Some(n) => n,
+                None => usage(),
+            };
+            let seed: u64 = flag_value(args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(1000);
+            let model = match name.as_str() {
+                "tiny" | "tiny8" => Model::demo(&name).expect("demo name checked"),
+                "binarynet" => {
+                    Model::random(binarynet_cifar10(), seed).expect("zoo network is valid")
+                }
+                "alexnet" => Model::random(alexnet(), seed).expect("zoo network is valid"),
+                other => {
+                    eprintln!("unknown model '{other}' (tiny|tiny8|binarynet|alexnet)");
+                    std::process::exit(2);
+                }
+            };
+            let out = flag_value(args, "--out").unwrap_or_else(|| format!("{name}.model.json"));
+            if let Err(e) = model.save(&out) {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            }
+            println!(
+                "wrote {} ({} layers, {} weight bits) to {out}",
+                model.name(),
+                model.network().layers.len(),
+                model.weight_bits()
+            );
+        }
+        Some("inspect") => {
+            let path = match args.get(1) {
+                Some(p) => p,
+                None => usage(),
+            };
+            let model = match Model::load(path) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    std::process::exit(1);
+                }
+            };
+            let net = model.network();
+            let (h, w, c) = model.input_dims();
+            println!("{path}: tulip.model/v1");
+            println!("  network  {} ({})", model.name(), net.dataset);
+            println!("  input    {h}x{w}x{c}  classes {}", model.num_classes());
+            println!("  weights  {} bits across {} layers", model.weight_bits(), net.layers.len());
+            match model.servable() {
+                Ok(()) => println!("  servable yes"),
+                Err(e) => println!("  servable no — {e}"),
+            }
+            for l in &net.layers {
+                let (oh, ow) = l.output_spatial();
+                println!(
+                    "    {:<8} {:>4}x{:<4} z1 {:>4} -> z2 {:<4} k {} out {}x{}",
+                    l.name, l.y1, l.x1, l.z1, l.z2, l.k, oh, ow
+                );
+            }
+        }
+        _ => usage(),
+    }
+}
 
-    let model = flag_value(args, "--model").unwrap_or_else(|| "tiny".to_string());
-    let (net, weights) = match demo_network(&model) {
-        Some(nw) => nw,
-        None => {
-            eprintln!("unknown model '{model}' (tiny|tiny8)");
-            std::process::exit(2);
+fn cmd_serve(args: &[String]) {
+    use tulip::coordinator::ForwardEngine;
+    use tulip::serve::{serve, BackpressurePolicy, ServeConfig};
+
+    let specs = {
+        let s = flag_values(args, "--model");
+        if s.is_empty() {
+            vec!["tiny".to_string()]
+        } else {
+            s
         }
     };
-    let mut cfg = ServeConfig {
-        addr: flag_value(args, "--addr").unwrap_or_else(|| "127.0.0.1:7070".to_string()),
-        ..ServeConfig::default()
-    };
+    let mut models = Vec::new();
+    for spec in &specs {
+        match resolve_model(spec) {
+            Ok(nm) => models.push(nm),
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let mut builder = ServeConfig::builder()
+        .addr(flag_value(args, "--addr").unwrap_or_else(|| "127.0.0.1:7070".to_string()));
     if let Some(v) = flag_value(args, "--max-batch").and_then(|v| v.parse().ok()) {
-        cfg.max_batch = v;
+        builder = builder.max_batch(v);
     }
     if let Some(v) = flag_value(args, "--max-wait-us").and_then(|v| v.parse().ok()) {
-        cfg.max_wait_us = v;
+        builder = builder.max_wait_us(v);
     }
     if let Some(v) = flag_value(args, "--queue-cap").and_then(|v| v.parse().ok()) {
-        cfg.queue_cap = v;
+        builder = builder.queue_cap(v);
     }
     if let Some(p) = flag_value(args, "--policy") {
-        cfg.policy = match BackpressurePolicy::from_name(&p) {
-            Some(p) => p,
+        builder = match BackpressurePolicy::from_name(&p) {
+            Some(p) => builder.policy(p),
             None => {
                 eprintln!("unknown policy '{p}' (block|reject)");
                 std::process::exit(2);
             }
         };
     }
+    if let Some(e) = flag_value(args, "--engine") {
+        builder = match e.as_str() {
+            "scalar" => builder.engine(ForwardEngine::Scalar),
+            "bit_sliced" => builder.engine(ForwardEngine::BitSliced),
+            other => {
+                eprintln!("unknown engine '{other}' (scalar|bit_sliced)");
+                std::process::exit(2);
+            }
+        };
+    }
+    let cfg = builder.build();
     let perf_out = flag_value(args, "--perf-out");
 
     install_signal_handlers();
-    let exec = match BatchExecutor::new(net, weights) {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("error: {e:#}");
-            std::process::exit(1);
-        }
-    };
-    let handle = match serve(exec, cfg.clone()) {
+    let names: Vec<String> = models.iter().map(|(n, _)| n.clone()).collect();
+    let handle = match serve(models, cfg.clone()) {
         Ok(h) => h,
         Err(e) => {
             eprintln!("error: {e:#}");
@@ -236,15 +352,18 @@ fn cmd_serve(args: &[String]) {
         }
     };
     println!(
-        "tulip serve: {} on {} (max_batch {}, max_wait {} us, queue {} [{}])",
-        model,
+        "tulip serve: [{}] on {} (max_batch {}, max_wait {} us, queue {} [{}])",
+        names.join(", "),
         handle.local_addr(),
         cfg.max_batch,
         cfg.max_wait_us,
         cfg.queue_cap,
         cfg.policy.name()
     );
-    println!("protocol tulip.serve/v1 — one JSON request per line; ctrl-c or {{\"op\": \"drain\"}} to drain");
+    println!(
+        "protocol tulip.serve/v1 — one JSON request per line; ctrl-c or {{\"op\": \"drain\"}} to \
+         drain"
+    );
     handle.wait_for_drain();
     println!("draining: flushing queued requests…");
     match handle.drain() {
@@ -255,10 +374,9 @@ fn cmd_serve(args: &[String]) {
                     eprintln!("error: {e:#}");
                     std::process::exit(1);
                 }
-                println!("perf report written to {path}");
+                println!("serve report written to {path}");
             }
-            let ok = report.serve.as_ref().is_some_and(|s| s.accounted());
-            if !ok {
+            if !report.accounted() {
                 eprintln!("accounting discrepancy: admitted != completed + shed + failed");
                 std::process::exit(1);
             }
@@ -278,6 +396,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("schedule") => cmd_schedule(&args[1..]),
         Some("golden") => cmd_golden(&args[1..]),
+        Some("model") => cmd_model(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         _ => usage(),
     }

@@ -200,6 +200,25 @@ impl HistogramSnapshot {
         }
     }
 
+    /// Fold another snapshot into this one (exact for count/sum/min/max;
+    /// log₂ buckets merge by width). Used by the serve registry to roll
+    /// per-model latency histograms up into server-wide totals.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        if other.count == 0 {
+            return;
+        }
+        self.min = if self.count == 0 { other.min } else { self.min.min(other.min) };
+        self.max = self.max.max(other.max);
+        self.count += other.count;
+        self.sum += other.sum;
+        for &(width, n) in &other.buckets {
+            match self.buckets.binary_search_by_key(&width, |&(w, _)| w) {
+                Ok(i) => self.buckets[i].1 += n,
+                Err(i) => self.buckets.insert(i, (width, n)),
+            }
+        }
+    }
+
     /// Quantile estimate from the log₂ buckets: returns the upper bound of
     /// the bucket containing the `q`-quantile sample, clamped to the exact
     /// observed `[min, max]`. Accurate to within a factor of 2 by
@@ -368,6 +387,31 @@ mod tests {
         assert_eq!(s.quantile(0.0), 0);
         assert!(s.quantile(0.5) <= 3);
         assert_eq!(s.quantile(1.0), 1500);
+    }
+
+    #[test]
+    fn histogram_snapshots_merge_by_bucket() {
+        let a = Histogram::default();
+        let b = Histogram::default();
+        let all = Histogram::default();
+        for v in [0u64, 3, 900] {
+            a.observe(v);
+            all.observe(v);
+        }
+        for v in [2u64, 1500] {
+            b.observe(v);
+            all.observe(v);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        assert_eq!(merged, all.snapshot());
+        // Merging an empty snapshot is a no-op; merging into one adopts it.
+        let before = merged.clone();
+        merged.merge(&HistogramSnapshot::default());
+        assert_eq!(merged, before);
+        let mut empty = HistogramSnapshot::default();
+        empty.merge(&before);
+        assert_eq!(empty, before);
     }
 
     #[test]

@@ -187,32 +187,33 @@ impl ControlWord {
 
     /// Structural validation of the hardware constraints this word must
     /// respect. Returns a description of the first violation.
-    pub fn validate(&self) -> std::result::Result<(), String> {
+    pub fn validate(&self) -> std::result::Result<(), crate::Error> {
+        let bad = |m: String| Err(crate::Error::InvalidSchedule(m));
         // Buses are resolved before phase 0 — they may not carry fresh taps.
         if self.bus_b.is_fresh() || self.bus_c.is_fresh() {
-            return Err("bus driven by same-cycle neuron output".into());
+            return bad("bus driven by same-cycle neuron output".into());
         }
         for (k, n) in self.neurons.iter().enumerate() {
             if n.gated {
                 continue;
             }
             if n.phase == 0 && (n.a.is_fresh() || n.d.is_fresh()) {
-                return Err(format!("N{} is phase-0 but reads a fresh output", k + 1));
+                return bad(format!("N{} is phase-0 but reads a fresh output", k + 1));
             }
             if let Src::NFresh(j) | Src::NFreshInv(j) = n.a {
                 if self.neurons[j].phase != 0 || self.neurons[j].gated {
-                    return Err(format!("N{} fresh-reads non-phase-0 N{}", k + 1, j + 1));
+                    return bad(format!("N{} fresh-reads non-phase-0 N{}", k + 1, j + 1));
                 }
             }
             if let Src::NFresh(j) | Src::NFreshInv(j) = n.d {
                 if self.neurons[j].phase != 0 || self.neurons[j].gated {
-                    return Err(format!("N{} fresh-reads non-phase-0 N{}", k + 1, j + 1));
+                    return bad(format!("N{} fresh-reads non-phase-0 N{}", k + 1, j + 1));
                 }
             }
             for s in [n.a, n.d] {
                 if let Src::Reg { reg, bit } | Src::RegInv { reg, bit } = s {
                     if reg >= NUM_REGS || bit >= REG_BITS {
-                        return Err(format!("N{} reads out-of-range R{}[{}]", k + 1, reg + 1, bit));
+                        return bad(format!("N{} reads out-of-range R{}[{}]", k + 1, reg + 1, bit));
                     }
                 }
             }
@@ -222,14 +223,14 @@ impl ControlWord {
         let mut per_reg = [0usize; NUM_REGS];
         for w in &self.writes {
             if w.reg >= NUM_REGS || w.bit >= REG_BITS {
-                return Err(format!("write out of range R{}[{}]", w.reg + 1, w.bit));
+                return bad(format!("write out of range R{}[{}]", w.reg + 1, w.bit));
             }
             if !seen.insert((w.reg, w.bit)) {
-                return Err(format!("duplicate write to R{}[{}]", w.reg + 1, w.bit));
+                return bad(format!("duplicate write to R{}[{}]", w.reg + 1, w.bit));
             }
             per_reg[w.reg] += 1;
             if per_reg[w.reg] > 2 {
-                return Err(format!("more than 2 writes to R{} in one cycle", w.reg + 1));
+                return bad(format!("more than 2 writes to R{} in one cycle", w.reg + 1));
             }
         }
         Ok(())

@@ -84,9 +84,9 @@ impl Schedule {
     }
 
     /// Validate every control word against the hardware constraints.
-    pub fn validate(&self) -> std::result::Result<(), String> {
+    pub fn validate(&self) -> std::result::Result<(), crate::Error> {
         for (i, w) in self.words.iter().enumerate() {
-            w.validate().map_err(|e| format!("cycle {i}: {e}"))?;
+            w.validate().map_err(|e| crate::Error::InvalidSchedule(format!("cycle {i}: {e}")))?;
         }
         Ok(())
     }

@@ -192,21 +192,15 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bnn::tensor::{BinWeights, BitTensor};
-    use crate::bnn::tiny_bnn;
+    use crate::bnn::tensor::BitTensor;
+    use crate::bnn::Model;
     use crate::serve::protocol::Status;
     use crate::serve::queue::BackpressurePolicy;
     use std::sync::mpsc::channel;
 
     fn tiny_exec() -> Arc<BatchExecutor> {
-        let net = tiny_bnn(8, 4, 3);
-        let weights: Vec<BinWeights> = net
-            .layers
-            .iter()
-            .enumerate()
-            .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 1000 + i as u64))
-            .collect();
-        Arc::new(BatchExecutor::new(net, weights).unwrap().with_array(1, 4))
+        let model = Model::demo("tiny8").unwrap();
+        Arc::new(BatchExecutor::for_model(&model).unwrap().with_array(1, 4))
     }
 
     #[test]

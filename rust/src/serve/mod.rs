@@ -11,35 +11,47 @@
 //! 3. [`shed`] — deadline enforcement at dequeue: expired requests are
 //!    answered `shed` and counted, never executed and never dropped;
 //! 4. [`batcher`] — dynamic micro-batching (flush on `max_batch` or
-//!    `max_wait_us`) over the shared
+//!    `max_wait_us`) over a shared
 //!    [`BatchExecutor`](crate::coordinator::BatchExecutor);
-//! 5. [`server`] — the TCP accept loop, per-connection reader/writer
-//!    threads, and graceful drain with a final
-//!    [`PerfReport`](crate::coordinator::PerfReport).
+//! 5. [`registry`] — the multi-model registry: every loaded
+//!    [`Model`](crate::bnn::Model) gets its own queue + batcher lane and
+//!    its own accounting, and models can be hot-loaded and drained out of
+//!    a live server;
+//! 6. [`server`] — the TCP accept loop, per-connection reader/writer
+//!    threads, request routing by model name, and graceful drain with a
+//!    final per-model [`ServeReport`].
 //!
 //! The accounting invariant the whole design is built around:
 //! **`admitted == completed + shed + failed`** at drain time — every
-//! admitted request is answered exactly once, and the final report proves
-//! it ([`ServeStats::accounted`]).
+//! admitted request is answered exactly once, *per model and in total*,
+//! and the final report proves it ([`ServeStats::accounted`]).
 
 pub mod batcher;
 pub mod protocol;
 pub mod queue;
+pub mod registry;
 pub mod server;
 pub mod shed;
 
 pub use batcher::{Batcher, ServeAggregate};
 pub use protocol::{pack_bits, unpack_bits, ServeResponse, Status};
 pub use queue::{BackpressurePolicy, BoundedQueue, ServeRequest};
-pub use server::{request_drain, serve, ServeHandle};
+pub use registry::{ModelDrain, ModelRegistry};
+pub use server::{request_drain, serve, ServeHandle, ServeReport};
 pub use shed::Shedder;
 
 use crate::bnn::tensor::BinWeights;
-use crate::bnn::{tiny_bnn, Network};
+use crate::bnn::{Model, Network};
+use crate::coordinator::ForwardEngine;
 use crate::metrics::{HistogramSnapshot, MetricsRegistry};
 
 /// Server configuration (CLI flags of `tulip serve` map 1:1 onto these).
+///
+/// The struct is `#[non_exhaustive]`: build it with [`ServeConfig::builder`]
+/// (or start from [`ServeConfig::default`] and mutate fields) so new knobs
+/// can be added without breaking callers.
 #[derive(Debug, Clone)]
+#[non_exhaustive]
 pub struct ServeConfig {
     /// Bind address; port 0 picks a free port (tests do this).
     pub addr: String,
@@ -48,10 +60,17 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// Maximum time a dequeued micro-batch waits to fill, microseconds.
     pub max_wait_us: u64,
-    /// Admission queue capacity.
+    /// Admission queue capacity (per model lane).
     pub queue_cap: usize,
     /// What to do with new requests when the queue is full.
     pub policy: BackpressurePolicy,
+    /// Simulated PE array geometry as `(units, pes_per_unit)`; `None`
+    /// keeps each executor's calibrated default.
+    pub array: Option<(usize, usize)>,
+    /// Rayon worker threads per model executor (0 = rayon's default).
+    pub threads: usize,
+    /// Forward engine every model lane executes with.
+    pub engine: ForwardEngine,
 }
 
 impl Default for ServeConfig {
@@ -62,13 +81,98 @@ impl Default for ServeConfig {
             max_wait_us: 2_000,
             queue_cap: 1_024,
             policy: BackpressurePolicy::default(),
+            array: None,
+            threads: 0,
+            engine: ForwardEngine::default(),
         }
+    }
+}
+
+impl ServeConfig {
+    /// Start a builder from the defaults.
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder { cfg: ServeConfig::default() }
+    }
+}
+
+/// Builder for [`ServeConfig`] (the struct is `#[non_exhaustive]`).
+///
+/// ```
+/// use tulip::serve::{BackpressurePolicy, ServeConfig};
+///
+/// let cfg = ServeConfig::builder()
+///     .addr("127.0.0.1:0")
+///     .max_batch(16)
+///     .max_wait_us(500)
+///     .policy(BackpressurePolicy::Reject)
+///     .build();
+/// assert_eq!(cfg.max_batch, 16);
+/// assert_eq!(cfg.queue_cap, 1024); // untouched knobs keep their defaults
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct ServeConfigBuilder {
+    cfg: ServeConfig,
+}
+
+impl ServeConfigBuilder {
+    /// Bind address (port 0 picks a free port).
+    pub fn addr(mut self, addr: impl Into<String>) -> Self {
+        self.cfg.addr = addr.into();
+        self
+    }
+
+    /// Micro-batch flush size.
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.cfg.max_batch = n;
+        self
+    }
+
+    /// Micro-batch fill wait, microseconds.
+    pub fn max_wait_us(mut self, us: u64) -> Self {
+        self.cfg.max_wait_us = us;
+        self
+    }
+
+    /// Per-model admission queue capacity.
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.cfg.queue_cap = cap;
+        self
+    }
+
+    /// Backpressure policy when a queue is full.
+    pub fn policy(mut self, policy: BackpressurePolicy) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    /// Simulated PE array geometry `(units, pes_per_unit)`.
+    pub fn array(mut self, units: usize, pes_per_unit: usize) -> Self {
+        self.cfg.array = Some((units, pes_per_unit));
+        self
+    }
+
+    /// Rayon worker threads per executor (0 = rayon's default).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.cfg.threads = n;
+        self
+    }
+
+    /// Forward engine for every model lane.
+    pub fn engine(mut self, engine: ForwardEngine) -> Self {
+        self.cfg.engine = engine;
+        self
+    }
+
+    /// Finalize the configuration.
+    pub fn build(self) -> ServeConfig {
+        self.cfg
     }
 }
 
 /// Frozen serving-layer accounting: the counters and latency/occupancy
 /// histograms a draining server embeds in its final
-/// [`PerfReport`](crate::coordinator::PerfReport).
+/// [`PerfReport`](crate::coordinator::PerfReport) — one per model lane,
+/// rolled up into a server-wide total via [`ServeStats::merge`].
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ServeStats {
     /// Requests admitted to the queue.
@@ -115,12 +219,34 @@ impl ServeStats {
         self.admitted == self.completed + self.shed + self.failed
     }
 
+    /// Fold another lane's accounting into this one (counters add,
+    /// histograms merge bucket-wise). The invariant is compositional:
+    /// if both sides are [`accounted`](Self::accounted), so is the sum.
+    pub fn merge(&mut self, other: &ServeStats) {
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+        self.shed += other.shed;
+        self.completed += other.completed;
+        self.failed += other.failed;
+        self.occupancy.merge(&other.occupancy);
+        self.queue_us.merge(&other.queue_us);
+        self.batch_us.merge(&other.batch_us);
+        self.total_us.merge(&other.total_us);
+    }
+
     /// One-line JSON (the reply to the `{"op": "stats"}` control message).
     pub fn to_json_line(&self) -> String {
+        format!("{{\"op\": \"stats\", {}}}", self.json_fields())
+    }
+
+    /// The counter/quantile fields without the surrounding braces, so
+    /// callers can embed them next to their own fields (per-model stats,
+    /// unload receipts).
+    pub fn json_fields(&self) -> String {
         format!(
-            "{{\"op\": \"stats\", \"admitted\": {}, \"rejected\": {}, \"shed\": {}, \
+            "\"admitted\": {}, \"rejected\": {}, \"shed\": {}, \
              \"completed\": {}, \"failed\": {}, \"occupancy_mean\": {:.3}, \
-             \"queue_p99_us\": {}, \"total_p99_us\": {}}}",
+             \"queue_p99_us\": {}, \"total_p99_us\": {}",
             self.admitted,
             self.rejected,
             self.shed,
@@ -134,23 +260,11 @@ impl ServeStats {
 }
 
 /// The demo networks `tulip serve`, `load_client` and the integration
-/// tests agree on, keyed by name (weights are seeded deterministically, so
-/// client and server can be built independently and still match bit for
-/// bit): `"tiny"` → `tiny_bnn(16, 8, 4)` (16×16×8 input), `"tiny8"` →
-/// `tiny_bnn(8, 4, 3)` (8×8×4 input).
+/// tests agree on.
+#[deprecated(since = "0.2.0", note = "use bnn::Model::demo; removed next release")]
+#[doc(hidden)]
 pub fn demo_network(name: &str) -> Option<(Network, Vec<BinWeights>)> {
-    let net = match name {
-        "tiny" => tiny_bnn(16, 8, 4),
-        "tiny8" => tiny_bnn(8, 4, 3),
-        _ => return None,
-    };
-    let weights: Vec<BinWeights> = net
-        .layers
-        .iter()
-        .enumerate()
-        .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 1000 + i as u64))
-        .collect();
-    Some((net, weights))
+    Model::demo(name).map(|m| (m.network().clone(), m.weights().to_vec()))
 }
 
 #[cfg(test)]
@@ -158,12 +272,32 @@ mod tests {
     use super::*;
 
     #[test]
-    fn demo_networks_resolve() {
-        let (net, w) = demo_network("tiny8").unwrap();
-        assert_eq!(net.layers.len(), w.len());
-        assert_eq!((net.layers[0].y1, net.layers[0].x1, net.layers[0].z1), (8, 8, 4));
-        assert!(demo_network("tiny").is_some());
-        assert!(demo_network("nope").is_none());
+    fn demo_models_resolve() {
+        let m = Model::demo("tiny8").unwrap();
+        assert_eq!(m.network().layers.len(), m.weights().len());
+        assert_eq!(m.input_dims(), (8, 8, 4));
+        assert!(Model::demo("tiny").is_some());
+        assert!(Model::demo("nope").is_none());
+    }
+
+    #[test]
+    fn builder_covers_every_knob() {
+        let cfg = ServeConfig::builder()
+            .addr("0.0.0.0:7171")
+            .max_batch(8)
+            .max_wait_us(100)
+            .queue_cap(32)
+            .policy(BackpressurePolicy::Reject)
+            .array(2, 8)
+            .threads(3)
+            .engine(ForwardEngine::Scalar)
+            .build();
+        assert_eq!(cfg.addr, "0.0.0.0:7171");
+        assert_eq!((cfg.max_batch, cfg.max_wait_us, cfg.queue_cap), (8, 100, 32));
+        assert_eq!(cfg.policy, BackpressurePolicy::Reject);
+        assert_eq!(cfg.array, Some((2, 8)));
+        assert_eq!(cfg.threads, 3);
+        assert_eq!(cfg.engine, ForwardEngine::Scalar);
     }
 
     #[test]
@@ -180,5 +314,25 @@ mod tests {
         let reg = MetricsRegistry::new();
         reg.counter("serve.admitted").add(3);
         assert!(!ServeStats::from_registry(&reg).accounted());
+    }
+
+    #[test]
+    fn stats_merge_is_compositional() {
+        let reg_a = MetricsRegistry::new();
+        reg_a.counter("serve.admitted").add(4);
+        reg_a.counter("serve.completed").add(3);
+        reg_a.counter("serve.shed").add(1);
+        reg_a.histogram("serve.latency_us.total").observe(100);
+        let reg_b = MetricsRegistry::new();
+        reg_b.counter("serve.admitted").add(2);
+        reg_b.counter("serve.completed").add(2);
+        reg_b.counter("serve.rejected").add(9);
+        reg_b.histogram("serve.latency_us.total").observe(3000);
+        let mut total = ServeStats::from_registry(&reg_a);
+        total.merge(&ServeStats::from_registry(&reg_b));
+        assert_eq!((total.admitted, total.completed, total.shed, total.rejected), (6, 5, 1, 9));
+        assert!(total.accounted());
+        assert_eq!(total.total_us.count, 2);
+        assert_eq!((total.total_us.min, total.total_us.max), (100, 3000));
     }
 }

@@ -8,17 +8,23 @@
 //! Request (`{"op": …}` lines are control messages instead):
 //!
 //! ```json
-//! {"id": 7, "bits": "a3f0…", "h": 16, "w": 16, "c": 8, "deadline_ms": 50}
+//! {"id": 7, "model": "tiny", "bits": "a3f0…", "h": 16, "w": 16, "c": 8, "deadline_ms": 50}
 //! ```
 //!
 //! * `id` — client-chosen, echoed on the response;
+//! * `model` — optional model name; omitted requests go to the server's
+//!   default (first-loaded) model;
 //! * `bits` — the HWC activation bits, packed LSB-first into bytes and
 //!   hex-encoded (see [`pack_bits`]);
-//! * `h`/`w`/`c` — optional declared shape, validated against the served
-//!   network;
+//! * `h`/`w`/`c` — optional declared shape, validated against the routed
+//!   model at decode time;
 //! * `deadline_ms` — optional: if the request is still queued this many
 //!   milliseconds after receipt it is **shed** (never executed), and the
 //!   response carries `"status": "shed"`.
+//!
+//! Control ops: `{"op": "stats"}`, `{"op": "drain"}`,
+//! `{"op": "load_model", "name": "…", "model": { tulip.model/v1 doc }}` and
+//! `{"op": "unload_model", "name": "…"}` (see `serve::registry`).
 //!
 //! Response: `{"id": 7, "status": "ok", "class": 2, "scores": [...],
 //! "batch_n": 64, "lat_us": {"queue": …, "batch": …, "total": …}}`, or
@@ -26,6 +32,7 @@
 //! with an `"error"` message.
 
 use crate::bnn::tensor::BitTensor;
+use crate::error::Error;
 use anyhow::{bail, ensure, Result};
 
 /// A parsed JSON value.
@@ -351,81 +358,111 @@ pub enum ClientMsg {
     /// `{"op": "drain"}` — graceful shutdown: stop accepting, flush the
     /// queue, emit the final perf report and exit.
     Drain,
+    /// `{"op": "load_model", "name": …, "model": …}` — hot-load a
+    /// `tulip.model/v1` document under the given name.
+    LoadModel {
+        /// Registry name for the new model.
+        name: String,
+        /// The inline `tulip.model/v1` document, not yet decoded.
+        doc: Json,
+    },
+    /// `{"op": "unload_model", "name": …}` — drain and retire one model.
+    UnloadModel {
+        /// Registry name of the model to retire.
+        name: String,
+    },
 }
 
 /// A single-image inference request (see the [module docs](self) for the
-/// wire form).
+/// wire form). The payload stays hex-encoded until the server has routed
+/// the request to a model and knows which input geometry to decode
+/// against — see [`InferRequest::decode`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct InferRequest {
     /// Client-chosen request id, echoed on the response.
     pub id: u64,
-    /// Unpacked HWC activation bits (already validated to the network's
-    /// input geometry).
-    pub bits: Vec<bool>,
+    /// Target model name (`None` routes to the server's default model).
+    pub model: Option<String>,
+    /// The still-packed activation bits, lowercase hex.
+    pub bits_hex: String,
+    /// Declared shape `[h, w, c]`, each field optional on the wire.
+    pub declared: [Option<u64>; 3],
     /// Optional deadline in milliseconds from receipt.
     pub deadline_ms: Option<u64>,
 }
 
 impl InferRequest {
-    /// The request's image as a tensor of the given geometry.
-    pub fn image(self, h: usize, w: usize, c: usize) -> BitTensor {
-        debug_assert_eq!(self.bits.len(), h * w * c);
-        BitTensor { h, w, c, data: self.bits }
+    /// Decode the payload against the routed model's input geometry:
+    /// declared `h`/`w`/`c` fields, when present, must match, and the
+    /// `bits` payload must carry exactly `h·w·c` bits.
+    pub fn decode(
+        &self,
+        (h, w, c): (usize, usize, usize),
+    ) -> std::result::Result<BitTensor, Error> {
+        for ((key, expect), got) in [("h", h), ("w", w), ("c", c)].into_iter().zip(self.declared) {
+            if let Some(g) = got {
+                if g != expect as u64 {
+                    return Err(Error::Protocol {
+                        id: self.id,
+                        msg: format!("shape mismatch: request {key}={g}, model expects {expect}"),
+                    });
+                }
+            }
+        }
+        let bits = unpack_bits(&self.bits_hex, h * w * c)
+            .map_err(|e| Error::Protocol { id: self.id, msg: format!("{e:#}") })?;
+        Ok(BitTensor { h, w, c, data: bits })
     }
 }
 
-/// A protocol-level failure: the id to blame it on (0 when the line never
-/// yielded one) and the message for the `error` response.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct ProtocolError {
-    /// Best-effort request id extracted from the offending line.
-    pub id: u64,
-    /// Human-readable cause.
-    pub msg: String,
-}
-
-impl std::fmt::Display for ProtocolError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "request {}: {}", self.id, self.msg)
-    }
-}
-
-/// Parse one client line against the served network's input geometry.
-/// Declared `h`/`w`/`c` fields, when present, must match; the `bits`
-/// payload must carry exactly `h·w·c` bits.
-pub fn parse_client_msg(
-    line: &str,
-    input: (usize, usize, usize),
-) -> std::result::Result<ClientMsg, ProtocolError> {
-    let fail = |id: u64, msg: String| ProtocolError { id, msg };
+/// Parse one client line into a typed message. Inference payloads are
+/// *not* decoded here — shape validation happens in
+/// [`InferRequest::decode`] once the server knows which model the request
+/// routes to.
+pub fn parse_client_msg(line: &str) -> std::result::Result<ClientMsg, Error> {
+    let fail = |id: u64, msg: String| Error::Protocol { id, msg };
     let v = parse_json(line).map_err(|e| fail(0, format!("{e:#}")))?;
     if let Some(op) = v.get("op").and_then(Json::as_str) {
+        let name = |v: &Json| -> std::result::Result<String, Error> {
+            v.get("name")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| fail(0, format!("op '{op}' requires a string 'name'")))
+        };
         return match op {
             "stats" => Ok(ClientMsg::Stats),
             "drain" => Ok(ClientMsg::Drain),
-            other => Err(fail(0, format!("unknown op '{other}' (stats|drain)"))),
+            "load_model" => {
+                let name = name(&v)?;
+                let doc = v
+                    .get("model")
+                    .cloned()
+                    .ok_or_else(|| fail(0, "op 'load_model' requires a 'model' document".into()))?;
+                Ok(ClientMsg::LoadModel { name, doc })
+            }
+            "unload_model" => Ok(ClientMsg::UnloadModel { name: name(&v)? }),
+            other => {
+                Err(fail(0, format!("unknown op '{other}' (stats|drain|load_model|unload_model)")))
+            }
         };
     }
-    let id = v
-        .get("id")
-        .and_then(Json::as_u64)
-        .ok_or_else(|| fail(0, "missing numeric 'id'".into()))?;
-    let (h, w, c) = input;
-    for (key, expect) in [("h", h), ("w", w), ("c", c)] {
-        if let Some(got) = v.get(key).and_then(Json::as_u64) {
-            if got != expect as u64 {
-                return Err(fail(
-                    id,
-                    format!("shape mismatch: request {key}={got}, network expects {expect}"),
-                ));
-            }
-        }
-    }
-    let hex = v
+    let id =
+        v.get("id").and_then(Json::as_u64).ok_or_else(|| fail(0, "missing numeric 'id'".into()))?;
+    let model = v.get("model").and_then(Json::as_str).map(str::to_string);
+    let bits_hex = v
         .get("bits")
         .and_then(Json::as_str)
+        .map(str::to_string)
         .ok_or_else(|| fail(id, "missing string 'bits'".into()))?;
-    let bits = unpack_bits(hex, h * w * c).map_err(|e| fail(id, format!("{e:#}")))?;
+    let mut declared = [None; 3];
+    for (slot, key) in declared.iter_mut().zip(["h", "w", "c"]) {
+        if let Some(d) = v.get(key) {
+            *slot = Some(
+                d.as_u64()
+                    .ok_or_else(|| fail(id, format!("'{key}' must be a non-negative integer")))?,
+            );
+        }
+    }
     let deadline_ms = match v.get("deadline_ms") {
         None | Some(Json::Null) => None,
         Some(d) => Some(
@@ -433,7 +470,7 @@ pub fn parse_client_msg(
                 .ok_or_else(|| fail(id, "'deadline_ms' must be a non-negative integer".into()))?,
         ),
     };
-    Ok(ClientMsg::Infer(InferRequest { id, bits, deadline_ms }))
+    Ok(ClientMsg::Infer(InferRequest { id, model, bits_hex, declared, deadline_ms }))
 }
 
 /// Response status over the wire.
@@ -638,27 +675,51 @@ mod tests {
     }
 
     #[test]
-    fn request_parse_validates_shape_and_bits() {
+    fn request_parse_and_decode_validate_shape_and_bits() {
         let input = (2, 2, 2); // 8 bits = 1 byte
-        let ok = parse_client_msg(r#"{"id": 3, "bits": "a5", "deadline_ms": 10}"#, input).unwrap();
+        let ok = parse_client_msg(r#"{"id": 3, "bits": "a5", "deadline_ms": 10}"#).unwrap();
         match ok {
             ClientMsg::Infer(r) => {
                 assert_eq!(r.id, 3);
+                assert_eq!(r.model, None);
                 assert_eq!(r.deadline_ms, Some(10));
-                assert_eq!(r.bits, unpack_bits("a5", 8).unwrap());
+                let img = r.decode(input).unwrap();
+                assert_eq!(img.data, unpack_bits("a5", 8).unwrap());
             }
             other => panic!("expected Infer, got {other:?}"),
         }
-        // Declared shape must match the served network.
-        let e = parse_client_msg(r#"{"id": 4, "h": 3, "bits": "a5"}"#, input).unwrap_err();
-        assert_eq!(e.id, 4);
-        assert!(e.msg.contains("shape mismatch"), "{e}");
-        // Wrong payload length.
-        assert!(parse_client_msg(r#"{"id": 5, "bits": "a5ff"}"#, input).is_err());
+        // The model field routes; declared shape must match at decode time.
+        let m = parse_client_msg(r#"{"id": 4, "model": "tiny", "h": 3, "bits": "a5"}"#).unwrap();
+        match m {
+            ClientMsg::Infer(r) => {
+                assert_eq!(r.model.as_deref(), Some("tiny"));
+                let e = r.decode(input).unwrap_err();
+                assert_eq!(e.request_id(), 4);
+                assert!(e.to_string().contains("shape mismatch"), "{e}");
+            }
+            other => panic!("expected Infer, got {other:?}"),
+        }
+        // Wrong payload length fails at decode, blamed on the request id.
+        match parse_client_msg(r#"{"id": 5, "bits": "a5ff"}"#).unwrap() {
+            ClientMsg::Infer(r) => assert_eq!(r.decode(input).unwrap_err().request_id(), 5),
+            other => panic!("expected Infer, got {other:?}"),
+        }
         // Control messages.
-        assert_eq!(parse_client_msg(r#"{"op": "stats"}"#, input).unwrap(), ClientMsg::Stats);
-        assert_eq!(parse_client_msg(r#"{"op": "drain"}"#, input).unwrap(), ClientMsg::Drain);
-        assert!(parse_client_msg(r#"{"op": "reboot"}"#, input).is_err());
+        assert_eq!(parse_client_msg(r#"{"op": "stats"}"#).unwrap(), ClientMsg::Stats);
+        assert_eq!(parse_client_msg(r#"{"op": "drain"}"#).unwrap(), ClientMsg::Drain);
+        match parse_client_msg(r#"{"op": "load_model", "name": "z", "model": {}}"#).unwrap() {
+            ClientMsg::LoadModel { name, doc } => {
+                assert_eq!(name, "z");
+                assert_eq!(doc, Json::Obj(vec![]));
+            }
+            other => panic!("expected LoadModel, got {other:?}"),
+        }
+        assert_eq!(
+            parse_client_msg(r#"{"op": "unload_model", "name": "z"}"#).unwrap(),
+            ClientMsg::UnloadModel { name: "z".into() }
+        );
+        assert!(parse_client_msg(r#"{"op": "load_model"}"#).is_err(), "name required");
+        assert!(parse_client_msg(r#"{"op": "reboot"}"#).is_err());
     }
 
     #[test]

@@ -1,0 +1,374 @@
+//! The multi-model serve registry: name → [`Model`] → an isolated
+//! executor + queue + batcher lane.
+//!
+//! A server hosts any number of models at once. Each loaded model gets a
+//! **lane**: its own [`BatchExecutor`] (so lane packings and program
+//! caches never mix), its own bounded admission queue, its own batcher
+//! thread, and its own [`MetricsRegistry`] — which is what makes the
+//! accounting invariant *per model*: every lane independently satisfies
+//! `admitted == completed + shed + failed` at drain time, and the rolled-up
+//! totals satisfy it by composition ([`ServeStats::merge`]).
+//!
+//! Lanes are hot-pluggable. [`ModelRegistry::load`] builds and starts a
+//! lane on a live server (the wire `{"op": "load_model"}`);
+//! [`ModelRegistry::unload`] retires one *drain-safe*: the lane is
+//! unpublished first (new requests get `unknown model`), then its queue is
+//! closed, the batcher flushes every in-flight request — each answered
+//! exactly once — and only then is the final [`ModelDrain`] frozen. The
+//! drained report is kept so a later [`ModelRegistry::drain_all`] still
+//! accounts for every request the server ever admitted.
+
+use super::batcher::{Batcher, ServeAggregate};
+use super::queue::BoundedQueue;
+use super::{ServeConfig, ServeStats};
+use crate::bnn::Model;
+use crate::coordinator::{BatchExecutor, PerfReport, ReportParts};
+use crate::error::Error;
+use crate::metrics::MetricsRegistry;
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// One served model: executor, admission queue, batcher thread and scoped
+/// metrics. Handed out by [`ModelRegistry::get`] for request routing.
+pub struct ModelLane {
+    name: String,
+    exec: Arc<BatchExecutor>,
+    queue: Arc<BoundedQueue>,
+    metrics: Arc<MetricsRegistry>,
+    batcher: Mutex<Option<JoinHandle<ServeAggregate>>>,
+}
+
+impl std::fmt::Debug for ModelLane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelLane")
+            .field("name", &self.name)
+            .field("model", &self.exec.model().name())
+            .field("queue_depth", &self.queue.len())
+            .finish()
+    }
+}
+
+impl ModelLane {
+    /// Registry name this lane is published under.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The served model.
+    pub fn model(&self) -> &Model {
+        self.exec.model()
+    }
+
+    /// The lane's admission queue (where routed requests are pushed).
+    pub fn queue(&self) -> &Arc<BoundedQueue> {
+        &self.queue
+    }
+
+    /// The lane's scoped metrics registry.
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.metrics
+    }
+
+    /// Point-in-time accounting snapshot for this lane.
+    pub fn stats(&self) -> ServeStats {
+        ServeStats::from_registry(&self.metrics)
+    }
+}
+
+/// The frozen result of draining one lane: its final accounting plus the
+/// full engine-side [`PerfReport`].
+#[derive(Debug)]
+pub struct ModelDrain {
+    /// Registry name the model was served under.
+    pub name: String,
+    /// Final serving-layer accounting (the invariant holds here).
+    pub stats: ServeStats,
+    /// Engine-side report (cycles, energy, per-layer) with the serve
+    /// stats and metrics snapshot embedded.
+    pub report: PerfReport,
+}
+
+/// The thread-safe name → lane map (see the [module docs](self)).
+pub struct ModelRegistry {
+    cfg: ServeConfig,
+    /// Load order is meaningful: the first lane is the default route for
+    /// requests that omit the `model` field.
+    lanes: RwLock<Vec<Arc<ModelLane>>>,
+    /// Drain receipts of unloaded lanes, kept for the final report.
+    retired: Mutex<Vec<ModelDrain>>,
+}
+
+impl std::fmt::Debug for ModelRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelRegistry").field("models", &self.names()).finish()
+    }
+}
+
+impl ModelRegistry {
+    /// An empty registry; `cfg` shapes every lane built by
+    /// [`ModelRegistry::load`].
+    pub fn new(cfg: ServeConfig) -> Self {
+        ModelRegistry { cfg, lanes: RwLock::new(Vec::new()), retired: Mutex::new(Vec::new()) }
+    }
+
+    /// Names of the currently loaded models, in load order (the first is
+    /// the default route).
+    pub fn names(&self) -> Vec<String> {
+        self.lanes.read().expect("lanes lock").iter().map(|l| l.name.clone()).collect()
+    }
+
+    /// Number of loaded models.
+    pub fn len(&self) -> usize {
+        self.lanes.read().expect("lanes lock").len()
+    }
+
+    /// Whether no model is currently loaded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Build and publish a lane for `model` under `name`. The executor is
+    /// configured from the registry's [`ServeConfig`] (engine, array
+    /// geometry, worker threads) and the lane's batcher thread starts
+    /// immediately. Fails typed on a duplicate name or an unservable
+    /// model — a live server survives a bad `load_model` request.
+    pub fn load(&self, name: &str, model: Model) -> std::result::Result<(), Error> {
+        if self.lanes.read().expect("lanes lock").iter().any(|l| l.name == name) {
+            return Err(Error::DuplicateModel(name.to_string()));
+        }
+        // Build the lane outside the lock: packing a big model must not
+        // stall request routing on other lanes.
+        let mut exec = BatchExecutor::for_model(&model)?.with_engine(self.cfg.engine);
+        if let Some((units, pes)) = self.cfg.array {
+            exec = exec.with_array(units, pes);
+        }
+        if self.cfg.threads > 0 {
+            exec = exec.with_threads(self.cfg.threads);
+        }
+        let exec = Arc::new(exec);
+        let metrics = Arc::new(MetricsRegistry::new());
+        let queue = Arc::new(BoundedQueue::new(self.cfg.queue_cap, self.cfg.policy, &metrics));
+        let batcher = Batcher::new(
+            Arc::clone(&exec),
+            Arc::clone(&queue),
+            Arc::clone(&metrics),
+            self.cfg.max_batch,
+            Duration::from_micros(self.cfg.max_wait_us),
+        );
+        let handle = std::thread::Builder::new()
+            .name(format!("serve-batcher-{name}"))
+            .spawn(move || batcher.run())
+            .expect("spawning model batcher");
+        let lane = Arc::new(ModelLane {
+            name: name.to_string(),
+            exec,
+            queue,
+            metrics,
+            batcher: Mutex::new(Some(handle)),
+        });
+        let mut lanes = self.lanes.write().expect("lanes lock");
+        if lanes.iter().any(|l| l.name == name) {
+            // A concurrent loader won the race; tear our lane down unused.
+            drop(lanes);
+            drain_lane(&lane);
+            return Err(Error::DuplicateModel(name.to_string()));
+        }
+        lanes.push(lane);
+        Ok(())
+    }
+
+    /// Route a request: `Some(name)` looks up by name, `None` takes the
+    /// default (first-loaded) lane.
+    pub fn get(&self, name: Option<&str>) -> std::result::Result<Arc<ModelLane>, Error> {
+        let lanes = self.lanes.read().expect("lanes lock");
+        match name {
+            Some(n) => lanes
+                .iter()
+                .find(|l| l.name == n)
+                .cloned()
+                .ok_or_else(|| Error::UnknownModel(n.to_string())),
+            None => {
+                lanes.first().cloned().ok_or_else(|| Error::UnknownModel("(default)".to_string()))
+            }
+        }
+    }
+
+    /// Drain-safe unload: unpublish the lane, close its queue, let the
+    /// batcher answer everything still in flight, and freeze the final
+    /// accounting. Returns the lane's final [`ServeStats`] (on which
+    /// [`ServeStats::accounted`] holds); the full [`ModelDrain`] is
+    /// retained for [`ModelRegistry::drain_all`].
+    pub fn unload(&self, name: &str) -> std::result::Result<ServeStats, Error> {
+        let lane = {
+            let mut lanes = self.lanes.write().expect("lanes lock");
+            let i = lanes
+                .iter()
+                .position(|l| l.name == name)
+                .ok_or_else(|| Error::UnknownModel(name.to_string()))?;
+            lanes.remove(i)
+        };
+        let drain = drain_lane(&lane);
+        let stats = drain.stats.clone();
+        self.retired.lock().expect("retired lock").push(drain);
+        Ok(stats)
+    }
+
+    /// Drain every remaining lane and return all drain receipts — retired
+    /// lanes first, then live ones — so the final report accounts for
+    /// every request the server ever admitted.
+    pub fn drain_all(&self) -> Vec<ModelDrain> {
+        let lanes: Vec<Arc<ModelLane>> =
+            std::mem::take(&mut *self.lanes.write().expect("lanes lock"));
+        let mut out = std::mem::take(&mut *self.retired.lock().expect("retired lock"));
+        out.extend(lanes.iter().map(drain_lane));
+        out
+    }
+
+    /// Server-wide accounting right now: live lanes plus already-retired
+    /// ones (so totals never go backwards when a model is unloaded).
+    pub fn total_stats(&self) -> ServeStats {
+        let mut total = ServeStats::default();
+        for lane in self.lanes.read().expect("lanes lock").iter() {
+            total.merge(&lane.stats());
+        }
+        for d in self.retired.lock().expect("retired lock").iter() {
+            total.merge(&d.stats);
+        }
+        total
+    }
+
+    /// The reply to the wire `{"op": "stats"}`: rolled-up totals plus a
+    /// per-model breakdown of the currently loaded lanes.
+    pub fn stats_line(&self) -> String {
+        let per_model: Vec<String> = self
+            .lanes
+            .read()
+            .expect("lanes lock")
+            .iter()
+            .map(|l| {
+                format!(
+                    "{{\"name\": {}, {}}}",
+                    super::protocol::json_str(&l.name),
+                    l.stats().json_fields()
+                )
+            })
+            .collect();
+        format!(
+            "{{\"op\": \"stats\", {}, \"models\": [{}]}}",
+            self.total_stats().json_fields(),
+            per_model.join(", ")
+        )
+    }
+}
+
+/// Close a lane's queue, join its batcher (which answers everything still
+/// queued, exactly once), then freeze accounting and the perf report.
+/// Ordering is what makes the invariant hold: the stats snapshot happens
+/// strictly after the batcher exits.
+fn drain_lane(lane: &Arc<ModelLane>) -> ModelDrain {
+    lane.queue.close();
+    let handle = lane.batcher.lock().expect("batcher lock").take();
+    let agg = match handle {
+        Some(h) => h.join().expect("model batcher panicked"),
+        None => ServeAggregate::default(),
+    };
+    let stats = ServeStats::from_registry(&lane.metrics);
+    let parts = ReportParts {
+        batch: agg.images as usize,
+        wall: agg.busy,
+        cycles: agg.cycles,
+        stats: agg.stats,
+        layers: agg.layers.clone(),
+        per_pe: agg.per_pe.clone(),
+        workers: agg.worker_summaries(),
+    };
+    let report = PerfReport::from_parts(&lane.exec, parts)
+        .with_serve(stats.clone())
+        .with_metrics(lane.metrics.snapshot());
+    ModelDrain { name: lane.name.clone(), stats, report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::tensor::BitTensor;
+    use crate::serve::queue::ServeRequest;
+    use crate::serve::ServeResponse;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn small_cfg() -> ServeConfig {
+        ServeConfig::builder().max_batch(4).max_wait_us(200).queue_cap(16).array(1, 4).build()
+    }
+
+    #[test]
+    fn load_route_and_duplicate_are_typed() {
+        let reg = ModelRegistry::new(small_cfg());
+        assert!(reg.is_empty());
+        reg.load("a", Model::demo("tiny8").unwrap()).unwrap();
+        reg.load("b", Model::demo("tiny").unwrap()).unwrap();
+        assert_eq!(reg.names(), vec!["a", "b"]);
+        // Default route is the first-loaded lane.
+        assert_eq!(reg.get(None).unwrap().name(), "a");
+        assert_eq!(reg.get(Some("b")).unwrap().model().input_dims(), (16, 16, 8));
+        match reg.get(Some("zzz")) {
+            Err(Error::UnknownModel(n)) => assert_eq!(n, "zzz"),
+            other => panic!("expected UnknownModel, got {other:?}"),
+        }
+        match reg.load("a", Model::demo("tiny8").unwrap()) {
+            Err(Error::DuplicateModel(n)) => assert_eq!(n, "a"),
+            other => panic!("expected DuplicateModel, got {other:?}"),
+        }
+        for d in reg.drain_all() {
+            assert!(d.stats.accounted());
+        }
+    }
+
+    #[test]
+    fn unload_is_drain_safe_and_accounted() {
+        let reg = ModelRegistry::new(small_cfg());
+        reg.load("t8", Model::demo("tiny8").unwrap()).unwrap();
+        let lane = reg.get(Some("t8")).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..3u64 {
+            let (tx, rx) = channel();
+            lane.queue()
+                .push(ServeRequest {
+                    id: i,
+                    image: BitTensor::random(8, 8, 4, 40 + i),
+                    deadline: None,
+                    enqueued: Instant::now(),
+                    resp: tx,
+                })
+                .unwrap();
+            rxs.push(rx);
+        }
+        // Unload with requests in flight: all three must still be answered.
+        let stats = reg.unload("t8").unwrap();
+        assert!(stats.accounted(), "unload must leave zero accounting discrepancy");
+        assert_eq!(stats.admitted, 3);
+        assert_eq!(stats.completed, 3);
+        for rx in &rxs {
+            let resp = ServeResponse::parse(&rx.try_recv().expect("answered")).unwrap();
+            assert_eq!(resp.status, crate::serve::Status::Ok);
+        }
+        // The lane is unpublished; its numbers survive in the totals.
+        assert!(matches!(reg.get(Some("t8")), Err(Error::UnknownModel(_))));
+        assert_eq!(reg.total_stats().completed, 3);
+        let drains = reg.drain_all();
+        assert_eq!(drains.len(), 1);
+        assert_eq!(drains[0].name, "t8");
+        assert_eq!(drains[0].report.batch as u64, 3);
+    }
+
+    #[test]
+    fn stats_line_breaks_out_models() {
+        let reg = ModelRegistry::new(small_cfg());
+        reg.load("x", Model::demo("tiny8").unwrap()).unwrap();
+        let line = reg.stats_line();
+        assert!(line.contains("\"op\": \"stats\""), "{line}");
+        assert!(line.contains("\"models\": [{\"name\": \"x\""), "{line}");
+        reg.drain_all();
+    }
+}

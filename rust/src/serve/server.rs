@@ -1,28 +1,38 @@
-//! The TCP front-end: connection handling, admission, graceful drain.
+//! The TCP front-end: connection handling, model routing, graceful drain.
 //!
-//! [`serve`] binds a listener and returns a [`ServeHandle`] immediately —
-//! the accept loop and the batcher run on background threads. Each
-//! connection gets a reader (parses request lines, pushes into the
-//! admission queue) and a writer thread (drains an `mpsc` channel of
-//! encoded response lines), so responses from the batcher never block the
-//! engine on a slow client socket.
+//! [`serve`] loads the given models into a [`ModelRegistry`], binds a
+//! listener and returns a [`ServeHandle`] immediately — the accept loop
+//! and every model's batcher run on background threads. Each connection
+//! gets a reader (parses request lines, routes them to a model lane by
+//! the request's `model` field, pushes into that lane's admission queue)
+//! and a writer thread (drains an `mpsc` channel of encoded response
+//! lines), so responses from the batchers never block an engine on a slow
+//! client socket.
+//!
+//! Models are hot-pluggable over the wire: `{"op": "load_model"}` decodes
+//! an inline `tulip.model/v1` document and publishes a new lane;
+//! `{"op": "unload_model"}` retires one drain-safe — in-flight requests
+//! are answered first, and the reply carries the lane's final counters
+//! with an `"accounted"` verdict.
 //!
 //! Shutdown is graceful by construction: a `{"op": "drain"}` control
 //! message — or SIGTERM/ctrl-c via [`request_drain`] — stops the accept
-//! loop and closes the queue; the batcher then flushes everything still
-//! queued (deadline sheds still apply), and [`ServeHandle::drain`] joins
-//! the threads and freezes the final [`PerfReport`].
+//! loop; [`ServeHandle::drain`] then closes every lane's queue, the
+//! batchers flush everything still queued (deadline sheds still apply),
+//! and the final [`ServeReport`] freezes one [`PerfReport`] per model
+//! plus the rolled-up totals.
 
-use super::batcher::Batcher;
-use super::protocol::{parse_client_msg, ClientMsg, ServeResponse};
-use super::queue::{BoundedQueue, PushError, ServeRequest};
+use super::protocol::{json_str, parse_client_msg, ClientMsg, ServeResponse};
+use super::queue::{PushError, ServeRequest};
+use super::registry::{ModelDrain, ModelRegistry};
 use super::{ServeConfig, ServeStats};
-use crate::coordinator::{BatchExecutor, PerfReport, ReportParts};
-use crate::metrics::MetricsRegistry;
+use crate::bnn::Model;
+use crate::coordinator::PerfReport;
 use crate::Result;
 use anyhow::Context;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -41,16 +51,14 @@ pub fn request_drain() {
     SIGNAL_DRAIN.store(true, Ordering::SeqCst);
 }
 
-/// A running server: background accept loop + batcher, plus everything
-/// needed to account for and report on them at drain time.
+/// A running server: background accept loop plus one batcher per loaded
+/// model, and everything needed to account for and report on them at
+/// drain time.
 pub struct ServeHandle {
     addr: SocketAddr,
-    exec: Arc<BatchExecutor>,
-    queue: Arc<BoundedQueue>,
-    registry: Arc<MetricsRegistry>,
+    models: Arc<ModelRegistry>,
     draining: Arc<AtomicBool>,
     accept: JoinHandle<()>,
-    batcher: JoinHandle<super::batcher::ServeAggregate>,
     started: Instant,
 }
 
@@ -60,16 +68,15 @@ impl ServeHandle {
         self.addr
     }
 
-    /// This server's scoped metrics registry.
-    pub fn registry(&self) -> &Arc<MetricsRegistry> {
-        &self.registry
+    /// The server's model registry (route lookups, hot load/unload,
+    /// per-model stats).
+    pub fn models(&self) -> &Arc<ModelRegistry> {
+        &self.models
     }
 
     /// Whether a drain has been requested (by signal, wire, or handle).
     pub fn drain_requested(&self) -> bool {
-        SIGNAL_DRAIN.load(Ordering::SeqCst)
-            || self.draining.load(Ordering::SeqCst)
-            || self.queue.is_closed()
+        SIGNAL_DRAIN.load(Ordering::SeqCst) || self.draining.load(Ordering::SeqCst)
     }
 
     /// Block until a drain is requested, polling the flags.
@@ -79,105 +86,136 @@ impl ServeHandle {
         }
     }
 
-    /// Gracefully drain: stop accepting, flush the queue through the
-    /// batcher (deadline sheds still apply), join the background threads,
-    /// and freeze the final report. The returned [`PerfReport`] carries
-    /// the [`ServeStats`] accounting — `admitted == completed + shed +
-    /// failed` holds at this point, every admitted request answered.
-    pub fn drain(self) -> Result<PerfReport> {
+    /// Gracefully drain: stop accepting, flush every lane's queue through
+    /// its batcher (deadline sheds still apply), join the background
+    /// threads, and freeze the final per-model report. The returned
+    /// [`ServeReport`] carries one [`PerfReport`] per model — including
+    /// models unloaded earlier over the wire — and `admitted == completed
+    /// + shed + failed` holds per model and in total, every admitted
+    /// request answered.
+    pub fn drain(self) -> Result<ServeReport> {
         self.draining.store(true, Ordering::SeqCst);
-        self.queue.close();
         self.accept.join().map_err(|_| anyhow::anyhow!("accept loop panicked"))?;
-        let agg = self.batcher.join().map_err(|_| anyhow::anyhow!("batcher panicked"))?;
-        let uptime = self.started.elapsed();
-        let parts = ReportParts {
-            batch: agg.images as usize,
-            wall: agg.busy,
-            cycles: agg.cycles,
-            stats: agg.stats,
-            layers: agg.layers.clone(),
-            per_pe: agg.per_pe.clone(),
-            workers: agg.worker_summaries(),
-        };
-        let stats = ServeStats::from_registry(&self.registry);
-        self.registry.gauge("serve.uptime_ms").set(uptime.as_secs_f64() * 1e3);
-        Ok(PerfReport::from_parts(&self.exec, parts)
-            .with_serve(stats)
-            .with_metrics(self.registry.snapshot()))
+        let models = self.models.drain_all();
+        let mut total = ServeStats::default();
+        for d in &models {
+            total.merge(&d.stats);
+        }
+        Ok(ServeReport { models, total, uptime_ms: self.started.elapsed().as_secs_f64() * 1e3 })
     }
 }
 
-/// Bind and start serving. Returns as soon as the listener is bound; use
+/// The final artifact of a drained server: per-model drain receipts plus
+/// the server-wide accounting rollup.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// One receipt per model the server ever loaded (wire-unloaded lanes
+    /// included), each carrying its own [`PerfReport`].
+    pub models: Vec<ModelDrain>,
+    /// All lanes' [`ServeStats`] merged.
+    pub total: ServeStats,
+    /// Server uptime, milliseconds.
+    pub uptime_ms: f64,
+}
+
+impl ServeReport {
+    /// The drain invariant, checked per model *and* on the rollup.
+    pub fn accounted(&self) -> bool {
+        self.total.accounted() && self.models.iter().all(|m| m.stats.accounted())
+    }
+
+    /// The report for one model by registry name.
+    pub fn model(&self, name: &str) -> Option<&PerfReport> {
+        self.models.iter().find(|m| m.name == name).map(|m| &m.report)
+    }
+
+    /// Serialize as `tulip.serve_report/v1`: the rolled-up `serve` block
+    /// plus one embedded `tulip.perf_report/v1` per model.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(4096);
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"tulip.serve_report/v1\",\n");
+        s.push_str(&format!("  \"uptime_ms\": {:.3},\n", self.uptime_ms));
+        s.push_str(&format!("  \"accounted\": {},\n", self.accounted()));
+        s.push_str(&format!("  \"serve\": {{{}}},\n", self.total.json_fields()));
+        s.push_str("  \"models\": [");
+        for (i, m) in self.models.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    {{\"name\": {}, \"serve\": {{{}}}, \"report\": {}}}",
+                json_str(&m.name),
+                m.stats.json_fields(),
+                m.report.to_json()
+            ));
+        }
+        s.push_str("\n  ]\n}\n");
+        s
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing serve report {}: {e}", path.as_ref().display()))
+    }
+
+    /// Pretty-print: one accounting line per model, then each model's
+    /// engine summary.
+    pub fn print_summary(&self) {
+        println!("serve report — uptime {:.1} ms, accounted: {}", self.uptime_ms, self.accounted());
+        let t = &self.total;
+        println!(
+            "total: admitted {} = completed {} + shed {} + failed {} (rejected {})",
+            t.admitted, t.completed, t.shed, t.failed, t.rejected
+        );
+        for m in &self.models {
+            let s = &m.stats;
+            println!(
+                "\nmodel '{}': admitted {} = completed {} + shed {} + failed {} (rejected {})",
+                m.name, s.admitted, s.completed, s.shed, s.failed, s.rejected
+            );
+            m.report.print_summary();
+        }
+    }
+}
+
+/// Load `models` (name → [`Model`], the first being the default route),
+/// bind and start serving. Returns as soon as the listener is bound; use
 /// the returned handle to wait and drain.
-pub fn serve(exec: BatchExecutor, cfg: ServeConfig) -> Result<ServeHandle> {
-    let exec = Arc::new(exec);
-    let registry = Arc::new(MetricsRegistry::new());
-    let queue = Arc::new(BoundedQueue::new(cfg.queue_cap, cfg.policy, &registry));
+pub fn serve(models: Vec<(String, Model)>, cfg: ServeConfig) -> Result<ServeHandle> {
+    anyhow::ensure!(!models.is_empty(), "serve needs at least one model");
+    let registry = Arc::new(ModelRegistry::new(cfg.clone()));
+    for (name, model) in models {
+        registry.load(&name, model).with_context(|| format!("loading model '{name}'"))?;
+    }
     let draining = Arc::new(AtomicBool::new(false));
     let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
     listener.set_nonblocking(true).context("nonblocking listener")?;
     let addr = listener.local_addr().context("local addr")?;
 
-    let batcher = Batcher::new(
-        Arc::clone(&exec),
-        Arc::clone(&queue),
-        Arc::clone(&registry),
-        cfg.max_batch,
-        Duration::from_micros(cfg.max_wait_us),
-    );
-    let batcher = std::thread::Builder::new()
-        .name("serve-batcher".into())
-        .spawn(move || batcher.run())
-        .context("spawning batcher")?;
-
     let accept = {
-        let exec = Arc::clone(&exec);
-        let queue = Arc::clone(&queue);
         let registry = Arc::clone(&registry);
         let draining = Arc::clone(&draining);
         std::thread::Builder::new()
             .name("serve-accept".into())
-            .spawn(move || accept_loop(listener, exec, queue, registry, draining))
+            .spawn(move || accept_loop(listener, registry, draining))
             .context("spawning accept loop")?
     };
 
-    Ok(ServeHandle {
-        addr,
-        exec,
-        queue,
-        registry,
-        draining,
-        accept,
-        batcher,
-        started: Instant::now(),
-    })
+    Ok(ServeHandle { addr, models: registry, draining, accept, started: Instant::now() })
 }
 
 /// Poll-accept until a drain is requested (nonblocking listener + short
 /// sleep, so the loop notices the flags without a connection arriving).
-fn accept_loop(
-    listener: TcpListener,
-    exec: Arc<BatchExecutor>,
-    queue: Arc<BoundedQueue>,
-    registry: Arc<MetricsRegistry>,
-    draining: Arc<AtomicBool>,
-) {
-    let connections = registry.gauge("serve.connections");
-    while !SIGNAL_DRAIN.load(Ordering::SeqCst)
-        && !draining.load(Ordering::SeqCst)
-        && !queue.is_closed()
-    {
+fn accept_loop(listener: TcpListener, registry: Arc<ModelRegistry>, draining: Arc<AtomicBool>) {
+    while !SIGNAL_DRAIN.load(Ordering::SeqCst) && !draining.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _peer)) => {
-                let exec = Arc::clone(&exec);
-                let queue = Arc::clone(&queue);
                 let registry = Arc::clone(&registry);
                 let draining = Arc::clone(&draining);
-                let connections = connections.clone();
-                connections.inc();
                 let _ = std::thread::Builder::new().name("serve-conn".into()).spawn(move || {
-                    let _ = handle_connection(stream, &exec, &queue, &registry, &draining);
-                    connections.dec();
+                    let _ = handle_connection(stream, &registry, &draining);
                 });
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -206,17 +244,14 @@ fn spawn_writer(stream: TcpStream, rx: Receiver<String>) -> JoinHandle<()> {
         .expect("spawning connection writer")
 }
 
-/// One connection's reader: parse request lines, admit them, reply
-/// directly on protocol/admission errors.
+/// One connection's reader: parse request lines, route them to model
+/// lanes, admit them, reply directly on protocol/routing/admission errors
+/// and control ops.
 fn handle_connection(
     stream: TcpStream,
-    exec: &BatchExecutor,
-    queue: &BoundedQueue,
-    registry: &MetricsRegistry,
+    registry: &ModelRegistry,
     draining: &AtomicBool,
 ) -> Result<()> {
-    let l0 = &exec.network().layers[0];
-    let input = (l0.y1, l0.x1, l0.z1);
     let write_stream = stream.try_clone().context("cloning stream for writer")?;
     let (tx, rx): (Sender<String>, Receiver<String>) = channel();
     let writer = spawn_writer(write_stream, rx);
@@ -229,40 +264,87 @@ fn handle_connection(
         if line.trim().is_empty() {
             continue;
         }
-        match parse_client_msg(&line, input) {
+        match parse_client_msg(&line) {
             Ok(ClientMsg::Infer(req)) => {
-                let (h, w, c) = input;
-                let deadline =
-                    req.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+                let lane = match registry.get(req.model.as_deref()) {
+                    Ok(lane) => lane,
+                    Err(e) => {
+                        let msg = e.to_string();
+                        let _ = tx.send(ServeResponse::error(req.id, &msg).to_json_line());
+                        continue;
+                    }
+                };
+                let image = match req.decode(lane.model().input_dims()) {
+                    Ok(image) => image,
+                    Err(e) => {
+                        let msg = e.to_string();
+                        let _ = tx.send(ServeResponse::error(e.request_id(), &msg).to_json_line());
+                        continue;
+                    }
+                };
+                let deadline = req.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
                 let sreq = ServeRequest {
                     id: req.id,
-                    image: req.image(h, w, c),
+                    image,
                     deadline,
                     enqueued: Instant::now(),
                     resp: tx.clone(),
                 };
-                match queue.push(sreq) {
+                match lane.queue().push(sreq) {
                     Ok(()) => {}
                     Err(PushError::Full(r)) => {
                         let _ = tx.send(ServeResponse::rejected(r.id, "queue full").to_json_line());
                     }
                     Err(PushError::Closed(r)) => {
-                        let _ = tx
-                            .send(ServeResponse::rejected(r.id, "server draining").to_json_line());
+                        let line = ServeResponse::rejected(r.id, "server draining").to_json_line();
+                        let _ = tx.send(line);
                     }
                 }
             }
             Ok(ClientMsg::Stats) => {
-                let _ = tx.send(ServeStats::from_registry(registry).to_json_line());
+                let _ = tx.send(registry.stats_line());
             }
             Ok(ClientMsg::Drain) => {
                 let _ = tx.send("{\"op\": \"drain\", \"ack\": true}".to_string());
                 draining.store(true, Ordering::SeqCst);
-                queue.close();
                 break;
             }
+            Ok(ClientMsg::LoadModel { name, doc }) => {
+                let loaded =
+                    Model::from_json_value(&doc).and_then(|model| registry.load(&name, model));
+                let reply = match loaded {
+                    Ok(()) => format!(
+                        "{{\"op\": \"load_model\", \"name\": {}, \"ok\": true}}",
+                        json_str(&name)
+                    ),
+                    Err(e) => format!(
+                        "{{\"op\": \"load_model\", \"name\": {}, \"ok\": false, \"error\": {}}}",
+                        json_str(&name),
+                        json_str(&e.to_string())
+                    ),
+                };
+                let _ = tx.send(reply);
+            }
+            Ok(ClientMsg::UnloadModel { name }) => {
+                let reply = match registry.unload(&name) {
+                    Ok(stats) => format!(
+                        "{{\"op\": \"unload_model\", \"name\": {}, \"ok\": true, \
+                         \"accounted\": {}, {}}}",
+                        json_str(&name),
+                        stats.accounted(),
+                        stats.json_fields()
+                    ),
+                    Err(e) => format!(
+                        "{{\"op\": \"unload_model\", \"name\": {}, \"ok\": false, \"error\": {}}}",
+                        json_str(&name),
+                        json_str(&e.to_string())
+                    ),
+                };
+                let _ = tx.send(reply);
+            }
             Err(e) => {
-                let _ = tx.send(ServeResponse::error(e.id, &e.msg).to_json_line());
+                let msg = e.to_string();
+                let _ = tx.send(ServeResponse::error(e.request_id(), &msg).to_json_line());
             }
         }
     }

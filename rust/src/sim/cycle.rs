@@ -476,7 +476,11 @@ pub struct ForwardResult {
 /// of the final layer. This is the per-image unit of work of the batched
 /// inference engine (`coordinator::batch`); integer layers are out of scope
 /// here exactly as they are for the TULIP-PEs (§V-C routes them to MACs).
-pub fn forward_bin_cycle(
+///
+/// Exposed through [`Model::forward_scalar`](crate::bnn::Model::forward_scalar);
+/// the raw `(net, weights)` entry point survives as the deprecated
+/// [`forward_bin_cycle`] shim.
+pub(crate) fn forward_scalar_impl(
     array: &mut PeArray,
     sg: &mut SequenceGenerator,
     input: &BitTensor,
@@ -542,10 +546,14 @@ pub fn forward_bin_cycle(
 }
 
 /// Bit-sliced whole-network forward pass — the lane-parallel counterpart of
-/// [`forward_bin_cycle`], bit-identical in scores, cycles, per-layer
+/// [`forward_scalar_impl`], bit-identical in scores, cycles, per-layer
 /// records and per-PE activity (asserted by `tests/bitslice.rs`). `packed`
 /// must come from [`SlicedWeights::pack`] on the same `(net, weights)`.
-pub fn forward_bin_sliced(
+///
+/// Exposed through [`Model::forward_sliced`](crate::bnn::Model::forward_sliced),
+/// which also owns the lazily-built packing; the raw tuple entry point
+/// survives as the deprecated [`forward_bin_sliced`] shim.
+pub(crate) fn forward_sliced_impl(
     arr: &mut SlicedArray,
     sg: &mut SequenceGenerator,
     input: &BitTensor,
@@ -616,6 +624,44 @@ pub fn forward_bin_sliced(
         }
     }
     panic!("network must end in an FC layer");
+}
+
+/// Deprecated tuple-shaped entry point — build a
+/// [`Model`](crate::bnn::Model) and call
+/// [`Model::forward_scalar`](crate::bnn::Model::forward_scalar) instead.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a bnn::Model and call Model::forward_scalar; removed next release"
+)]
+#[doc(hidden)]
+pub fn forward_bin_cycle(
+    array: &mut PeArray,
+    sg: &mut SequenceGenerator,
+    input: &BitTensor,
+    net: &Network,
+    weights: &[BinWeights],
+) -> ForwardResult {
+    forward_scalar_impl(array, sg, input, net, weights)
+}
+
+/// Deprecated tuple-shaped entry point — build a
+/// [`Model`](crate::bnn::Model) and call
+/// [`Model::forward_sliced`](crate::bnn::Model::forward_sliced) instead
+/// (the model owns the packing, so the `packed` argument disappears).
+#[deprecated(
+    since = "0.2.0",
+    note = "build a bnn::Model and call Model::forward_sliced; removed next release"
+)]
+#[doc(hidden)]
+pub fn forward_bin_sliced(
+    arr: &mut SlicedArray,
+    sg: &mut SequenceGenerator,
+    input: &BitTensor,
+    net: &Network,
+    weights: &[BinWeights],
+    packed: &SlicedWeights,
+) -> ForwardResult {
+    forward_sliced_impl(arr, sg, input, net, weights, packed)
 }
 
 #[cfg(test)]
@@ -694,12 +740,12 @@ mod tests {
         let input = BitTensor::random(8, 8, 4, 17);
         let mut array = small_array();
         let mut sg = SequenceGenerator::new();
-        let a = forward_bin_cycle(&mut array, &mut sg, &input, &net, &weights);
+        let a = forward_scalar_impl(&mut array, &mut sg, &input, &net, &weights);
         assert_eq!(a.scores, reference::forward_scores(&net, &input, &weights));
         assert!(a.cycles > 0 && a.stats.neuron_evals > 0);
         // Per-image accounting: a second identical pass reports identical
         // (not accumulated) stats, even though the array was reused.
-        let b = forward_bin_cycle(&mut array, &mut sg, &input, &net, &weights);
+        let b = forward_scalar_impl(&mut array, &mut sg, &input, &net, &weights);
         assert_eq!(a.scores, b.scores);
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.stats, b.stats);
@@ -781,10 +827,10 @@ mod tests {
         let input = BitTensor::random(8, 8, 4, 17);
         let mut array = small_array();
         let mut sg = SequenceGenerator::new();
-        let a = forward_bin_cycle(&mut array, &mut sg, &input, &net, &weights);
+        let a = forward_scalar_impl(&mut array, &mut sg, &input, &net, &weights);
         let mut arr = SlicedArray::new(2, 4);
         let mut sg2 = SequenceGenerator::new();
-        let b = forward_bin_sliced(&mut arr, &mut sg2, &input, &net, &weights, &packed);
+        let b = forward_sliced_impl(&mut arr, &mut sg2, &input, &net, &weights, &packed);
         assert_eq!(b.scores, a.scores);
         assert_eq!(b.cycles, a.cycles);
         assert_eq!(b.stats, a.stats);

@@ -11,26 +11,17 @@
 //!   `batch ×` the single-image `NetworkPerf` model.
 
 use std::sync::Arc;
-use tulip::bnn::tensor::{BinWeights, BitTensor};
-use tulip::bnn::{binarynet_cifar10, tiny_bnn, Network};
+use tulip::bnn::tensor::BitTensor;
+use tulip::bnn::{binarynet_cifar10, tiny_bnn, Model};
 use tulip::config::ArchConfig;
 use tulip::coordinator::{BatchExecutor, BatchPerf, BatchRequest, NetworkPerf};
 use tulip::pe::PeStats;
 use tulip::scheduler::seqgen::{OpDesc, SequenceGenerator};
 use tulip::scheduler::ProgramCache;
 
-fn weights_for(net: &Network, seed: u64) -> Vec<BinWeights> {
-    net.layers
-        .iter()
-        .enumerate()
-        .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), seed + i as u64))
-        .collect()
-}
-
 fn tiny_executor(seed: u64) -> BatchExecutor {
-    let net = tiny_bnn(8, 4, 3);
-    let weights = weights_for(&net, seed);
-    BatchExecutor::new(net, weights).unwrap().with_array(2, 4)
+    let model = Model::random(tiny_bnn(8, 4, 3), seed).unwrap();
+    BatchExecutor::for_model(&model).unwrap().with_array(2, 4)
 }
 
 fn tiny_images(n: u64, seed: u64) -> Vec<BitTensor> {

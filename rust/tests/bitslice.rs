@@ -14,22 +14,13 @@ use tulip::arch::unit::{PeArray, SlicedArray};
 use tulip::bnn::bitpack::{LaneWeights, PackedWeights};
 use tulip::bnn::layer::LayerKind;
 use tulip::bnn::tensor::{BinWeights, BitTensor};
-use tulip::bnn::{tiny_bnn, Layer, Network};
+use tulip::bnn::{tiny_bnn, Layer, Model};
 use tulip::coordinator::{BatchExecutor, BatchRequest, ForwardEngine};
 use tulip::scheduler::seqgen::SequenceGenerator;
 use tulip::sim::cycle::{
-    conv_bin_cycle, conv_bin_sliced, fc_bin_cycle, fc_bin_sliced, forward_bin_cycle,
-    forward_bin_sliced, maxpool_cycle, maxpool_sliced, SlicedWeights,
+    conv_bin_cycle, conv_bin_sliced, fc_bin_cycle, fc_bin_sliced, maxpool_cycle, maxpool_sliced,
 };
 use tulip::util::prop::forall;
-
-fn weights_for(net: &Network, seed: u64) -> Vec<BinWeights> {
-    net.layers
-        .iter()
-        .enumerate()
-        .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), seed + i as u64))
-        .collect()
-}
 
 /// Paired engines sharing one program cache (as the serving engine does).
 fn engines() -> (PeArray, SlicedArray, SequenceGenerator, SequenceGenerator) {
@@ -143,21 +134,21 @@ fn prop_fc_scalar_vs_sliced() {
 #[test]
 fn forward_results_identical_on_zoo_networks() {
     for (net, seed) in [(tiny_bnn(8, 4, 3), 90u64), (tiny_bnn(16, 8, 5), 400u64)] {
-        let weights = weights_for(&net, seed);
-        let packed = SlicedWeights::pack(&net, &weights);
-        let l0 = &net.layers[0];
-        let input = BitTensor::random(l0.y1, l0.x1, l0.z1, seed + 17);
+        let model = Model::random(net, seed).unwrap();
+        let name = model.name().to_string();
+        let (h, w, c) = model.input_dims();
+        let input = BitTensor::random(h, w, c, seed + 17);
         let (mut array, mut arr, mut sg, mut sg2) = engines();
-        let a = forward_bin_cycle(&mut array, &mut sg, &input, &net, &weights);
-        let b = forward_bin_sliced(&mut arr, &mut sg2, &input, &net, &weights, &packed);
-        assert_eq!(b.scores, a.scores, "{}", net.name);
-        assert_eq!(b.cycles, a.cycles, "{}", net.name);
-        assert_eq!(b.stats, a.stats, "{}", net.name);
-        assert_eq!(b.layers, a.layers, "{}", net.name);
-        assert_eq!(b.per_pe, a.per_pe, "{}", net.name);
+        let a = model.forward_scalar(&mut array, &mut sg, &input);
+        let b = model.forward_sliced(&mut arr, &mut sg2, &input);
+        assert_eq!(b.scores, a.scores, "{name}");
+        assert_eq!(b.cycles, a.cycles, "{name}");
+        assert_eq!(b.stats, a.stats, "{name}");
+        assert_eq!(b.layers, a.layers, "{name}");
+        assert_eq!(b.per_pe, a.per_pe, "{name}");
         // The per-layer records still partition the totals exactly.
         let layer_cycles: u64 = b.layers.iter().map(|l| l.cycles).sum();
-        assert_eq!(layer_cycles, b.cycles, "{}", net.name);
+        assert_eq!(layer_cycles, b.cycles, "{name}");
     }
 }
 
@@ -165,13 +156,12 @@ fn forward_results_identical_on_zoo_networks() {
 /// either engine, per image and in aggregate.
 #[test]
 fn batch_executor_engines_agree() {
-    let net = tiny_bnn(8, 4, 3);
-    let weights = weights_for(&net, 300);
-    let scalar = BatchExecutor::new(net.clone(), weights.clone())
+    let model = Model::random(tiny_bnn(8, 4, 3), 300).unwrap();
+    let scalar = BatchExecutor::for_model(&model)
         .unwrap()
         .with_array(2, 4)
         .with_engine(ForwardEngine::Scalar);
-    let sliced = BatchExecutor::new(net, weights).unwrap().with_array(2, 4);
+    let sliced = BatchExecutor::for_model(&model).unwrap().with_array(2, 4);
     assert_eq!(sliced.engine(), ForwardEngine::BitSliced);
     let req = BatchRequest::new((0..4).map(|i| BitTensor::random(8, 8, 4, 700 + i)).collect());
     let a = scalar.run(&req).unwrap();

@@ -4,42 +4,33 @@
 //! metrics registry, and the perf report serializes all of it.
 
 use std::sync::Arc;
-use tulip::bnn::tensor::{BinWeights, BitTensor};
-use tulip::bnn::tiny_bnn;
+use tulip::bnn::tensor::BitTensor;
+use tulip::bnn::{tiny_bnn, Model};
 use tulip::coordinator::{BatchExecutor, BatchRequest, PerfReport};
 use tulip::metrics::{self, MetricsRegistry};
 use tulip::pe::PeStats;
 use tulip::scheduler::seqgen::SequenceGenerator;
 use tulip::scheduler::ProgramCache;
-use tulip::sim::cycle::forward_bin_cycle;
 
-fn tiny_weights() -> (tulip::bnn::Network, Vec<BinWeights>) {
-    let net = tiny_bnn(8, 4, 3);
-    let weights: Vec<BinWeights> = net
-        .layers
-        .iter()
-        .enumerate()
-        .map(|(i, l)| BinWeights::random(l.z2, l.fanin(), 300 + i as u64))
-        .collect();
-    (net, weights)
+fn tiny_model() -> Model {
+    Model::random(tiny_bnn(8, 4, 3), 300).unwrap()
 }
 
 fn tiny_executor(cache: Arc<ProgramCache>) -> BatchExecutor {
-    let (net, weights) = tiny_weights();
-    BatchExecutor::new(net, weights).unwrap().with_array(1, 4).with_cache(cache)
+    BatchExecutor::for_model(&tiny_model()).unwrap().with_array(1, 4).with_cache(cache)
 }
 
 /// The per-layer observability records partition the forward pass exactly:
 /// Σ layer cycles == whole-network cycles and Σ layer stats == total stats.
 #[test]
 fn per_layer_records_partition_forward_pass() {
-    let (net, weights) = tiny_weights();
+    let model = tiny_model();
     let input = BitTensor::random(8, 8, 4, 77);
     let mut array = tulip::arch::unit::PeArray::new(1, 4);
     let mut sg = SequenceGenerator::new();
-    let f = forward_bin_cycle(&mut array, &mut sg, &input, &net, &weights);
+    let f = model.forward_scalar(&mut array, &mut sg, &input);
 
-    assert_eq!(f.layers.len(), net.layers.len());
+    assert_eq!(f.layers.len(), model.network().layers.len());
     let layer_cycles: u64 = f.layers.iter().map(|l| l.cycles).sum();
     assert_eq!(layer_cycles, f.cycles, "layer cycles must sum to the network total");
 

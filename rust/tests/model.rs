@@ -1,0 +1,134 @@
+//! Contracts of the `tulip.model/v1` artifact format (`bnn::model`):
+//!
+//! * **Lossless round trip** — `save` → `load` reproduces the network and
+//!   weights exactly, and a loaded model classifies bit-identically to the
+//!   in-memory original on *both* engines (scalar and bit-sliced);
+//! * **Typed failures** — wrong schema version, truncated documents,
+//!   corrupt payloads and missing files surface as the matching
+//!   [`tulip::Error`] variant, never a panic;
+//! * **Façade invariants** — `from_parts` rejects mismatched shapes, and
+//!   executors built from the same artifact agree with executors built
+//!   from the same seeds.
+
+use std::path::PathBuf;
+use tulip::bnn::tensor::BitTensor;
+use tulip::bnn::{tiny_bnn, Model};
+use tulip::coordinator::{BatchExecutor, BatchRequest, ForwardEngine};
+use tulip::Error;
+
+/// A scratch path unique to this test binary run.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tulip-model-tests-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Export → load → classify: the loaded model is bit-identical to the
+/// in-memory original on both engines.
+#[test]
+fn exported_model_classifies_bit_identically() {
+    let original = Model::random(tiny_bnn(8, 4, 3), 777).unwrap();
+    let path = scratch("roundtrip.model.json");
+    original.save(&path).unwrap();
+    let loaded = Model::load(&path).unwrap();
+    assert_eq!(loaded.to_json(), original.to_json(), "artifact re-export must be stable");
+    assert_eq!(loaded.input_dims(), original.input_dims());
+    assert_eq!(loaded.num_classes(), original.num_classes());
+
+    let req = BatchRequest::new((0..6).map(|i| BitTensor::random(8, 8, 4, 31 + i)).collect());
+    for engine in [ForwardEngine::Scalar, ForwardEngine::BitSliced] {
+        let mem = BatchExecutor::for_model(&original)
+            .unwrap()
+            .with_array(1, 4)
+            .with_engine(engine)
+            .run(&req)
+            .unwrap();
+        let disk = BatchExecutor::for_model(&loaded)
+            .unwrap()
+            .with_array(1, 4)
+            .with_engine(engine)
+            .run(&req)
+            .unwrap();
+        assert_eq!(mem.classes(), disk.classes(), "{engine:?}");
+        assert_eq!(mem.cycles, disk.cycles, "{engine:?}");
+        for (a, b) in mem.images.iter().zip(&disk.images) {
+            assert_eq!(a.scores, b.scores, "{engine:?} image {}", a.index);
+        }
+    }
+}
+
+/// A future (or garbage) schema version is refused with the typed
+/// `UnsupportedVersion` error carrying both strings.
+#[test]
+fn wrong_version_is_a_typed_error() {
+    let doc = Model::demo("tiny8").unwrap().to_json().replace("/v1", "/v7");
+    match Model::from_json(&doc).unwrap_err() {
+        Error::UnsupportedVersion { found, expected } => {
+            assert_eq!(found, "tulip.model/v7");
+            assert_eq!(expected, "tulip.model/v1");
+        }
+        other => panic!("expected UnsupportedVersion, got {other:?}"),
+    }
+}
+
+/// Truncated and corrupted artifacts fail as `ModelFormat` — with a
+/// message locating the damage — and never panic.
+#[test]
+fn truncated_and_corrupt_artifacts_are_typed_errors() {
+    let good = Model::demo("tiny8").unwrap().to_json();
+
+    // Truncation at every eighth byte: always a typed error, never a panic.
+    for cut in (0..good.len()).step_by(8) {
+        let err = Model::from_json(&good[..cut]).unwrap_err();
+        assert!(
+            matches!(err, Error::ModelFormat(_)),
+            "cut at {cut}: expected ModelFormat, got {err:?}"
+        );
+    }
+
+    // Corrupt hex in the packed signs.
+    let corrupt = good.replacen("\"signs\": \"", "\"signs\": \"zz", 1);
+    match Model::from_json(&corrupt).unwrap_err() {
+        Error::ModelFormat(m) => assert!(m.contains("signs"), "{m}"),
+        other => panic!("expected ModelFormat, got {other:?}"),
+    }
+
+    // A wrong layer kind name.
+    let bad_kind = good.replacen("conv_bin", "conv_ternary", 1);
+    match Model::from_json(&bad_kind).unwrap_err() {
+        Error::ModelFormat(m) => assert!(m.contains("conv_ternary"), "{m}"),
+        other => panic!("expected ModelFormat, got {other:?}"),
+    }
+}
+
+/// A missing file is `Error::Io` with the offending path and a live
+/// `source()` chain (the std error survives for callers that want it).
+#[test]
+fn missing_file_is_io_error_with_path() {
+    let path = scratch("does-not-exist.model.json");
+    match Model::load(&path).unwrap_err() {
+        Error::Io { path: p, source } => {
+            assert!(p.contains("does-not-exist"), "{p}");
+            assert_eq!(source.kind(), std::io::ErrorKind::NotFound);
+        }
+        other => panic!("expected Io, got {other:?}"),
+    }
+    // And through the std::error::Error trait the source is reachable.
+    let err = Model::load(&path).unwrap_err();
+    let dyn_err: &dyn std::error::Error = &err;
+    assert!(dyn_err.source().is_some(), "Io must expose its source");
+}
+
+/// `from_parts` rejects shape mismatches up front with `InvalidNetwork`,
+/// so no executor can ever be built over inconsistent weights.
+#[test]
+fn from_parts_rejects_mismatched_weights() {
+    let net = tiny_bnn(8, 4, 3);
+    let good = Model::random(net.clone(), 5).unwrap();
+    let mut weights = good.weights().to_vec();
+    weights.pop();
+    match Model::from_parts(net, weights).unwrap_err() {
+        Error::InvalidNetwork(m) => assert!(m.contains("weight sets"), "{m}"),
+        other => panic!("expected InvalidNetwork, got {other:?}"),
+    }
+}

@@ -8,8 +8,10 @@
 //! * **Deadline shedding** — expired requests are answered `shed`, counted
 //!   in `serve.shed`, and never executed;
 //! * **Accountable drain** — shutdown flushes in-flight requests and the
-//!   final `PerfReport` proves `admitted == completed + shed + failed`
-//!   with a non-empty batch-occupancy histogram.
+//!   final [`ServeReport`] proves `admitted == completed + shed + failed`
+//!   per model and in total;
+//! * **Multi-model routing** — requests carry `"model"`, each name runs on
+//!   its own lane, and `load_model`/`unload_model` work over the wire.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, TcpStream};
@@ -17,22 +19,27 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use tulip::bnn::tensor::BitTensor;
+use tulip::bnn::Model;
 use tulip::coordinator::BatchExecutor;
 use tulip::metrics::MetricsRegistry;
 use tulip::serve::{
-    demo_network, pack_bits, serve, BackpressurePolicy, BoundedQueue, ServeConfig, ServeHandle,
-    ServeRequest, ServeResponse, Status,
+    pack_bits, serve, BackpressurePolicy, BoundedQueue, ServeConfig, ServeHandle, ServeRequest,
+    ServeResponse, Status,
 };
 
 /// The `tiny8` demo model (8×8×4 input) on a small array — the server
 /// and the oracle build it independently from the same seeds.
 fn tiny8_executor() -> BatchExecutor {
-    let (net, weights) = demo_network("tiny8").unwrap();
-    BatchExecutor::new(net, weights).unwrap().with_array(2, 4)
+    let model = Model::demo("tiny8").unwrap();
+    BatchExecutor::for_model(&model).unwrap().with_array(2, 4)
 }
 
 fn boot(cfg: ServeConfig) -> ServeHandle {
-    serve(tiny8_executor(), cfg).unwrap()
+    serve(vec![("tiny8".into(), Model::demo("tiny8").unwrap())], cfg).unwrap()
+}
+
+fn small_cfg(max_batch: usize, max_wait_us: u64) -> ServeConfig {
+    ServeConfig::builder().max_batch(max_batch).max_wait_us(max_wait_us).array(2, 4).build()
 }
 
 fn image(id: u64) -> BitTensor {
@@ -63,11 +70,30 @@ fn round_trip(addr: std::net::SocketAddr, lines: &[String], expect: usize) -> Ve
     out
 }
 
+/// Send raw lines and return the raw reply lines (for control ops whose
+/// replies are not `ServeResponse` objects).
+fn raw_round_trip(addr: std::net::SocketAddr, lines: &[String], expect: usize) -> Vec<String> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    for l in lines {
+        stream.write_all(l.as_bytes()).unwrap();
+    }
+    stream.flush().unwrap();
+    stream.shutdown(Shutdown::Write).unwrap();
+    let mut out = Vec::with_capacity(expect);
+    for line in BufReader::new(stream).lines() {
+        out.push(line.unwrap());
+        if out.len() == expect {
+            break;
+        }
+    }
+    out
+}
+
 /// (a) End-to-end bit-identity: scores and class through the socket equal
 /// a direct `run_one` on the same image.
 #[test]
 fn responses_bit_identical_to_direct_execution() {
-    let handle = boot(ServeConfig { max_batch: 4, max_wait_us: 500, ..ServeConfig::default() });
+    let handle = boot(small_cfg(4, 500));
     let oracle = tiny8_executor();
     let n = 10u64;
     let lines: Vec<String> = (0..n).map(|id| request_line(id, None)).collect();
@@ -82,9 +108,8 @@ fn responses_bit_identical_to_direct_execution() {
         assert!(r.batch_n >= 1 && r.batch_n <= 4, "occupancy within max_batch");
     }
     let report = handle.drain().unwrap();
-    let stats = report.serve.expect("drain report carries serve stats");
-    assert_eq!(stats.completed, n);
-    assert!(stats.accounted());
+    assert_eq!(report.total.completed, n);
+    assert!(report.accounted());
 }
 
 /// (b) Admission is bounded. The queue (the exact object the server runs
@@ -143,11 +168,8 @@ fn admission_queue_is_bounded_under_both_policies() {
 /// topping up, are answered `shed`, counted, and never run (completed 0).
 #[test]
 fn expired_requests_shed_before_execution_and_counted() {
-    let handle = boot(ServeConfig {
-        max_batch: 64,
-        max_wait_us: 60_000, // the top-up window outlives the deadline
-        ..ServeConfig::default()
-    });
+    // The 60 ms top-up window outlives the 1 ms deadlines.
+    let handle = boot(small_cfg(64, 60_000));
     let lines = vec![request_line(0, Some(1)), request_line(1, Some(1))];
     let responses = round_trip(handle.local_addr(), &lines, 2);
     for r in &responses {
@@ -155,17 +177,16 @@ fn expired_requests_shed_before_execution_and_counted() {
         assert!(r.error.as_deref().unwrap_or("").contains("deadline"));
     }
     let report = handle.drain().unwrap();
-    let stats = report.serve.expect("serve stats");
-    assert_eq!(stats.shed, 2, "both sheds counted in serve.shed");
-    assert_eq!(stats.completed, 0, "shed requests must never execute");
-    assert!(stats.accounted());
+    assert_eq!(report.total.shed, 2, "both sheds counted in serve.shed");
+    assert_eq!(report.total.completed, 0, "shed requests must never execute");
+    assert!(report.accounted());
 }
 
 /// (d)+(e) Drain accounts for every admitted request with zero
 /// discrepancy, and the batch-occupancy histogram is non-empty.
 #[test]
 fn drain_accounts_every_admitted_request() {
-    let handle = boot(ServeConfig { max_batch: 8, max_wait_us: 300, ..ServeConfig::default() });
+    let handle = boot(small_cfg(8, 300));
     let n = 24u64;
     // A mixed load: a third carries aggressive 1 ms deadlines, so the
     // final tally may split between completed and shed — the invariant
@@ -179,7 +200,7 @@ fn drain_accounts_every_admitted_request() {
     assert_eq!(ids, (0..n).collect::<Vec<_>>());
 
     let report = handle.drain().unwrap();
-    let stats = report.serve.expect("serve stats");
+    let stats = &report.total;
     assert_eq!(stats.admitted, n, "all {n} requests admitted");
     assert_eq!(
         stats.admitted,
@@ -190,7 +211,7 @@ fn drain_accounts_every_admitted_request() {
         stats.shed,
         stats.failed
     );
-    assert!(stats.accounted());
+    assert!(report.accounted());
     assert_eq!(stats.failed, 0, "no engine failures expected");
     // (e) Occupancy histogram published and non-empty under load.
     assert!(stats.occupancy.count > 0, "batch-occupancy histogram must be non-empty");
@@ -198,30 +219,32 @@ fn drain_accounts_every_admitted_request() {
     assert_eq!(stats.completed, stats.occupancy.sum, "occupancy sums to completed images");
     // Latency histograms cover every completed request.
     assert_eq!(stats.total_us.count, stats.completed);
-    // And the report serializes the serve section.
+    // And the report serializes the serve section plus the per-model view.
     let json = report.to_json();
     assert!(json.contains("\"serve\""), "report JSON embeds the serve section");
+    assert!(json.contains("\"models\""), "report JSON breaks out per-model reports");
     assert!(json.contains("\"batch_occupancy\""));
+    // The per-model engine report saw every completed image.
+    let per_model = report.model("tiny8").expect("per-model report retained");
+    assert_eq!(per_model.batch as u64, stats.completed);
 }
 
 /// The wire control ops work: `{"op": "stats"}` answers with counters and
 /// `{"op": "drain"}` acks, closes admission, and unblocks the handle.
 #[test]
 fn wire_stats_and_drain_ops() {
-    let handle = boot(ServeConfig { max_batch: 4, max_wait_us: 300, ..ServeConfig::default() });
+    let handle = boot(small_cfg(4, 300));
     let addr = handle.local_addr();
     let lines = vec![request_line(0, None)];
     let r = round_trip(addr, &lines, 1);
     assert_eq!(r[0].status, Status::Ok);
 
-    // Stats snapshot over the wire.
-    let mut s = TcpStream::connect(addr).unwrap();
-    s.write_all(b"{\"op\": \"stats\"}\n").unwrap();
-    s.shutdown(Shutdown::Write).unwrap();
-    let mut line = String::new();
-    BufReader::new(s).read_line(&mut line).unwrap();
+    // Stats snapshot over the wire, with the per-model breakdown.
+    let line = raw_round_trip(addr, &["{\"op\": \"stats\"}\n".into()], 1).remove(0);
     assert!(line.contains("\"op\": \"stats\""), "{line}");
     assert!(line.contains("\"admitted\": 1"), "{line}");
+    assert!(line.contains("\"models\""), "{line}");
+    assert!(line.contains("\"tiny8\""), "{line}");
 
     // Drain over the wire: ack, then the handle sees the request.
     let mut s = TcpStream::connect(addr).unwrap();
@@ -232,9 +255,8 @@ fn wire_stats_and_drain_ops() {
     handle.wait_for_drain();
     assert!(handle.drain_requested());
     let report = handle.drain().unwrap();
-    let stats = report.serve.expect("serve stats");
-    assert_eq!(stats.completed, 1);
-    assert!(stats.accounted());
+    assert_eq!(report.total.completed, 1);
+    assert!(report.accounted());
     // New connections are refused once the server is gone.
     std::thread::sleep(Duration::from_millis(20));
     assert!(TcpStream::connect(addr).is_err(), "listener must be closed after drain");
@@ -244,7 +266,7 @@ fn wire_stats_and_drain_ops() {
 /// a good request after a bad one still completes.
 #[test]
 fn protocol_errors_are_per_request_not_per_connection() {
-    let handle = boot(ServeConfig { max_batch: 4, max_wait_us: 300, ..ServeConfig::default() });
+    let handle = boot(small_cfg(4, 300));
     let lines = vec![
         "{\"id\": 1, \"bits\": \"zz\"}\n".to_string(), // bad payload
         "not json at all\n".to_string(),               // unparseable
@@ -257,7 +279,106 @@ fn protocol_errors_are_per_request_not_per_connection() {
     assert_eq!(ok.len(), 1);
     assert_eq!(ok[0].id, 7);
     let report = handle.drain().unwrap();
-    let stats = report.serve.expect("serve stats");
-    assert_eq!(stats.admitted, 1, "bad lines are never admitted");
-    assert!(stats.accounted());
+    assert_eq!(report.total.admitted, 1, "bad lines are never admitted");
+    assert!(report.accounted());
+}
+
+/// Multi-model serving: two models boot, each request routes by its
+/// `"model"` field to the right lane (verified bit-identically per model),
+/// a third model hot-loads over the wire, serves, and unloads with zero
+/// accounting discrepancy. Unknown names get typed errors, not crashes.
+#[test]
+fn multi_model_routing_hot_load_and_unload() {
+    let tiny = Model::demo("tiny").unwrap();
+    let tiny8 = Model::demo("tiny8").unwrap();
+    let handle = serve(
+        vec![("tiny".into(), tiny.clone()), ("tiny8".into(), tiny8.clone())],
+        small_cfg(4, 300),
+    )
+    .unwrap();
+    let addr = handle.local_addr();
+
+    let line_for = |id: u64, model: &str, m: &Model| {
+        let (h, w, c) = m.input_dims();
+        let img = BitTensor::random(h, w, c, 9000 + id);
+        format!(
+            "{{\"id\": {id}, \"model\": \"{model}\", \"bits\": \"{}\"}}\n",
+            pack_bits(&img.data)
+        )
+    };
+
+    // Interleave both models on one connection; each must be answered by
+    // its own lane's executor, bit-identically.
+    let lines: Vec<String> = (0..8u64)
+        .map(|id| {
+            if id % 2 == 0 {
+                line_for(id, "tiny", &tiny)
+            } else {
+                line_for(id, "tiny8", &tiny8)
+            }
+        })
+        .collect();
+    let mut responses = round_trip(addr, &lines, 8);
+    responses.sort_by_key(|r| r.id);
+    let oracle_tiny = BatchExecutor::for_model(&tiny).unwrap().with_array(2, 4);
+    let oracle_tiny8 = tiny8_executor();
+    for r in &responses {
+        assert_eq!(r.status, Status::Ok, "request {}: {:?}", r.id, r.error);
+        let (oracle, model) =
+            if r.id % 2 == 0 { (&oracle_tiny, &tiny) } else { (&oracle_tiny8, &tiny8) };
+        let (h, w, c) = model.input_dims();
+        let direct = oracle.run_one(0, &BitTensor::random(h, w, c, 9000 + r.id)).unwrap();
+        assert_eq!(r.scores, direct.scores, "request {} routed to the wrong lane?", r.id);
+        assert_eq!(r.class, Some(direct.class));
+    }
+
+    // Unknown model: typed per-request error, connection stays usable.
+    let bad = "{\"id\": 99, \"model\": \"nope\", \"bits\": \"00\"}\n".to_string();
+    let r = round_trip(addr, &[bad], 1).remove(0);
+    assert_eq!(r.status, Status::Error);
+    assert!(r.error.as_deref().unwrap_or("").contains("unknown model"), "{:?}", r.error);
+
+    // Hot-load a third model over the wire and serve from it.
+    let third = Model::random(tulip::bnn::tiny_bnn(8, 4, 3), 4242).unwrap();
+    let load = format!(
+        "{{\"op\": \"load_model\", \"name\": \"third\", \"model\": {}}}\n",
+        third.to_json()
+    );
+    let ack = raw_round_trip(addr, &[load.clone()], 1).remove(0);
+    assert!(ack.contains("\"ok\": true"), "{ack}");
+    // Loading the same name again is a typed refusal.
+    let dup = raw_round_trip(addr, &[load], 1).remove(0);
+    assert!(dup.contains("\"ok\": false") && dup.contains("already loaded"), "{dup}");
+
+    let third_lines: Vec<String> = (0..4u64).map(|id| line_for(id, "third", &third)).collect();
+    let mut served = round_trip(addr, &third_lines, 4);
+    served.sort_by_key(|r| r.id);
+    let oracle_third = BatchExecutor::for_model(&third).unwrap().with_array(2, 4);
+    for r in &served {
+        assert_eq!(r.status, Status::Ok, "request {}: {:?}", r.id, r.error);
+        let direct = oracle_third.run_one(0, &BitTensor::random(8, 8, 4, 9000 + r.id)).unwrap();
+        assert_eq!(r.scores, direct.scores);
+    }
+
+    // Unload it: the reply must prove zero accounting discrepancy.
+    let unload = "{\"op\": \"unload_model\", \"name\": \"third\"}\n".to_string();
+    let gone = raw_round_trip(addr, &[unload.clone()], 1).remove(0);
+    assert!(gone.contains("\"ok\": true"), "{gone}");
+    assert!(gone.contains("\"accounted\": true"), "{gone}");
+    assert!(gone.contains("\"completed\": 4"), "{gone}");
+    // Unloading twice is a typed refusal.
+    let again = raw_round_trip(addr, &[unload], 1).remove(0);
+    assert!(again.contains("\"ok\": false") && again.contains("unknown model"), "{again}");
+    // Requests for it now fail with a per-request error.
+    let after = "{\"id\": 5, \"model\": \"third\", \"bits\": \"00\"}\n".to_string();
+    let r = round_trip(addr, &[after], 1).remove(0);
+    assert_eq!(r.status, Status::Error);
+
+    // Final drain still accounts for everything — including the retired
+    // lane — and retains all three per-model reports.
+    let report = handle.drain().unwrap();
+    assert!(report.accounted());
+    assert_eq!(report.models.len(), 3, "live lanes + retired lane all reported");
+    assert_eq!(report.model("third").expect("retired lane report").batch, 4);
+    assert_eq!(report.total.completed, 8 + 4);
 }
