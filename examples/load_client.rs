@@ -15,6 +15,12 @@
 //! NAME (wire `{"op": "load_model"}`); `--unload` retires the lane after
 //! traffic and fails unless the server reports `"accounted": true`.
 //!
+//! Telemetry knobs: `--trace` pulls the server's flight recorder after
+//! traffic (wire `{"op": "trace_dump"}`) and checks that every `ok`
+//! response has a complete admit→respond flight chain (strict only while
+//! the ring reports zero drops); `--csv PATH` writes one
+//! `id,status,queue_us,batch_us,total_us,batch_n` row per response.
+//!
 //! ```sh
 //! cargo run --release --example load_client -- \
 //!     --addr 127.0.0.1:7070 --model tiny --requests 200 --rate 2000 \
@@ -28,6 +34,7 @@ use std::time::{Duration, Instant};
 use tulip::bnn::tensor::BitTensor;
 use tulip::bnn::Model;
 use tulip::coordinator::BatchExecutor;
+use tulip::metrics::flight::{self, FlightStage};
 use tulip::serve::protocol::{json_str, parse_json, Json};
 use tulip::serve::{pack_bits, ServeResponse, Status};
 
@@ -48,6 +55,8 @@ struct Args {
     allow_reject: bool,
     assert_p99_us: Option<u64>,
     verify: bool,
+    trace: bool,
+    csv: Option<String>,
 }
 
 fn flag_value(args: &[String], flag: &str) -> Option<String> {
@@ -74,6 +83,8 @@ fn parse_args() -> Args {
         allow_reject: argv.iter().any(|a| a == "--allow-reject"),
         assert_p99_us: flag_value(&argv, "--assert-p99-us").and_then(|v| v.parse().ok()),
         verify: !argv.iter().any(|a| a == "--no-verify"),
+        trace: argv.iter().any(|a| a == "--trace"),
+        csv: flag_value(&argv, "--csv"),
     }
 }
 
@@ -81,6 +92,16 @@ fn parse_args() -> Args {
 /// only the packed bits, so bit-identity checks are end-to-end.
 fn image_for(id: u64, h: usize, w: usize, c: usize) -> BitTensor {
     BitTensor::random(h, w, c, 5000 + id)
+}
+
+/// Pull the server's flight recorder as a parsed `tulip.trace/v1` dump.
+fn fetch_trace(addr: &str) -> anyhow::Result<tulip::metrics::FlightDump> {
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(b"{\"op\": \"trace_dump\"}\n")?;
+    s.flush()?;
+    let mut reply = String::new();
+    BufReader::new(s).read_line(&mut reply)?;
+    tulip::metrics::FlightDump::parse(reply.trim())
 }
 
 /// Send one control line and return the parsed reply object.
@@ -271,6 +292,64 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut failed = false;
+    if let Some(path) = &args.csv {
+        let mut by_id: Vec<&ServeResponse> = responses.iter().collect();
+        by_id.sort_by_key(|r| r.id);
+        let mut csv = String::from("id,status,queue_us,batch_us,total_us,batch_n\n");
+        for r in by_id {
+            csv.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                r.id,
+                r.status.name(),
+                r.queue_us,
+                r.batch_us,
+                r.total_us,
+                r.batch_n
+            ));
+        }
+        std::fs::write(path, csv)?;
+        println!("per-request CSV ({} rows) written to {path}", responses.len());
+    }
+
+    if args.trace {
+        // The batcher records a request's Respond event just after handing
+        // the reply to the connection writer, so a dump taken the instant
+        // the last reply arrives can miss it — let the recorder settle.
+        std::thread::sleep(Duration::from_millis(50));
+        let dump = fetch_trace(&args.addr)?;
+        let lane = flight::lane_id(&args.model);
+        let (mut complete, mut incomplete) = (0u64, 0u64);
+        for r in &responses {
+            if r.status != Status::Ok {
+                continue;
+            }
+            let stages: Vec<FlightStage> = dump
+                .events
+                .iter()
+                .filter(|e| e.request == r.id && e.lane == lane)
+                .map(|e| e.stage)
+                .collect();
+            if stages.contains(&FlightStage::Admit) && stages.contains(&FlightStage::Respond) {
+                complete += 1;
+            } else {
+                incomplete += 1;
+            }
+        }
+        println!(
+            "trace: {} events ({} dropped), {complete}/{} ok requests with complete \
+             admit->respond chains",
+            dump.events.len(),
+            dump.dropped,
+            complete + incomplete
+        );
+        // The ring overwrites oldest-first, so chains are only guaranteed
+        // intact while nothing has been dropped.
+        if incomplete > 0 && dump.dropped == 0 {
+            eprintln!("FAIL: {incomplete} ok requests missing admit/respond flight events");
+            failed = true;
+        }
+    }
+
     if args.unload {
         let line = format!("{{\"op\": \"unload_model\", \"name\": {}}}", json_str(&args.model));
         let reply = control_op(&args.addr, &line)?;

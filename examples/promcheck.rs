@@ -1,0 +1,88 @@
+//! `promcheck` — validate a Prometheus text exposition.
+//!
+//! Reads an exposition from a file (or stdin when no path is given), runs
+//! it through the in-repo format checker
+//! ([`tulip::metrics::check_exposition`]: name/label grammar, sample
+//! values, `# TYPE` placement, histogram completeness), and asserts that
+//! every `--require PREFIX` matches at least one sample line. Exits
+//! non-zero on any violation — CI scrapes `tulip serve --metrics-addr`
+//! under load and feeds the body through this binary.
+//!
+//! ```sh
+//! curl -s http://127.0.0.1:9091/metrics | cargo run --example promcheck -- \
+//!     --require tulip_serve_admitted_total \
+//!     --require 'tulip_serve_latency_us_total_rolling{model="tiny"'
+//! ```
+
+use std::io::Read;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut requires: Vec<String> = Vec::new();
+    let mut path: Option<String> = None;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--require" => {
+                match argv.get(i + 1) {
+                    Some(prefix) => requires.push(prefix.clone()),
+                    None => fail("--require needs a series prefix".into()),
+                }
+                i += 2;
+            }
+            other if other.starts_with("--") => {
+                let usage = "usage: promcheck [PATH] [--require PREFIX]...";
+                fail(format!("unknown flag '{other}' ({usage})"));
+            }
+            other => {
+                if path.replace(other.to_string()).is_some() {
+                    fail("at most one input path (omit it to read stdin)".into());
+                }
+                i += 1;
+            }
+        }
+    }
+
+    let text = match &path {
+        Some(p) => match std::fs::read_to_string(p) {
+            Ok(t) => t,
+            Err(e) => fail(format!("reading {p}: {e}")),
+        },
+        None => {
+            let mut t = String::new();
+            if let Err(e) = std::io::stdin().read_to_string(&mut t) {
+                fail(format!("reading stdin: {e}"));
+            }
+            t
+        }
+    };
+
+    let stats = match tulip::metrics::check_exposition(&text) {
+        Ok(s) => s,
+        Err(e) => fail(format!("invalid exposition: {e:#}")),
+    };
+    let mut missing = 0;
+    for prefix in &requires {
+        if stats.has_series(prefix) {
+            println!("ok: series matching '{prefix}'");
+        } else {
+            eprintln!("MISSING: no series matching '{prefix}'");
+            missing += 1;
+        }
+    }
+    println!(
+        "exposition valid: {} families, {} samples ({} of {} required series present)",
+        stats.families,
+        stats.samples,
+        requires.len() - missing,
+        requires.len()
+    );
+    if missing > 0 {
+        std::process::exit(1);
+    }
+}
+
+fn fail(msg: String) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(1);
+}

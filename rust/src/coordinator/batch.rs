@@ -484,7 +484,13 @@ impl BatchExecutor {
         });
         registry.gauge("batch.images_per_sec").set(result.images_per_sec());
         registry.gauge("pe.utilization").set(result.stats.utilization());
-        result.energy().publish_to(registry, "batch.energy");
+        let energy = result.energy();
+        if !result.images.is_empty() {
+            registry
+                .gauge("batch.energy_per_classification_pj")
+                .set(energy.total_pj() / result.images.len() as f64);
+        }
+        energy.publish_to(registry, "batch.energy");
         self.cache.publish_to(registry);
     }
 
@@ -661,6 +667,8 @@ mod tests {
         sliced.publish_to(&reg, &b);
         assert_eq!(reg.gauge("batch.engine").get(), 1.0);
         assert_eq!(reg.histogram("image.host_us.bit_sliced").snapshot().count, 3);
+        let per_image = reg.gauge("batch.energy_per_classification_pj").get();
+        assert!((per_image - b.energy().total_pj() / 3.0).abs() < 1e-9, "per-image energy gauge");
         let reg = MetricsRegistry::new();
         scalar.publish_to(&reg, &a);
         assert_eq!(reg.gauge("batch.engine").get(), 0.0);

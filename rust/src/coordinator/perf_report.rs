@@ -227,6 +227,16 @@ impl PerfReport {
         self
     }
 
+    /// Total energy per classified image, picojoules — the paper's
+    /// headline efficiency metric (0 for an empty batch).
+    pub fn energy_per_classification_pj(&self) -> f64 {
+        if self.batch == 0 {
+            0.0
+        } else {
+            self.energy.total_pj() / self.batch as f64
+        }
+    }
+
     /// Mean PE utilization across the array (0 when there are no PEs).
     pub fn mean_pe_utilization(&self) -> f64 {
         if self.pes.is_empty() {
@@ -258,12 +268,13 @@ impl PerfReport {
         ));
         s.push_str(&format!(
             "  \"energy_pj\": {{\"pe\": {}, \"mac\": {}, \"memory\": {}, \"xnor\": {}, \
-             \"total\": {}}},\n",
+             \"total\": {}, \"per_classification\": {}}},\n",
             json_f64(self.energy.pe_pj),
             json_f64(self.energy.mac_pj),
             json_f64(self.energy.memory_pj),
             json_f64(self.energy.xnor_pj),
-            json_f64(self.energy.total_pj())
+            json_f64(self.energy.total_pj()),
+            json_f64(self.energy_per_classification_pj())
         ));
         s.push_str("  \"layers\": [\n");
         for (i, l) in self.layers.iter().enumerate() {
@@ -374,8 +385,10 @@ impl PerfReport {
             self.wall_ms, self.images_per_sec, self.total_cycles, self.simulated_us_per_image
         );
         println!(
-            "energy: {:.2} uJ total ({:.1} pe / {:.1} mac / {:.1} mem / {:.1} xnor pJ)",
+            "energy: {:.2} uJ total, {:.1} pJ/classification ({:.1} pe / {:.1} mac / {:.1} mem \
+             / {:.1} xnor pJ)",
             self.energy.total_uj(),
+            self.energy_per_classification_pj(),
             self.energy.pe_pj,
             self.energy.mac_pj,
             self.energy.memory_pj,
@@ -545,8 +558,8 @@ mod tests {
         reg.histogram("test.lat").observe(42);
         let r = tiny_report().with_metrics(reg.snapshot());
         let json = r.to_json();
-        const KEYS: &str = "schema network engine host simulated energy_pj layers pes cache \
-                            hit_rate workers metrics utilization planning_ms";
+        const KEYS: &str = "schema network engine host simulated energy_pj per_classification \
+                            layers pes cache hit_rate workers metrics utilization planning_ms";
         for key in KEYS.split_whitespace() {
             assert!(json.contains(&format!("\"{key}\"")), "missing {key} in:\n{json}");
         }

@@ -14,13 +14,17 @@
 //! tulip serve [--addr H:P] [--model NAME | --model NAME=PATH]...
 //!             [--max-batch N] [--max-wait-us N] [--queue-cap N]
 //!             [--policy block|reject] [--engine scalar|bit_sliced]
-//!             [--perf-out PATH]                # TCP inference front-end
+//!             [--perf-out PATH] [--metrics-addr H:P]  # TCP inference front-end
+//! tulip trace-dump [--addr H:P] [--out PATH] [--chrome PATH]
 //! ```
 //!
 //! `serve` takes `--model` repeatedly; each is either a built-in demo name
 //! (`tiny`, `tiny8`) or `name=path` pointing at a `tulip.model/v1` file
 //! (as written by `tulip model export`). The first model is the default
-//! route for requests that omit the `model` field.
+//! route for requests that omit the `model` field. `--metrics-addr` opens
+//! the live-telemetry HTTP endpoint (`/metrics`, `/healthz`, `/readyz`,
+//! `/trace`); `trace-dump` pulls the flight recorder from a running server
+//! over the wire protocol and can convert it to Chrome `trace_event` JSON.
 
 use tulip::bnn::{alexnet, binarynet_cifar10, Model, Network};
 use tulip::config::ArchConfig;
@@ -30,7 +34,7 @@ use tulip::scheduler::adder_tree;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: tulip <tables|table|simulate|schedule|golden|model|serve> [args]\n\
+        "usage: tulip <tables|table|simulate|schedule|golden|model|serve|trace-dump> [args]\n\
          \n  tulip tables [--network binarynet|alexnet]\
          \n  tulip table <1|2|3|4|5|fig7> [--network ...]\
          \n  tulip simulate [--network ...] [--arch tulip|yodann] [--pes N]\
@@ -41,7 +45,8 @@ fn usage() -> ! {
          \n  tulip serve [--addr 127.0.0.1:7070] [--model NAME | --model NAME=PATH]...\
          \n              [--max-batch 64] [--max-wait-us 2000] [--queue-cap 1024]\
          \n              [--policy block|reject] [--engine scalar|bit_sliced]\
-         \n              [--perf-out PATH]"
+         \n              [--perf-out PATH] [--metrics-addr 127.0.0.1:9091]\
+         \n  tulip trace-dump [--addr 127.0.0.1:7070] [--out trace.json] [--chrome PATH]"
     );
     std::process::exit(2);
 }
@@ -339,6 +344,9 @@ fn cmd_serve(args: &[String]) {
             }
         };
     }
+    if let Some(m) = flag_value(args, "--metrics-addr") {
+        builder = builder.metrics_addr(m);
+    }
     let cfg = builder.build();
     let perf_out = flag_value(args, "--perf-out");
 
@@ -364,6 +372,9 @@ fn cmd_serve(args: &[String]) {
         "protocol tulip.serve/v1 — one JSON request per line; ctrl-c or {{\"op\": \"drain\"}} to \
          drain"
     );
+    if let Some(maddr) = handle.metrics_addr() {
+        println!("telemetry: http://{maddr}/metrics (also /healthz, /readyz, /trace)");
+    }
     handle.wait_for_drain();
     println!("draining: flushing queued requests…");
     match handle.drain() {
@@ -388,6 +399,53 @@ fn cmd_serve(args: &[String]) {
     }
 }
 
+/// Pull the flight recorder from a running server (`{"op": "trace_dump"}`
+/// over the wire protocol), write the `tulip.trace/v1` document, and
+/// optionally convert it to Chrome `trace_event` JSON.
+fn cmd_trace_dump(args: &[String]) {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use tulip::metrics::FlightDump;
+
+    fn fail(msg: String) -> ! {
+        eprintln!("error: {msg}");
+        std::process::exit(1);
+    }
+
+    let addr = flag_value(args, "--addr").unwrap_or_else(|| "127.0.0.1:7070".to_string());
+    let out = flag_value(args, "--out").unwrap_or_else(|| "trace.json".to_string());
+    let mut stream = match TcpStream::connect(&addr) {
+        Ok(s) => s,
+        Err(e) => fail(format!("connecting {addr}: {e}")),
+    };
+    if let Err(e) = stream.write_all(b"{\"op\": \"trace_dump\"}\n").and_then(|()| stream.flush()) {
+        fail(format!("sending trace_dump: {e}"));
+    }
+    let mut line = String::new();
+    if let Err(e) = BufReader::new(stream).read_line(&mut line) {
+        fail(format!("reading trace_dump reply: {e}"));
+    }
+    let dump = match FlightDump::parse(line.trim()) {
+        Ok(d) => d,
+        Err(e) => fail(format!("parsing trace_dump reply: {e:#}")),
+    };
+    if let Err(e) = std::fs::write(&out, format!("{}\n", dump.to_json_line())) {
+        fail(format!("writing {out}: {e}"));
+    }
+    println!(
+        "trace: {} events ({} dropped, ring capacity {}) written to {out}",
+        dump.events.len(),
+        dump.dropped,
+        dump.capacity
+    );
+    if let Some(path) = flag_value(args, "--chrome") {
+        if let Err(e) = std::fs::write(&path, dump.chrome_trace()) {
+            fail(format!("writing {path}: {e}"));
+        }
+        println!("chrome trace written to {path} (open in chrome://tracing or Perfetto)");
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
@@ -398,6 +456,7 @@ fn main() {
         Some("golden") => cmd_golden(&args[1..]),
         Some("model") => cmd_model(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("trace-dump") => cmd_trace_dump(&args[1..]),
         _ => usage(),
     }
 }

@@ -1,0 +1,488 @@
+//! The flight recorder: an always-on, fixed-capacity, lock-free ring of
+//! per-request span events for the serving stack.
+//!
+//! Every admitted request is issued a process-unique flight id at the
+//! admission queue; the id rides the request through queue → batcher →
+//! engine, and each hop records one [`FlightEvent`]
+//! (admit/dequeue/shed/batch-seal/execute/respond, tagged with the lane
+//! and — once sealed — the micro-batch id) into the global
+//! [`FlightRecorder`]. Unlike the feature-gated spans in
+//! [`trace`](crate::metrics::trace), the recorder is compiled in
+//! unconditionally: writers touch a handful of relaxed atomics per event,
+//! so an operator can always ask a live server what happened to a slow
+//! request.
+//!
+//! Dumps serialize as `tulip.trace/v1` JSON (one line, served by the
+//! `{"op": "trace_dump"}` wire op and the `/trace` telemetry endpoint) and
+//! convert to Chrome `trace_event` JSON for `chrome://tracing` via
+//! [`FlightDump::chrome_trace`].
+//!
+//! ```
+//! use tulip::metrics::flight::{FlightRecorder, FlightStage};
+//!
+//! let rec = FlightRecorder::with_capacity(8);
+//! let lane = tulip::metrics::flight::lane_id("doc-lane");
+//! rec.record(FlightStage::Admit, 1, 7, lane, 0);
+//! rec.record(FlightStage::Respond, 1, 7, lane, 3);
+//! let dump = rec.snapshot();
+//! assert_eq!(dump.events.len(), 2);
+//! assert_eq!(dump.dropped, 0);
+//! ```
+
+use crate::serve::protocol::{json_str, parse_json, Json};
+use anyhow::{ensure, Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Capacity of the process-global [`recorder`]: at ~6 events per request
+/// this retains the last ~10 k requests, and the ring costs ~3.5 MiB.
+pub const FLIGHT_CAPACITY: usize = 65_536;
+
+/// A request's position in its lifecycle when an event was recorded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FlightStage {
+    /// Accepted by the admission queue; the flight id is assigned here.
+    Admit,
+    /// Pulled off the queue by the batcher.
+    Dequeue,
+    /// Deadline expired while queued — replied `shed`, never executed.
+    Shed,
+    /// Survived shedding and sealed into a micro-batch (batch id assigned).
+    BatchSeal,
+    /// The micro-batch finished on the engine.
+    Execute,
+    /// The response left the batcher toward the client connection.
+    Respond,
+}
+
+impl FlightStage {
+    /// Wire name (`tulip.trace/v1` `stage` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            FlightStage::Admit => "admit",
+            FlightStage::Dequeue => "dequeue",
+            FlightStage::Shed => "shed",
+            FlightStage::BatchSeal => "batch_seal",
+            FlightStage::Execute => "execute",
+            FlightStage::Respond => "respond",
+        }
+    }
+
+    /// Parse a wire name.
+    pub fn from_name(s: &str) -> Option<FlightStage> {
+        match s {
+            "admit" => Some(FlightStage::Admit),
+            "dequeue" => Some(FlightStage::Dequeue),
+            "shed" => Some(FlightStage::Shed),
+            "batch_seal" => Some(FlightStage::BatchSeal),
+            "execute" => Some(FlightStage::Execute),
+            "respond" => Some(FlightStage::Respond),
+            _ => None,
+        }
+    }
+
+    fn from_code(c: u64) -> Option<FlightStage> {
+        [
+            FlightStage::Admit,
+            FlightStage::Dequeue,
+            FlightStage::Shed,
+            FlightStage::BatchSeal,
+            FlightStage::Execute,
+            FlightStage::Respond,
+        ]
+        .into_iter()
+        .find(|s| *s as u64 == c)
+    }
+}
+
+/// One recorded hop of one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlightEvent {
+    /// Microseconds since the recorder's epoch (its construction).
+    pub ts_us: u64,
+    /// Process-unique flight id assigned at admission.
+    pub flight: u64,
+    /// The client-chosen request id (echoed on the wire response).
+    pub request: u64,
+    /// Interned lane id — resolve with [`lane_name`].
+    pub lane: u64,
+    /// Micro-batch id (0 until [`FlightStage::BatchSeal`]).
+    pub batch: u64,
+    /// Lifecycle stage.
+    pub stage: FlightStage,
+}
+
+/// Sentinel sequence marking a slot mid-write (readers skip it).
+const WRITING: u64 = u64::MAX;
+
+/// One ring slot: a seqlock over the event fields. Writers claim a slot by
+/// bumping the ring head, mark it [`WRITING`], store the fields with
+/// relaxed stores, then publish the claim ticket; readers re-check the
+/// sequence after loading the fields and discard torn reads.
+#[derive(Debug)]
+struct Slot {
+    seq: AtomicU64,
+    ts_us: AtomicU64,
+    flight: AtomicU64,
+    request: AtomicU64,
+    lane: AtomicU64,
+    batch: AtomicU64,
+    stage: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Slot {
+            seq: AtomicU64::new(0),
+            ts_us: AtomicU64::new(0),
+            flight: AtomicU64::new(0),
+            request: AtomicU64::new(0),
+            lane: AtomicU64::new(0),
+            batch: AtomicU64::new(0),
+            stage: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Fixed-capacity, lock-free ring of [`FlightEvent`]s (see the
+/// [module docs](self)). Writers never block and never allocate; once the
+/// ring wraps, the oldest events are overwritten and counted as dropped.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    epoch: Instant,
+    slots: Box<[Slot]>,
+    head: AtomicU64,
+}
+
+impl FlightRecorder {
+    /// A recorder holding the most recent `capacity` events (min 1).
+    pub fn with_capacity(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        FlightRecorder {
+            epoch: Instant::now(),
+            slots: (0..capacity).map(|_| Slot::new()).collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of events the ring retains.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record one event at the current time.
+    pub fn record(&self, stage: FlightStage, flight: u64, request: u64, lane: u64, batch: u64) {
+        let ts_us = self.epoch.elapsed().as_micros() as u64;
+        let ticket = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(ticket % self.slots.len() as u64) as usize];
+        slot.seq.store(WRITING, Ordering::Release);
+        slot.ts_us.store(ts_us, Ordering::Relaxed);
+        slot.flight.store(flight, Ordering::Relaxed);
+        slot.request.store(request, Ordering::Relaxed);
+        slot.lane.store(lane, Ordering::Relaxed);
+        slot.batch.store(batch, Ordering::Relaxed);
+        slot.stage.store(stage as u64, Ordering::Relaxed);
+        // Publish: tickets start at 0, so the stored sequence is ticket+1
+        // and 0 still means "never written".
+        slot.seq.store(ticket + 1, Ordering::Release);
+    }
+
+    /// Copy out every readable event, oldest first. Slots being written
+    /// while the copy runs (torn reads) are skipped — under load the dump
+    /// loses at most as many events as there are concurrent writers.
+    pub fn snapshot(&self) -> FlightDump {
+        let head = self.head.load(Ordering::Acquire);
+        let mut tagged: Vec<(u64, FlightEvent)> = Vec::with_capacity(self.slots.len());
+        for slot in self.slots.iter() {
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq == 0 || seq == WRITING {
+                continue;
+            }
+            let ev = FlightEvent {
+                ts_us: slot.ts_us.load(Ordering::Relaxed),
+                flight: slot.flight.load(Ordering::Relaxed),
+                request: slot.request.load(Ordering::Relaxed),
+                lane: slot.lane.load(Ordering::Relaxed),
+                batch: slot.batch.load(Ordering::Relaxed),
+                stage: match FlightStage::from_code(slot.stage.load(Ordering::Relaxed)) {
+                    Some(s) => s,
+                    None => continue, // torn read caught a half-written slot
+                },
+            };
+            if slot.seq.load(Ordering::Acquire) != seq {
+                continue; // a writer reclaimed the slot mid-copy
+            }
+            tagged.push((seq, ev));
+        }
+        tagged.sort_unstable_by_key(|&(seq, _)| seq);
+        FlightDump {
+            capacity: self.slots.len(),
+            dropped: head.saturating_sub(self.slots.len() as u64),
+            events: tagged.into_iter().map(|(_, ev)| ev).collect(),
+        }
+    }
+}
+
+/// The process-global recorder every serve lane records into.
+pub fn recorder() -> &'static FlightRecorder {
+    static RECORDER: OnceLock<FlightRecorder> = OnceLock::new();
+    RECORDER.get_or_init(|| FlightRecorder::with_capacity(FLIGHT_CAPACITY))
+}
+
+/// Issue the next process-unique flight id (1-based; 0 = unassigned).
+pub fn next_flight_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Issue the next process-unique micro-batch id (1-based; 0 = unsealed).
+pub fn next_batch_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+fn lanes() -> &'static Mutex<Vec<String>> {
+    static LANES: OnceLock<Mutex<Vec<String>>> = OnceLock::new();
+    LANES.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Intern a lane name, returning its stable integer id. Events store the
+/// id so the hot path never copies strings; names intern at most once per
+/// lane load, so the table stays as small as the set of distinct names.
+pub fn lane_id(name: &str) -> u64 {
+    let mut table = lanes().lock().expect("flight lane table poisoned");
+    if let Some(i) = table.iter().position(|n| n == name) {
+        return i as u64;
+    }
+    table.push(name.to_string());
+    (table.len() - 1) as u64
+}
+
+/// Resolve an interned lane id back to its name.
+pub fn lane_name(id: u64) -> Option<String> {
+    lanes().lock().expect("flight lane table poisoned").get(id as usize).cloned()
+}
+
+/// A frozen copy of the recorder: what `{"op": "trace_dump"}`, the
+/// `/trace` endpoint and `tulip trace-dump` serve.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FlightDump {
+    /// Events oldest-first (by record order).
+    pub events: Vec<FlightEvent>,
+    /// Events overwritten by ring wrap-around before this dump.
+    pub dropped: u64,
+    /// Ring capacity of the recorder that produced the dump.
+    pub capacity: usize,
+}
+
+impl FlightDump {
+    /// Encode as one `tulip.trace/v1` JSON line (no trailing newline).
+    /// Lane ids serialize as their interned names.
+    pub fn to_json_line(&self) -> String {
+        let events: Vec<String> = self
+            .events
+            .iter()
+            .map(|e| {
+                let lane = lane_name(e.lane).unwrap_or_else(|| format!("lane{}", e.lane));
+                format!(
+                    "{{\"ts_us\": {}, \"flight\": {}, \"request\": {}, \"lane\": {}, \
+                     \"batch\": {}, \"stage\": {}}}",
+                    e.ts_us,
+                    e.flight,
+                    e.request,
+                    json_str(&lane),
+                    e.batch,
+                    json_str(e.stage.name())
+                )
+            })
+            .collect();
+        format!(
+            "{{\"schema\": \"tulip.trace/v1\", \"capacity\": {}, \"dropped\": {}, \
+             \"events\": [{}]}}",
+            self.capacity,
+            self.dropped,
+            events.join(", ")
+        )
+    }
+
+    /// Decode a `tulip.trace/v1` line (clients and tests; lane names
+    /// re-intern in the reading process).
+    pub fn parse(line: &str) -> Result<FlightDump> {
+        let v = parse_json(line).context("malformed trace dump")?;
+        let schema = v.get("schema").and_then(Json::as_str).unwrap_or("");
+        ensure!(schema == "tulip.trace/v1", "unsupported trace schema '{schema}'");
+        let capacity = v.get("capacity").and_then(Json::as_u64).unwrap_or(0) as usize;
+        let dropped = v.get("dropped").and_then(Json::as_u64).unwrap_or(0);
+        let mut events = Vec::new();
+        if let Some(Json::Arr(items)) = v.get("events") {
+            for item in items {
+                let field = |k: &str| item.get(k).and_then(Json::as_u64);
+                let stage = item
+                    .get("stage")
+                    .and_then(Json::as_str)
+                    .and_then(FlightStage::from_name)
+                    .context("event with missing/unknown 'stage'")?;
+                let lane = item.get("lane").and_then(Json::as_str).unwrap_or("");
+                events.push(FlightEvent {
+                    ts_us: field("ts_us").context("event missing 'ts_us'")?,
+                    flight: field("flight").context("event missing 'flight'")?,
+                    request: field("request").unwrap_or(0),
+                    lane: lane_id(lane),
+                    batch: field("batch").unwrap_or(0),
+                    stage,
+                });
+            }
+        }
+        Ok(FlightDump { events, dropped, capacity })
+    }
+
+    /// Convert to Chrome `trace_event` JSON (the object form,
+    /// `{"traceEvents": [...]}`), loadable in `chrome://tracing` or Perfetto.
+    ///
+    /// Each lane becomes a process (named via `process_name` metadata) and
+    /// each flight a thread within it; adjacent stage pairs become `"X"`
+    /// complete events (`queued` = admit→dequeue, `execute` =
+    /// dequeue→execute, `respond` = execute→respond) and sheds become
+    /// instant events.
+    pub fn chrome_trace(&self) -> String {
+        let mut out: Vec<String> = Vec::new();
+        let mut lanes_seen: Vec<u64> = Vec::new();
+        for e in &self.events {
+            if !lanes_seen.contains(&e.lane) {
+                lanes_seen.push(e.lane);
+                let name = lane_name(e.lane).unwrap_or_else(|| format!("lane{}", e.lane));
+                out.push(format!(
+                    "{{\"ph\": \"M\", \"pid\": {}, \"name\": \"process_name\", \
+                     \"args\": {{\"name\": {}}}}}",
+                    e.lane,
+                    json_str(&format!("lane {name}"))
+                ));
+            }
+        }
+        // Group events per flight, preserving record order within a flight.
+        let mut flights: Vec<(u64, Vec<&FlightEvent>)> = Vec::new();
+        for e in &self.events {
+            match flights.iter_mut().find(|(f, _)| *f == e.flight) {
+                Some((_, evs)) => evs.push(e),
+                None => flights.push((e.flight, vec![e])),
+            }
+        }
+        for (flight, evs) in &flights {
+            let at = |stage: FlightStage| evs.iter().find(|e| e.stage == stage);
+            let batch = evs.iter().map(|e| e.batch).max().unwrap_or(0);
+            let request = evs.first().map(|e| e.request).unwrap_or(0);
+            let lane = evs.first().map(|e| e.lane).unwrap_or(0);
+            let spans = [
+                ("queued", FlightStage::Admit, FlightStage::Dequeue),
+                ("execute", FlightStage::Dequeue, FlightStage::Execute),
+                ("respond", FlightStage::Execute, FlightStage::Respond),
+            ];
+            for (name, from, to) in spans {
+                if let (Some(a), Some(b)) = (at(from), at(to)) {
+                    out.push(format!(
+                        "{{\"ph\": \"X\", \"pid\": {lane}, \"tid\": {flight}, \
+                         \"name\": {}, \"ts\": {}, \"dur\": {}, \
+                         \"args\": {{\"request\": {request}, \"batch\": {batch}}}}}",
+                        json_str(name),
+                        a.ts_us,
+                        b.ts_us.saturating_sub(a.ts_us)
+                    ));
+                }
+            }
+            if let Some(s) = at(FlightStage::Shed) {
+                out.push(format!(
+                    "{{\"ph\": \"i\", \"pid\": {lane}, \"tid\": {flight}, \
+                     \"name\": \"shed\", \"ts\": {}, \"s\": \"t\", \
+                     \"args\": {{\"request\": {request}}}}}",
+                    s.ts_us
+                ));
+            }
+        }
+        format!("{{\"traceEvents\": [{}]}}", out.join(", "))
+    }
+
+    /// The stages recorded for one client request id, in record order
+    /// (dump-verification helper for clients).
+    pub fn stages_for_request(&self, request: u64) -> Vec<FlightStage> {
+        self.events.iter().filter(|e| e.request == request).map(|e| e.stage).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let rec = FlightRecorder::with_capacity(8);
+        let lane = lane_id("t.lane");
+        for i in 0..20u64 {
+            rec.record(FlightStage::Admit, i + 1, i, lane, 0);
+        }
+        let dump = rec.snapshot();
+        assert_eq!(dump.events.len(), 8);
+        assert_eq!(dump.dropped, 12);
+        assert_eq!(dump.capacity, 8);
+        // Oldest-first: the surviving events are the last 8 recorded.
+        let flights: Vec<u64> = dump.events.iter().map(|e| e.flight).collect();
+        assert_eq!(flights, (13..=20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn dump_json_round_trips() {
+        let rec = FlightRecorder::with_capacity(16);
+        let lane = lane_id("t.round");
+        rec.record(FlightStage::Admit, 5, 99, lane, 0);
+        rec.record(FlightStage::Dequeue, 5, 99, lane, 0);
+        rec.record(FlightStage::BatchSeal, 5, 99, lane, 2);
+        rec.record(FlightStage::Execute, 5, 99, lane, 2);
+        rec.record(FlightStage::Respond, 5, 99, lane, 2);
+        let dump = rec.snapshot();
+        let back = FlightDump::parse(&dump.to_json_line()).unwrap();
+        assert_eq!(back, dump);
+        assert_eq!(back.stages_for_request(99), vec![
+            FlightStage::Admit,
+            FlightStage::Dequeue,
+            FlightStage::BatchSeal,
+            FlightStage::Execute,
+            FlightStage::Respond
+        ]);
+        assert!(FlightDump::parse("{\"schema\": \"nope\"}").is_err());
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_spans() {
+        let rec = FlightRecorder::with_capacity(16);
+        let lane = lane_id("t.chrome");
+        rec.record(FlightStage::Admit, 7, 1, lane, 0);
+        rec.record(FlightStage::Dequeue, 7, 1, lane, 0);
+        rec.record(FlightStage::BatchSeal, 7, 1, lane, 4);
+        rec.record(FlightStage::Execute, 7, 1, lane, 4);
+        rec.record(FlightStage::Respond, 7, 1, lane, 4);
+        rec.record(FlightStage::Admit, 8, 2, lane, 0);
+        rec.record(FlightStage::Shed, 8, 2, lane, 0);
+        let chrome = rec.snapshot().chrome_trace();
+        let v = parse_json(&chrome).unwrap();
+        let events = match v.get("traceEvents") {
+            Some(Json::Arr(items)) => items.clone(),
+            other => panic!("expected traceEvents array, got {other:?}"),
+        };
+        // 1 process_name metadata + 3 spans for flight 7 + 1 shed instant.
+        assert_eq!(events.len(), 5);
+        let phases: Vec<&str> =
+            events.iter().filter_map(|e| e.get("ph").and_then(Json::as_str)).collect();
+        assert_eq!(phases.iter().filter(|p| **p == "X").count(), 3);
+        assert_eq!(phases.iter().filter(|p| **p == "i").count(), 1);
+    }
+
+    #[test]
+    fn lane_interning_is_stable() {
+        let a = lane_id("t.intern.a");
+        let b = lane_id("t.intern.b");
+        assert_ne!(a, b);
+        assert_eq!(lane_id("t.intern.a"), a);
+        assert_eq!(lane_name(a).as_deref(), Some("t.intern.a"));
+        assert_eq!(lane_name(u64::MAX), None);
+    }
+}

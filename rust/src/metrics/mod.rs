@@ -1,24 +1,41 @@
-//! Observability: a structured metrics [`registry`], feature-gated tracing
+//! Observability: a structured metrics [`registry`], live [`prometheus`]
+//! exposition, the per-request [`flight`] recorder, feature-gated tracing
 //! [spans](trace), and the paper-format [table printers](tables).
 //!
-//! Three layers, coarsest to finest:
+//! Layers, coarsest to finest:
 //!
 //! 1. **Tables** ([`tables`]) — human-readable reproductions of the
 //!    paper's Tables I–V and Fig. 7, printed by the CLI.
-//! 2. **Registry** ([`registry`]) — thread-safe counters, gauges and
-//!    histograms that the batch executor, schedule cache, PE simulator
-//!    and energy model report into ([`MetricsRegistry::global`] by
-//!    default). Snapshots are deterministic and serialize into
+//! 2. **Registry** ([`registry`]) — thread-safe counters, gauges,
+//!    histograms and sliding-window histograms that the batch executor,
+//!    schedule cache, PE simulator and energy model report into
+//!    ([`MetricsRegistry::global`] by default). Snapshots are
+//!    deterministic and serialize into
 //!    [`PerfReport`](crate::coordinator::PerfReport) JSON.
-//! 3. **Spans** ([`trace`]) — RAII timing guards around schedule
+//! 3. **Exposition** ([`prometheus`]) — renders every registry (global
+//!    plus per-model lanes) in Prometheus text format for the serving
+//!    stack's `--metrics-addr` endpoint, and bundles the strict format
+//!    checker CI scrapes with.
+//! 4. **Flight recorder** ([`flight`]) — an always-on, lock-free ring of
+//!    per-request span events (admit → dequeue → batch-seal → execute →
+//!    respond), dumpable as `tulip.trace/v1` JSON and convertible to
+//!    Chrome `trace_event` JSON.
+//! 5. **Spans** ([`trace`]) — RAII timing guards around schedule
 //!    planning, batch sharding and per-image forward passes. Compiled
 //!    out entirely (zero cost) unless the crate is built with
 //!    `--features trace`.
 
+pub mod flight;
+pub mod prometheus;
 pub mod registry;
 pub mod tables;
 pub mod trace;
 
-pub use registry::{Counter, Gauge, Histogram, HistogramSnapshot, MetricsRegistry, MetricsSnapshot};
+pub use flight::{FlightDump, FlightEvent, FlightRecorder, FlightStage};
+pub use prometheus::{check_exposition, ExpositionStats};
+pub use registry::{
+    Counter, Gauge, Histogram, HistogramSnapshot, MetricsRegistry, MetricsSnapshot,
+    WindowHistogram,
+};
 pub use tables::{print_comparison, print_fig7, print_table1, print_table2, print_table3};
 pub use trace::{span, take_events, trace_enabled, Span, TraceEvent};

@@ -1,0 +1,408 @@
+//! Prometheus text exposition (format 0.0.4) and a strict in-repo format
+//! checker.
+//!
+//! The renderer turns [`MetricsRegistry`] instruments into the plain-text
+//! format Prometheus scrapes, std-only like the rest of the crate:
+//!
+//! * counters → `tulip_<name>_total` (dots become underscores);
+//! * gauges → `tulip_<name>`;
+//! * log₂ [`Histogram`](super::Histogram)s → native Prometheus histograms
+//!   with cumulative `_bucket{le="2^w-1"}` series plus `_sum`/`_count`;
+//! * [`WindowHistogram`](super::WindowHistogram)s → live rolling-quantile
+//!   gauges `tulip_<name>_rolling{window="10s",quantile="0.99"}` and a
+//!   `_rolling_count` per window.
+//!
+//! [`render`] merges the global registry with every live model lane's
+//! scoped registry (lane samples carry a `model="<lane>"` label), grouping
+//! samples by family so each metric name gets exactly one `# TYPE` line —
+//! a format requirement the bundled [`check_exposition`] enforces, along
+//! with name/label/value grammar and histogram completeness. CI runs the
+//! checker against a live scrape via `examples/promcheck.rs`.
+
+use super::registry::{MetricsRegistry, MetricsSnapshot};
+use anyhow::{bail, ensure, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Rolling windows rendered for every window histogram, in seconds.
+pub const ROLLING_WINDOWS_S: [u64; 2] = [10, 60];
+
+/// Rolling quantiles rendered per window (value, label text).
+const ROLLING_QUANTILES: [(f64, &str); 2] = [(0.5, "0.5"), (0.99, "0.99")];
+
+/// Map a dot-separated registry name to a Prometheus metric name:
+/// `tulip_` prefix, every character outside `[a-zA-Z0-9_]` replaced by
+/// `_` (`"serve.latency_us.total"` → `"tulip_serve_latency_us_total"`).
+pub fn metric_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 6);
+    out.push_str("tulip_");
+    for c in name.chars() {
+        out.push(if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' });
+    }
+    out
+}
+
+/// Escape a label value per the exposition format (`\\`, `\"`, `\n`).
+fn label_value(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format an `f64` sample value (`+Inf`/`-Inf`/`NaN` spellings per spec).
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Join base labels with extras into `{k="v",…}` (empty string when none).
+fn label_set(base: &[(&str, &str)], extra: &[(&str, &str)]) -> String {
+    let mut pairs: Vec<String> = Vec::with_capacity(base.len() + extra.len());
+    for (k, v) in base.iter().chain(extra) {
+        pairs.push(format!("{k}=\"{}\"", label_value(v)));
+    }
+    if pairs.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", pairs.join(","))
+    }
+}
+
+/// Families under construction: family name → (kind, sample lines). The
+/// map groups samples across registries so each family is emitted under a
+/// single `# TYPE` line.
+type Families = BTreeMap<String, (&'static str, Vec<String>)>;
+
+fn push_sample(fams: &mut Families, family: &str, kind: &'static str, line: String) {
+    let entry = fams.entry(family.to_string()).or_insert((kind, Vec::new()));
+    entry.1.push(line);
+}
+
+/// Render one registry's instruments into `fams`, tagging every sample
+/// with `base` labels (empty for the global registry, `model="<lane>"`
+/// for a lane's scoped registry).
+fn render_registry(fams: &mut Families, reg: &MetricsRegistry, base: &[(&str, &str)]) {
+    let MetricsSnapshot { counters, gauges, histograms } = reg.snapshot();
+    for (name, v) in &counters {
+        let fam = format!("{}_total", metric_name(name));
+        let line = format!("{fam}{} {v}", label_set(base, &[]));
+        push_sample(fams, &fam, "counter", line);
+    }
+    for (name, v) in &gauges {
+        let fam = metric_name(name);
+        let line = format!("{fam}{} {}", label_set(base, &[]), fmt_f64(*v));
+        push_sample(fams, &fam, "gauge", line);
+    }
+    for (name, h) in &histograms {
+        let fam = metric_name(name);
+        let mut cum = 0u64;
+        for &(width, n) in &h.buckets {
+            cum += n;
+            let le = if width >= 64 { u64::MAX } else { (1u64 << width) - 1 };
+            let labels = label_set(base, &[("le", &le.to_string())]);
+            push_sample(fams, &fam, "histogram", format!("{fam}_bucket{labels} {cum}"));
+        }
+        let inf = label_set(base, &[("le", "+Inf")]);
+        push_sample(fams, &fam, "histogram", format!("{fam}_bucket{inf} {}", h.count));
+        push_sample(fams, &fam, "histogram", format!("{fam}_sum{} {}", label_set(base, &[]), h.sum));
+        let count_line = format!("{fam}_count{} {}", label_set(base, &[]), h.count);
+        push_sample(fams, &fam, "histogram", count_line);
+    }
+    for (name, w) in reg.window_histograms() {
+        let fam = format!("{}_rolling", metric_name(&name));
+        let count_fam = format!("{fam}_count");
+        for window in ROLLING_WINDOWS_S {
+            let snap = w.snapshot_window(window);
+            let win = format!("{window}s");
+            for (q, q_label) in ROLLING_QUANTILES {
+                let labels = label_set(base, &[("window", &win), ("quantile", q_label)]);
+                let line = format!("{fam}{labels} {}", snap.quantile(q));
+                push_sample(fams, &fam, "gauge", line);
+            }
+            let labels = label_set(base, &[("window", &win)]);
+            push_sample(fams, &count_fam, "gauge", format!("{count_fam}{labels} {}", snap.count));
+        }
+    }
+}
+
+/// Render the global registry plus every live model lane's scoped registry
+/// as one Prometheus text exposition. Lane samples carry `model="<lane>"`;
+/// lanes retired by `unload_model` are simply absent from the slice, so
+/// their series disappear from the next scrape.
+pub fn render(global: &MetricsRegistry, lanes: &[(String, Arc<MetricsRegistry>)]) -> String {
+    let mut fams = Families::new();
+    render_registry(&mut fams, global, &[]);
+    for (lane, reg) in lanes {
+        render_registry(&mut fams, reg, &[("model", lane)]);
+    }
+    let mut out = String::new();
+    for (family, (kind, samples)) in &fams {
+        out.push_str(&format!("# TYPE {family} {kind}\n"));
+        for line in samples {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Statistics from a successful [`check_exposition`] pass.
+#[derive(Debug, Clone, Default)]
+pub struct ExpositionStats {
+    /// Number of `# TYPE`-declared metric families.
+    pub families: usize,
+    /// Number of sample lines.
+    pub samples: usize,
+    sample_lines: Vec<String>,
+}
+
+impl ExpositionStats {
+    /// Whether any sample line starts with `prefix` — a metric name,
+    /// optionally followed by the start of its label set, e.g.
+    /// `tulip_serve_latency_us_total_rolling{model="tiny"`.
+    pub fn has_series(&self, prefix: &str) -> bool {
+        self.sample_lines.iter().any(|l| l.starts_with(prefix))
+    }
+}
+
+/// Length of the leading metric-name token (Prometheus name grammar
+/// `[a-zA-Z_:][a-zA-Z0-9_:]*`); 0 when the line does not start with one.
+fn name_len(line: &str) -> usize {
+    let b = line.as_bytes();
+    let head = |c: u8| c.is_ascii_alphabetic() || c == b'_' || c == b':';
+    if b.is_empty() || !head(b[0]) {
+        return 0;
+    }
+    b.iter().take_while(|&&c| head(c) || c.is_ascii_digit()).count()
+}
+
+/// Validate and consume one `{k="v",…}` label set, returning the rest.
+fn check_labels(line: &str, rest: &str, ln: usize) -> Result<usize> {
+    // rest starts just past '{'; returns the offset just past '}'.
+    let b = rest.as_bytes();
+    let mut i = 0;
+    if b.first() == Some(&b'}') {
+        return Ok(i + 1);
+    }
+    loop {
+        let n = name_len(&rest[i..]);
+        ensure!(n > 0, "line {ln}: invalid label name in {line:?}");
+        i += n;
+        ensure!(b.get(i) == Some(&b'='), "line {ln}: expected '=' after label name");
+        i += 1;
+        ensure!(b.get(i) == Some(&b'"'), "line {ln}: expected '\"' to open label value");
+        i += 1;
+        loop {
+            match b.get(i) {
+                None => bail!("line {ln}: unterminated label value"),
+                Some(b'"') => {
+                    i += 1;
+                    break;
+                }
+                Some(b'\\') => {
+                    ensure!(
+                        matches!(b.get(i + 1), Some(b'\\' | b'"' | b'n')),
+                        "line {ln}: invalid escape in label value"
+                    );
+                    i += 2;
+                }
+                Some(_) => i += 1,
+            }
+        }
+        match b.get(i) {
+            Some(b',') => i += 1,
+            Some(b'}') => return Ok(i + 1),
+            _ => bail!("line {ln}: expected ',' or '}}' in label set"),
+        }
+    }
+}
+
+/// Validate one sample line, returning its metric name.
+fn check_sample(line: &str, ln: usize) -> Result<String> {
+    let n = name_len(line);
+    ensure!(n > 0, "line {ln}: sample does not start with a valid metric name: {line:?}");
+    let name = line[..n].to_string();
+    let mut i = n;
+    if line.as_bytes().get(i) == Some(&b'{') {
+        i += 1 + check_labels(line, &line[i + 1..], ln)?;
+    }
+    ensure!(line.as_bytes().get(i) == Some(&b' '), "line {ln}: expected space before value");
+    let mut fields = line[i + 1..].split(' ');
+    let value = fields.next().unwrap_or("");
+    ensure!(value.parse::<f64>().is_ok(), "line {ln}: unparseable sample value {value:?}");
+    if let Some(ts) = fields.next() {
+        ensure!(ts.parse::<i64>().is_ok(), "line {ln}: unparseable timestamp {ts:?}");
+    }
+    ensure!(fields.next().is_none(), "line {ln}: trailing fields after value/timestamp");
+    Ok(name)
+}
+
+/// Strictly validate a Prometheus text exposition: metric-name and label
+/// grammar, parseable values, at most one `# TYPE` per family declared
+/// before its samples, known TYPE kinds, and — for declared histograms —
+/// presence of the `_bucket{le="+Inf"}`, `_sum` and `_count` series.
+pub fn check_exposition(text: &str) -> Result<ExpositionStats> {
+    ensure!(!text.is_empty(), "empty exposition");
+    ensure!(text.ends_with('\n'), "exposition must end with a newline");
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    let mut stats = ExpositionStats::default();
+    for (idx, line) in text.lines().enumerate() {
+        let ln = idx + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(comment) = line.strip_prefix('#') {
+            let comment = comment.trim_start();
+            if let Some(decl) = comment.strip_prefix("TYPE ") {
+                let mut parts = decl.split(' ');
+                let (name, kind) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+                ensure!(
+                    name_len(name) == name.len() && !name.is_empty(),
+                    "line {ln}: invalid family name in TYPE"
+                );
+                ensure!(
+                    matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped"),
+                    "line {ln}: unknown TYPE kind {kind:?}"
+                );
+                ensure!(parts.next().is_none(), "line {ln}: trailing text after TYPE");
+                ensure!(
+                    types.insert(name.to_string(), kind.to_string()).is_none(),
+                    "line {ln}: duplicate TYPE for family {name:?}"
+                );
+                ensure!(
+                    !stats.sample_lines.iter().any(|l| {
+                        let got = &l[..name_len(l)];
+                        got == name || got.strip_prefix(name).is_some_and(|rest| {
+                            matches!(rest, "_bucket" | "_sum" | "_count" | "_total")
+                        })
+                    }),
+                    "line {ln}: TYPE for {name:?} appears after its samples"
+                );
+            }
+            // `# HELP …` and plain comments are fine as-is.
+            continue;
+        }
+        check_sample(line, ln)?;
+        stats.sample_lines.push(line.to_string());
+        stats.samples += 1;
+    }
+    stats.families = types.len();
+    for (name, kind) in &types {
+        if kind == "histogram" {
+            for suffix in ["_bucket{", "_sum", "_count"] {
+                let want = format!("{name}{suffix}");
+                ensure!(
+                    stats.has_series(&want),
+                    "histogram family {name:?} is missing its {suffix} series"
+                );
+            }
+            let inf = "le=\"+Inf\"";
+            ensure!(
+                stats
+                    .sample_lines
+                    .iter()
+                    .any(|l| l.starts_with(&format!("{name}_bucket{{")) && l.contains(inf)),
+                "histogram family {name:?} has no le=\"+Inf\" bucket"
+            );
+        }
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_passes_checker_and_names_are_sanitized() {
+        let reg = MetricsRegistry::new();
+        reg.counter("serve.admitted").add(5);
+        reg.gauge("batch.energy_per_classification_pj").set(12.5);
+        let h = reg.histogram("serve.latency_us.total");
+        h.observe(0);
+        h.observe(900);
+        reg.window_histogram("serve.latency_us.total").observe(900);
+        let text = render(&reg, &[]);
+        let stats = check_exposition(&text).unwrap();
+        assert!(stats.has_series("tulip_serve_admitted_total 5"), "{text}");
+        assert!(stats.has_series("tulip_batch_energy_per_classification_pj 12.5"), "{text}");
+        assert!(stats.has_series("tulip_serve_latency_us_total_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(stats.has_series("tulip_serve_latency_us_total_rolling{window=\"10s\""), "{text}");
+        assert!(stats.has_series("tulip_serve_latency_us_total_rolling_count{window=\"60s\""));
+    }
+
+    #[test]
+    fn lane_registries_are_labeled_and_disappear_when_dropped() {
+        let global = MetricsRegistry::new();
+        let lane = Arc::new(MetricsRegistry::new());
+        lane.counter("serve.completed").add(3);
+        let lanes = vec![("tiny".to_string(), Arc::clone(&lane))];
+        let text = render(&global, &lanes);
+        check_exposition(&text).unwrap();
+        assert!(text.contains("tulip_serve_completed_total{model=\"tiny\"} 3"), "{text}");
+        // A retired lane is simply absent from the next render.
+        let text = render(&global, &[]);
+        assert!(!text.contains("model=\"tiny\""), "{text}");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_with_inf() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("t.lat");
+        for v in [0u64, 1, 2, 3, 900] {
+            h.observe(v);
+        }
+        let text = render(&reg, &[]);
+        check_exposition(&text).unwrap();
+        assert!(text.contains("tulip_t_lat_bucket{le=\"0\"} 1\n"), "{text}");
+        assert!(text.contains("tulip_t_lat_bucket{le=\"1\"} 2\n"), "{text}");
+        assert!(text.contains("tulip_t_lat_bucket{le=\"3\"} 4\n"), "{text}");
+        assert!(text.contains("tulip_t_lat_bucket{le=\"1023\"} 5\n"), "{text}");
+        assert!(text.contains("tulip_t_lat_bucket{le=\"+Inf\"} 5\n"), "{text}");
+        assert!(text.contains("tulip_t_lat_sum 906\n"), "{text}");
+        assert!(text.contains("tulip_t_lat_count 5\n"), "{text}");
+    }
+
+    #[test]
+    fn checker_rejects_malformed_expositions() {
+        assert!(check_exposition("").is_err(), "empty");
+        assert!(check_exposition("tulip_ok 1").is_err(), "missing trailing newline");
+        assert!(check_exposition("9bad_name 1\n").is_err(), "name starts with digit");
+        assert!(check_exposition("tulip_ok notanumber\n").is_err(), "bad value");
+        assert!(check_exposition("tulip_ok{le=\"unterminated} 1\n").is_err(), "bad label");
+        assert!(check_exposition("tulip_ok{le=+Inf} 1\n").is_err(), "unquoted label value");
+        assert!(
+            check_exposition("# TYPE tulip_x counter\n# TYPE tulip_x counter\ntulip_x 1\n")
+                .is_err(),
+            "duplicate TYPE"
+        );
+        assert!(
+            check_exposition("tulip_x_total 1\n# TYPE tulip_x_total counter\n").is_err(),
+            "TYPE after samples"
+        );
+        assert!(
+            check_exposition("# TYPE tulip_h histogram\ntulip_h_sum 1\ntulip_h_count 1\n")
+                .is_err(),
+            "histogram without +Inf bucket"
+        );
+        // Valid: comments, HELP, timestamps, NaN/Inf values, escapes.
+        let ok = "# scraped from tulip\n# HELP tulip_g a gauge\n# TYPE tulip_g gauge\n\
+                  tulip_g{model=\"a\\\\b\\\"c\\nd\"} NaN 1700000000\ntulip_g2 +Inf\n";
+        let stats = check_exposition(ok).unwrap();
+        assert_eq!((stats.families, stats.samples), (1, 2));
+    }
+}

@@ -30,6 +30,7 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Instant;
 
 /// A monotonically increasing counter handle (cheap to clone; all clones
 /// share one atomic).
@@ -241,13 +242,173 @@ impl HistogramSnapshot {
     }
 }
 
-/// The registry: a name-keyed set of [`Counter`]s, [`Gauge`]s and
-/// [`Histogram`]s. See the [module docs](self) for the locking story.
+/// Number of one-second slices in a [`WindowHistogram`] ring. 64 slices
+/// comfortably cover the largest supported query window (60 s) while
+/// keeping the slot lookup a cheap modulo.
+const WINDOW_SLICES: usize = 64;
+
+/// One per-second slice of a [`WindowHistogram`]: a full log₂ histogram
+/// tagged with the absolute second it currently covers.
+#[derive(Debug)]
+struct WindowSlice {
+    /// Absolute second this slice holds (`u64::MAX` = never used).
+    second: AtomicU64,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; NUM_BUCKETS],
+}
+
+impl WindowSlice {
+    fn new() -> Self {
+        WindowSlice {
+            second: AtomicU64::new(u64::MAX),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Shared state behind a [`WindowHistogram`] handle.
+#[derive(Debug)]
+struct WindowCore {
+    epoch: Instant,
+    slices: [WindowSlice; WINDOW_SLICES],
+}
+
+/// A sliding-window histogram: a ring of per-second log₂ histogram slices,
+/// so rolling quantiles (p50/p99 over the last 10 s or 60 s) stay
+/// queryable live while the hot path remains lock-free — one tag check
+/// plus the same handful of relaxed atomic ops as [`Histogram::observe`].
+///
+/// Slices are claimed per absolute second via compare-and-swap on the
+/// slice's second tag; the claimant clears the stale counts before the
+/// slice starts accumulating the new second. Windows larger than
+/// [`WINDOW_SLICES`] (64 s) are clamped, which covers the 10 s and 60 s
+/// SLO windows the serving stack exposes.
+///
+/// The `*_at` variants take the second as an argument so slice rotation is
+/// testable against a simulated clock; `observe`/`snapshot_window` use the
+/// handle's own monotonic clock.
+#[derive(Debug, Clone)]
+pub struct WindowHistogram(Arc<WindowCore>);
+
+impl Default for WindowHistogram {
+    fn default() -> Self {
+        WindowHistogram(Arc::new(WindowCore {
+            epoch: Instant::now(),
+            slices: std::array::from_fn(|_| WindowSlice::new()),
+        }))
+    }
+}
+
+impl WindowHistogram {
+    /// A fresh, empty window histogram whose clock starts now.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Seconds elapsed on this histogram's own monotonic clock.
+    pub fn now_s(&self) -> u64 {
+        self.0.epoch.elapsed().as_secs()
+    }
+
+    /// Record one sample at the current second.
+    pub fn observe(&self, v: u64) {
+        self.observe_at(self.now_s(), v);
+    }
+
+    /// Record one sample at the absolute second `sec` (simulated-clock
+    /// variant; see the type docs).
+    pub fn observe_at(&self, sec: u64, v: u64) {
+        let slice = &self.0.slices[(sec % WINDOW_SLICES as u64) as usize];
+        let tagged = slice.second.load(Ordering::Acquire);
+        if tagged != sec {
+            // First writer of a new second claims the slice and clears the
+            // stale counts. Losing the claim race for the same second just
+            // falls through to record; a straggler from an older second
+            // lands in the newer slice — one sample attributed a ring-turn
+            // late, acceptable for telemetry.
+            let claim =
+                slice.second.compare_exchange(tagged, sec, Ordering::AcqRel, Ordering::Acquire);
+            if claim.is_ok() {
+                slice.reset();
+            }
+        }
+        slice.count.fetch_add(1, Ordering::Relaxed);
+        slice.sum.fetch_add(v, Ordering::Relaxed);
+        slice.min.fetch_min(v, Ordering::Relaxed);
+        slice.max.fetch_max(v, Ordering::Relaxed);
+        let bucket = (64 - v.leading_zeros()) as usize; // 0 for v == 0
+        slice.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Merge the slices covering the trailing `window_s` seconds into one
+    /// [`HistogramSnapshot`].
+    pub fn snapshot_window(&self, window_s: u64) -> HistogramSnapshot {
+        self.snapshot_window_at(self.now_s(), window_s)
+    }
+
+    /// Window snapshot as of the absolute second `now_s` (simulated-clock
+    /// variant): merges every slice whose second lies in
+    /// `(now_s - window_s, now_s]`.
+    pub fn snapshot_window_at(&self, now_s: u64, window_s: u64) -> HistogramSnapshot {
+        let window_s = window_s.min(WINDOW_SLICES as u64);
+        let mut merged = HistogramSnapshot::default();
+        for slice in &self.0.slices {
+            let sec = slice.second.load(Ordering::Acquire);
+            if sec > now_s || now_s - sec >= window_s {
+                continue; // never used (u64::MAX tag), future, or aged out
+            }
+            let count = slice.count.load(Ordering::Relaxed);
+            if count == 0 {
+                continue;
+            }
+            let min = slice.min.load(Ordering::Relaxed);
+            merged.merge(&HistogramSnapshot {
+                count,
+                sum: slice.sum.load(Ordering::Relaxed),
+                // A slice mid-reset can expose the sentinel min; floor it.
+                min: if min == u64::MAX { 0 } else { min },
+                max: slice.max.load(Ordering::Relaxed),
+                buckets: slice
+                    .buckets
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(b, n)| {
+                        let n = n.load(Ordering::Relaxed);
+                        (n > 0).then_some((b as u32, n))
+                    })
+                    .collect(),
+            });
+        }
+        merged
+    }
+}
+
+/// The registry: a name-keyed set of [`Counter`]s, [`Gauge`]s,
+/// [`Histogram`]s and [`WindowHistogram`]s. See the [module docs](self)
+/// for the locking story.
 #[derive(Debug, Default)]
 pub struct MetricsRegistry {
     counters: RwLock<BTreeMap<String, Counter>>,
     gauges: RwLock<BTreeMap<String, Gauge>>,
     histograms: RwLock<BTreeMap<String, Histogram>>,
+    windows: RwLock<BTreeMap<String, WindowHistogram>>,
 }
 
 impl MetricsRegistry {
@@ -290,6 +451,28 @@ impl MetricsRegistry {
         }
         let mut map = self.histograms.write().expect("metrics registry poisoned");
         map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get (or create) the sliding-window histogram named `name`.
+    pub fn window_histogram(&self, name: &str) -> WindowHistogram {
+        if let Some(w) = self.windows.read().expect("metrics registry poisoned").get(name) {
+            return w.clone();
+        }
+        let mut map = self.windows.write().expect("metrics registry poisoned");
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Every sliding-window histogram as `(name, handle)`, sorted by name.
+    /// Window instruments are queried live — e.g. by the Prometheus
+    /// exposition — rather than frozen into [`MetricsSnapshot`]s, which
+    /// keeps the perf-report schema stable.
+    pub fn window_histograms(&self) -> Vec<(String, WindowHistogram)> {
+        self.windows
+            .read()
+            .expect("metrics registry poisoned")
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
     }
 
     /// Freeze every instrument into a sorted, deterministic snapshot.
@@ -432,6 +615,26 @@ mod tests {
         assert_eq!(snap.counters, vec![("a.first".to_string(), 1), ("b.second".to_string(), 2)]);
         assert_eq!(snap.gauges, vec![("z.gauge".to_string(), 9.0)]);
         assert!(snap.histograms.is_empty());
+    }
+
+    #[test]
+    fn window_histogram_rotates_and_ages_out_slices() {
+        let reg = MetricsRegistry::new();
+        let w = reg.window_histogram("t.win");
+        w.observe_at(0, 100);
+        w.observe_at(5, 200);
+        // Both seconds inside a 10 s window ending at second 5.
+        let s = w.snapshot_window_at(5, 10);
+        assert_eq!((s.count, s.sum, s.min, s.max), (2, 300, 100, 200));
+        // A 1 s window sees only second 5.
+        assert_eq!(w.snapshot_window_at(5, 1).count, 1);
+        // Second 64 reuses second 0's slice: the old sample is gone.
+        w.observe_at(64, 300);
+        let s = w.snapshot_window_at(64, 60);
+        assert_eq!((s.count, s.sum), (2, 500));
+        // Handles alias the same ring.
+        assert_eq!(reg.window_histogram("t.win").snapshot_window_at(64, 60).count, 2);
+        assert_eq!(reg.window_histograms().len(), 1);
     }
 
     #[test]

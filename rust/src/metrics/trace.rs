@@ -21,9 +21,17 @@
 //! ```
 
 #[cfg(feature = "trace")]
+use std::collections::VecDeque;
+#[cfg(feature = "trace")]
 use std::sync::{Mutex, OnceLock};
 #[cfg(feature = "trace")]
 use std::time::Instant;
+
+/// Maximum number of span events retained between [`take_events`] drains.
+/// Once full, the oldest event is dropped per new record and the drop is
+/// counted in the global `trace.dropped` counter, so a long-running serve
+/// built with `--features trace` holds at most this many events.
+pub const TRACE_EVENT_CAPACITY: usize = 65_536;
 
 /// One completed span: recorded when a [`Span`] guard drops (only with the
 /// `trace` feature enabled).
@@ -77,13 +85,14 @@ pub const fn trace_enabled() -> bool {
     cfg!(feature = "trace")
 }
 
-/// Drain and return every event recorded so far (always empty when the
-/// `trace` feature is off). Draining keeps the buffer bounded across
-/// long-running benchmark loops.
+/// Drain and return every event recorded so far, oldest first (always
+/// empty when the `trace` feature is off). The backing store is a ring
+/// capped at [`TRACE_EVENT_CAPACITY`]; between drains, overflow discards
+/// the oldest events and counts them in `trace.dropped`.
 pub fn take_events() -> Vec<TraceEvent> {
     #[cfg(feature = "trace")]
     {
-        std::mem::take(&mut *collector().lock().expect("trace collector poisoned"))
+        collector().lock().expect("trace collector poisoned").drain(..).collect()
     }
     #[cfg(not(feature = "trace"))]
     {
@@ -92,9 +101,9 @@ pub fn take_events() -> Vec<TraceEvent> {
 }
 
 #[cfg(feature = "trace")]
-fn collector() -> &'static Mutex<Vec<TraceEvent>> {
-    static EVENTS: OnceLock<Mutex<Vec<TraceEvent>>> = OnceLock::new();
-    EVENTS.get_or_init(|| Mutex::new(Vec::new()))
+fn collector() -> &'static Mutex<VecDeque<TraceEvent>> {
+    static EVENTS: OnceLock<Mutex<VecDeque<TraceEvent>>> = OnceLock::new();
+    EVENTS.get_or_init(|| Mutex::new(VecDeque::new()))
 }
 
 #[cfg(feature = "trace")]
@@ -111,7 +120,12 @@ fn record(name: &'static str, start: Instant) {
         start_us: start.saturating_duration_since(epoch()).as_micros() as u64,
         dur_ns: end.saturating_duration_since(start).as_nanos() as u64,
     };
-    collector().lock().expect("trace collector poisoned").push(event);
+    let mut events = collector().lock().expect("trace collector poisoned");
+    if events.len() >= TRACE_EVENT_CAPACITY {
+        events.pop_front();
+        crate::metrics::MetricsRegistry::global().counter("trace.dropped").inc();
+    }
+    events.push_back(event);
 }
 
 #[cfg(test)]
@@ -132,8 +146,19 @@ mod tests {
             assert_eq!(events[1].name, "test.span");
         } else {
             assert!(events.is_empty(), "no-op spans must record nothing");
+            return;
         }
-        // Buffer was drained either way.
+        // Buffer was drained.
         assert!(take_events().is_empty());
+
+        // The store is a capped ring: overflow drops the oldest events and
+        // counts them, so long-running traced serves stay bounded.
+        let dropped = crate::metrics::MetricsRegistry::global().counter("trace.dropped");
+        let dropped_before = dropped.get();
+        for _ in 0..TRACE_EVENT_CAPACITY + 10 {
+            let _guard = span("test.flood");
+        }
+        assert_eq!(take_events().len(), TRACE_EVENT_CAPACITY);
+        assert!(dropped.get() >= dropped_before + 10);
     }
 }

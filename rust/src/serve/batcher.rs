@@ -13,7 +13,8 @@
 use super::queue::{BoundedQueue, ServeRequest};
 use super::shed::Shedder;
 use crate::coordinator::{BatchExecutor, BatchRequest, BatchResult, WorkerSummary};
-use crate::metrics::{Counter, Histogram, MetricsRegistry};
+use crate::metrics::flight::{self, FlightStage};
+use crate::metrics::{Counter, Histogram, MetricsRegistry, WindowHistogram};
 use crate::pe::PeStats;
 use crate::serve::protocol::ServeResponse;
 use crate::sim::cycle::LayerObs;
@@ -98,12 +99,15 @@ pub struct Batcher {
     max_batch: usize,
     max_wait: Duration,
     shedder: Shedder,
+    lane: u64,
     completed: Counter,
     failed: Counter,
     occupancy: Histogram,
     queue_us: Histogram,
     batch_us: Histogram,
     total_us: Histogram,
+    queue_win: WindowHistogram,
+    total_win: WindowHistogram,
 }
 
 impl Batcher {
@@ -119,18 +123,29 @@ impl Batcher {
         assert!(max_batch > 0, "max_batch must be positive");
         Batcher {
             shedder: Shedder::new(&registry),
+            lane: flight::lane_id(""),
             completed: registry.counter("serve.completed"),
             failed: registry.counter("serve.failed"),
             occupancy: registry.histogram("serve.batch_occupancy"),
             queue_us: registry.histogram("serve.latency_us.queue"),
             batch_us: registry.histogram("serve.latency_us.batch"),
             total_us: registry.histogram("serve.latency_us.total"),
+            queue_win: registry.window_histogram("serve.latency_us.queue"),
+            total_win: registry.window_histogram("serve.latency_us.total"),
             exec,
             queue,
             registry,
             max_batch,
             max_wait,
         }
+    }
+
+    /// Tag this batcher's flight events (dequeue/seal/execute/respond, and
+    /// the shedder's sheds) with an interned lane id.
+    pub fn with_lane(mut self, lane: u64) -> Self {
+        self.lane = lane;
+        self.shedder = self.shedder.with_lane(lane);
+        self
     }
 
     /// Run until the queue is closed *and* drained, then return the
@@ -144,11 +159,19 @@ impl Batcher {
                 return agg; // closed and fully drained
             }
             let dequeued = Instant::now();
+            let rec = flight::recorder();
+            for r in &batch {
+                rec.record(FlightStage::Dequeue, r.flight, r.id, self.lane, 0);
+            }
             let live = self.shedder.shed_expired(batch, dequeued);
             if live.is_empty() {
                 continue;
             }
             self.occupancy.observe(live.len() as u64);
+            let batch_id = flight::next_batch_id();
+            for r in &live {
+                rec.record(FlightStage::BatchSeal, r.flight, r.id, self.lane, batch_id);
+            }
             let req = BatchRequest::new(live.iter().map(|r| r.image.clone()).collect());
             match self.exec.run(&req) {
                 Ok(result) => {
@@ -157,10 +180,13 @@ impl Batcher {
                     self.batch_us.observe(batch_us);
                     let done = Instant::now();
                     for (r, img) in live.iter().zip(&result.images) {
+                        rec.record(FlightStage::Execute, r.flight, r.id, self.lane, batch_id);
                         let queue_us = (dequeued - r.enqueued).as_micros() as u64;
                         let total_us = (done - r.enqueued).as_micros() as u64;
                         self.queue_us.observe(queue_us);
                         self.total_us.observe(total_us);
+                        self.queue_win.observe(queue_us);
+                        self.total_win.observe(total_us);
                         self.completed.inc();
                         let resp = ServeResponse::ok(
                             r.id,
@@ -172,6 +198,7 @@ impl Batcher {
                             total_us,
                         );
                         let _ = r.resp.send(resp.to_json_line());
+                        rec.record(FlightStage::Respond, r.flight, r.id, self.lane, batch_id);
                     }
                     agg.merge(&result);
                 }
@@ -182,6 +209,7 @@ impl Batcher {
                     for r in &live {
                         self.failed.inc();
                         let _ = r.resp.send(ServeResponse::error(r.id, &msg).to_json_line());
+                        rec.record(FlightStage::Respond, r.flight, r.id, self.lane, batch_id);
                     }
                 }
             }
@@ -221,6 +249,7 @@ mod tests {
             queue
                 .push(ServeRequest {
                     id: i,
+                    flight: 0,
                     image: BitTensor::random(8, 8, 4, 100 + i),
                     deadline: None,
                     enqueued: Instant::now(),

@@ -19,7 +19,12 @@
 //!    a live server;
 //! 6. [`server`] — the TCP accept loop, per-connection reader/writer
 //!    threads, request routing by model name, and graceful drain with a
-//!    final per-model [`ServeReport`].
+//!    final per-model [`ServeReport`];
+//! 7. [`telemetry`] — the live observability plane: an HTTP endpoint
+//!    (`--metrics-addr`) serving Prometheus text exposition for the
+//!    global registry plus every lane (`/metrics`), liveness/readiness
+//!    probes (`/healthz`, `/readyz`) and flight-recorder dumps
+//!    (`/trace`).
 //!
 //! The accounting invariant the whole design is built around:
 //! **`admitted == completed + shed + failed`** at drain time — every
@@ -32,6 +37,7 @@ pub mod queue;
 pub mod registry;
 pub mod server;
 pub mod shed;
+pub mod telemetry;
 
 pub use batcher::{Batcher, ServeAggregate};
 pub use protocol::{pack_bits, unpack_bits, ServeResponse, Status};
@@ -39,6 +45,7 @@ pub use queue::{BackpressurePolicy, BoundedQueue, ServeRequest};
 pub use registry::{ModelDrain, ModelRegistry};
 pub use server::{request_drain, serve, ServeHandle, ServeReport};
 pub use shed::Shedder;
+pub use telemetry::TelemetryHandle;
 
 use crate::bnn::tensor::BinWeights;
 use crate::bnn::{Model, Network};
@@ -71,6 +78,9 @@ pub struct ServeConfig {
     pub threads: usize,
     /// Forward engine every model lane executes with.
     pub engine: ForwardEngine,
+    /// Bind address for the live-telemetry HTTP endpoint (`/metrics`,
+    /// `/healthz`, `/readyz`, `/trace`); `None` disables it.
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -84,6 +94,7 @@ impl Default for ServeConfig {
             array: None,
             threads: 0,
             engine: ForwardEngine::default(),
+            metrics_addr: None,
         }
     }
 }
@@ -160,6 +171,13 @@ impl ServeConfigBuilder {
     /// Forward engine for every model lane.
     pub fn engine(mut self, engine: ForwardEngine) -> Self {
         self.cfg.engine = engine;
+        self
+    }
+
+    /// Bind address for the live-telemetry HTTP endpoint (port 0 picks a
+    /// free port; see [`server::ServeHandle::metrics_addr`]).
+    pub fn metrics_addr(mut self, addr: impl Into<String>) -> Self {
+        self.cfg.metrics_addr = Some(addr.into());
         self
     }
 
@@ -291,6 +309,7 @@ mod tests {
             .array(2, 8)
             .threads(3)
             .engine(ForwardEngine::Scalar)
+            .metrics_addr("127.0.0.1:9091")
             .build();
         assert_eq!(cfg.addr, "0.0.0.0:7171");
         assert_eq!((cfg.max_batch, cfg.max_wait_us, cfg.queue_cap), (8, 100, 32));
@@ -298,6 +317,8 @@ mod tests {
         assert_eq!(cfg.array, Some((2, 8)));
         assert_eq!(cfg.threads, 3);
         assert_eq!(cfg.engine, ForwardEngine::Scalar);
+        assert_eq!(cfg.metrics_addr.as_deref(), Some("127.0.0.1:9091"));
+        assert_eq!(ServeConfig::default().metrics_addr, None, "telemetry is opt-in");
     }
 
     #[test]

@@ -23,8 +23,10 @@
 //!   response carries `"status": "shed"`.
 //!
 //! Control ops: `{"op": "stats"}`, `{"op": "drain"}`,
-//! `{"op": "load_model", "name": "…", "model": { tulip.model/v1 doc }}` and
-//! `{"op": "unload_model", "name": "…"}` (see `serve::registry`).
+//! `{"op": "load_model", "name": "…", "model": { tulip.model/v1 doc }}`,
+//! `{"op": "unload_model", "name": "…"}` (see `serve::registry`) and
+//! `{"op": "trace_dump"}` (the flight recorder as one `tulip.trace/v1`
+//! line, see `metrics::flight`).
 //!
 //! Response: `{"id": 7, "status": "ok", "class": 2, "scores": [...],
 //! "batch_n": 64, "lat_us": {"queue": …, "batch": …, "total": …}}`, or
@@ -371,6 +373,9 @@ pub enum ClientMsg {
         /// Registry name of the model to retire.
         name: String,
     },
+    /// `{"op": "trace_dump"}` — dump the flight recorder as one
+    /// `tulip.trace/v1` JSON line.
+    TraceDump,
 }
 
 /// A single-image inference request (see the [module docs](self) for the
@@ -441,9 +446,11 @@ pub fn parse_client_msg(line: &str) -> std::result::Result<ClientMsg, Error> {
                 Ok(ClientMsg::LoadModel { name, doc })
             }
             "unload_model" => Ok(ClientMsg::UnloadModel { name: name(&v)? }),
-            other => {
-                Err(fail(0, format!("unknown op '{other}' (stats|drain|load_model|unload_model)")))
-            }
+            "trace_dump" => Ok(ClientMsg::TraceDump),
+            other => Err(fail(
+                0,
+                format!("unknown op '{other}' (stats|drain|load_model|unload_model|trace_dump)"),
+            )),
         };
     }
     let id =
@@ -718,6 +725,7 @@ mod tests {
             parse_client_msg(r#"{"op": "unload_model", "name": "z"}"#).unwrap(),
             ClientMsg::UnloadModel { name: "z".into() }
         );
+        assert_eq!(parse_client_msg(r#"{"op": "trace_dump"}"#).unwrap(), ClientMsg::TraceDump);
         assert!(parse_client_msg(r#"{"op": "load_model"}"#).is_err(), "name required");
         assert!(parse_client_msg(r#"{"op": "reboot"}"#).is_err());
     }

@@ -12,6 +12,7 @@
 //! `serve.queue_depth` gauge tracks occupancy.
 
 use crate::bnn::tensor::BitTensor;
+use crate::metrics::flight::{self, FlightStage};
 use crate::metrics::{Counter, Gauge, MetricsRegistry};
 use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
@@ -25,6 +26,9 @@ use std::time::{Duration, Instant};
 pub struct ServeRequest {
     /// Client-chosen request id, echoed on the response.
     pub id: u64,
+    /// Process-unique flight-recorder id, assigned by
+    /// [`BoundedQueue::push`] at admission (0 before admission).
+    pub flight: u64,
     /// The unpacked input image.
     pub image: BitTensor,
     /// Absolute shed deadline, if the client set `deadline_ms`.
@@ -86,6 +90,7 @@ pub struct BoundedQueue {
     not_full: Condvar,
     cap: usize,
     policy: BackpressurePolicy,
+    lane: u64,
     depth: Gauge,
     admitted: Counter,
     rejected: Counter,
@@ -102,10 +107,19 @@ impl BoundedQueue {
             not_full: Condvar::new(),
             cap,
             policy,
+            lane: flight::lane_id(""),
             depth: reg.gauge("serve.queue_depth"),
             admitted: reg.counter("serve.admitted"),
             rejected: reg.counter("serve.rejected"),
         }
+    }
+
+    /// Tag admissions with an interned flight-recorder lane id (see
+    /// [`flight::lane_id`]); the serve registry sets this to the model
+    /// lane's name.
+    pub fn with_lane(mut self, lane: u64) -> Self {
+        self.lane = lane;
+        self
     }
 
     /// Maximum number of queued requests.
@@ -123,8 +137,10 @@ impl BoundedQueue {
         self.len() == 0
     }
 
-    /// Admit a request, applying the backpressure policy when full.
-    pub fn push(&self, req: ServeRequest) -> Result<(), PushError> {
+    /// Admit a request, applying the backpressure policy when full. On
+    /// success the request is issued its flight id and the admission is
+    /// recorded in the global flight recorder.
+    pub fn push(&self, mut req: ServeRequest) -> Result<(), PushError> {
         let mut inner = self.inner.lock().expect("queue lock");
         if inner.closed {
             self.rejected.inc();
@@ -145,6 +161,8 @@ impl BoundedQueue {
                 }
             }
         }
+        req.flight = flight::next_flight_id();
+        flight::recorder().record(FlightStage::Admit, req.flight, req.id, self.lane, 0);
         inner.items.push_back(req);
         self.admitted.inc();
         self.depth.set(inner.items.len() as f64);
@@ -223,6 +241,7 @@ mod tests {
         let (tx, rx) = channel();
         let r = ServeRequest {
             id,
+            flight: 0,
             image: BitTensor::random(2, 2, 2, id),
             deadline: None,
             enqueued: Instant::now(),

@@ -148,14 +148,18 @@ impl ModelRegistry {
         }
         let exec = Arc::new(exec);
         let metrics = Arc::new(MetricsRegistry::new());
-        let queue = Arc::new(BoundedQueue::new(self.cfg.queue_cap, self.cfg.policy, &metrics));
+        let lane_id = crate::metrics::flight::lane_id(name);
+        let queue = Arc::new(
+            BoundedQueue::new(self.cfg.queue_cap, self.cfg.policy, &metrics).with_lane(lane_id),
+        );
         let batcher = Batcher::new(
             Arc::clone(&exec),
             Arc::clone(&queue),
             Arc::clone(&metrics),
             self.cfg.max_batch,
             Duration::from_micros(self.cfg.max_wait_us),
-        );
+        )
+        .with_lane(lane_id);
         let handle = std::thread::Builder::new()
             .name(format!("serve-batcher-{name}"))
             .spawn(move || batcher.run())
@@ -223,6 +227,20 @@ impl ModelRegistry {
         let mut out = std::mem::take(&mut *self.retired.lock().expect("retired lock"));
         out.extend(lanes.iter().map(drain_lane));
         out
+    }
+
+    /// The live lanes' scoped metrics registries as `(name, registry)`,
+    /// in load order — what the Prometheus exposition renders with a
+    /// `model="<name>"` label per lane. Unloaded lanes are absent (their
+    /// registry `Arc` is dropped with the lane), so hot load/unload
+    /// cycles cannot leak metric cardinality into the scrape.
+    pub fn lane_metrics(&self) -> Vec<(String, Arc<MetricsRegistry>)> {
+        self.lanes
+            .read()
+            .expect("lanes lock")
+            .iter()
+            .map(|l| (l.name.clone(), Arc::clone(&l.metrics)))
+            .collect()
     }
 
     /// Server-wide accounting right now: live lanes plus already-retired
@@ -336,6 +354,7 @@ mod tests {
             lane.queue()
                 .push(ServeRequest {
                     id: i,
+                    flight: 0,
                     image: BitTensor::random(8, 8, 4, 40 + i),
                     deadline: None,
                     enqueued: Instant::now(),
@@ -360,6 +379,20 @@ mod tests {
         assert_eq!(drains.len(), 1);
         assert_eq!(drains[0].name, "t8");
         assert_eq!(drains[0].report.batch as u64, 3);
+    }
+
+    #[test]
+    fn lane_metrics_retire_with_the_lane() {
+        let reg = ModelRegistry::new(small_cfg());
+        reg.load("m1", Model::demo("tiny8").unwrap()).unwrap();
+        reg.load("m2", Model::demo("tiny").unwrap()).unwrap();
+        let names: Vec<String> = reg.lane_metrics().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["m1", "m2"]);
+        // Unloading drops the lane's registry from the exposition set.
+        reg.unload("m1").unwrap();
+        let names: Vec<String> = reg.lane_metrics().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["m2"]);
+        reg.drain_all();
     }
 
     #[test]

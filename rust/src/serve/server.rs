@@ -51,6 +51,12 @@ pub fn request_drain() {
     SIGNAL_DRAIN.store(true, Ordering::SeqCst);
 }
 
+/// Whether a process-wide signal drain is in flight (the telemetry loop
+/// polls this alongside its server's own drain flag).
+pub(crate) fn signal_drain_requested() -> bool {
+    SIGNAL_DRAIN.load(Ordering::SeqCst)
+}
+
 /// A running server: background accept loop plus one batcher per loaded
 /// model, and everything needed to account for and report on them at
 /// drain time.
@@ -59,6 +65,7 @@ pub struct ServeHandle {
     models: Arc<ModelRegistry>,
     draining: Arc<AtomicBool>,
     accept: JoinHandle<()>,
+    telemetry: Option<super::telemetry::TelemetryHandle>,
     started: Instant,
 }
 
@@ -66,6 +73,13 @@ impl ServeHandle {
     /// The bound address (useful with port 0).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The telemetry endpoint's bound address, if
+    /// [`ServeConfig::metrics_addr`](super::ServeConfig) was set (useful
+    /// with port 0).
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.telemetry.as_ref().map(|t| t.local_addr())
     }
 
     /// The server's model registry (route lookups, hot load/unload,
@@ -96,6 +110,9 @@ impl ServeHandle {
     pub fn drain(self) -> Result<ServeReport> {
         self.draining.store(true, Ordering::SeqCst);
         self.accept.join().map_err(|_| anyhow::anyhow!("accept loop panicked"))?;
+        if let Some(telemetry) = self.telemetry {
+            telemetry.join(); // exits on the shared drain flag
+        }
         let models = self.models.drain_all();
         let mut total = ServeStats::default();
         for d in &models {
@@ -194,6 +211,14 @@ pub fn serve(models: Vec<(String, Model)>, cfg: ServeConfig) -> Result<ServeHand
     listener.set_nonblocking(true).context("nonblocking listener")?;
     let addr = listener.local_addr().context("local addr")?;
 
+    let telemetry = match &cfg.metrics_addr {
+        Some(maddr) => Some(
+            super::telemetry::start(maddr, Arc::clone(&registry), Arc::clone(&draining))
+                .with_context(|| format!("starting telemetry on {maddr}"))?,
+        ),
+        None => None,
+    };
+
     let accept = {
         let registry = Arc::clone(&registry);
         let draining = Arc::clone(&draining);
@@ -203,7 +228,8 @@ pub fn serve(models: Vec<(String, Model)>, cfg: ServeConfig) -> Result<ServeHand
             .context("spawning accept loop")?
     };
 
-    Ok(ServeHandle { addr, models: registry, draining, accept, started: Instant::now() })
+    let started = Instant::now();
+    Ok(ServeHandle { addr, models: registry, draining, accept, telemetry, started })
 }
 
 /// Poll-accept until a drain is requested (nonblocking listener + short
@@ -285,6 +311,7 @@ fn handle_connection(
                 let deadline = req.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
                 let sreq = ServeRequest {
                     id: req.id,
+                    flight: 0, // assigned at admission by the queue
                     image,
                     deadline,
                     enqueued: Instant::now(),
@@ -303,6 +330,10 @@ fn handle_connection(
             }
             Ok(ClientMsg::Stats) => {
                 let _ = tx.send(registry.stats_line());
+            }
+            Ok(ClientMsg::TraceDump) => {
+                let dump = crate::metrics::flight::recorder().snapshot();
+                let _ = tx.send(dump.to_json_line());
             }
             Ok(ClientMsg::Drain) => {
                 let _ = tx.send("{\"op\": \"drain\", \"ack\": true}".to_string());

@@ -11,18 +11,26 @@
 
 use super::protocol::ServeResponse;
 use super::queue::ServeRequest;
+use crate::metrics::flight::{self, FlightStage};
 use crate::metrics::{Counter, MetricsRegistry};
 use std::time::Instant;
 
 /// Drops expired requests from dequeued batches (see [module docs](self)).
 pub struct Shedder {
     shed: Counter,
+    lane: u64,
 }
 
 impl Shedder {
     /// Build a shedder counting into `serve.shed` of `reg`.
     pub fn new(reg: &MetricsRegistry) -> Self {
-        Shedder { shed: reg.counter("serve.shed") }
+        Shedder { shed: reg.counter("serve.shed"), lane: flight::lane_id("") }
+    }
+
+    /// Tag shed flight events with an interned lane id.
+    pub fn with_lane(mut self, lane: u64) -> Self {
+        self.lane = lane;
+        self
     }
 
     /// Total requests shed so far.
@@ -39,6 +47,7 @@ impl Shedder {
             match req.deadline {
                 Some(d) if now > d => {
                     self.shed.inc();
+                    flight::recorder().record(FlightStage::Shed, req.flight, req.id, self.lane, 0);
                     // A gone client is not an error: the reply is
                     // best-effort, the count is what must survive.
                     let _ = req.resp.send(ServeResponse::shed(req.id).to_json_line());
@@ -62,6 +71,7 @@ mod tests {
         let (tx, rx) = channel();
         let r = ServeRequest {
             id,
+            flight: 0,
             image: BitTensor::random(2, 2, 2, id),
             deadline,
             enqueued: Instant::now(),

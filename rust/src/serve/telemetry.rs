@@ -1,0 +1,190 @@
+//! The live-telemetry HTTP endpoint (`--metrics-addr`).
+//!
+//! A std-only, hand-rolled HTTP/1.1 server in the same spirit as the
+//! JSON-lines wire protocol: no framework, one short-lived connection per
+//! scrape. Four routes:
+//!
+//! | Route      | Serves                                                   |
+//! |------------|----------------------------------------------------------|
+//! | `/metrics` | Prometheus text exposition — the global registry plus every live model lane (`model="<name>"` label) |
+//! | `/healthz` | Liveness: `200 ok` while the process runs                |
+//! | `/readyz`  | Readiness: `200 ready` iff ≥ 1 lane is published and the server is not draining, else `503` |
+//! | `/trace`   | The flight recorder as one `tulip.trace/v1` JSON document |
+//!
+//! The endpoint is started by [`serve`](super::server::serve) when
+//! [`ServeConfig::metrics_addr`](super::ServeConfig) is set, and the loop
+//! exits with the server's drain (the handle is joined by
+//! [`ServeHandle::drain`](super::server::ServeHandle::drain)).
+
+use super::registry::ModelRegistry;
+use crate::metrics::{flight, prometheus, MetricsRegistry};
+use crate::Result;
+use anyhow::Context;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Prometheus text exposition content type (format 0.0.4).
+pub const PROMETHEUS_CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+/// A running telemetry endpoint (see the [module docs](self)).
+#[derive(Debug)]
+pub struct TelemetryHandle {
+    addr: SocketAddr,
+    thread: JoinHandle<()>,
+}
+
+impl TelemetryHandle {
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Wait for the serve loop to exit (it does so once its drain flag —
+    /// shared with the owning server — is raised).
+    pub fn join(self) {
+        let _ = self.thread.join();
+    }
+}
+
+/// Bind `addr` and start answering telemetry requests on a background
+/// thread. Readiness tracks `models` (≥ 1 lane published) and `draining`;
+/// the loop exits when `draining` (or a process-wide signal drain) is
+/// raised.
+pub fn start(
+    addr: &str,
+    models: Arc<ModelRegistry>,
+    draining: Arc<AtomicBool>,
+) -> Result<TelemetryHandle> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding telemetry endpoint {addr}"))?;
+    listener.set_nonblocking(true).context("nonblocking telemetry listener")?;
+    let bound = listener.local_addr().context("telemetry local addr")?;
+    let thread = std::thread::Builder::new()
+        .name("serve-telemetry".into())
+        .spawn(move || {
+            while !super::server::signal_drain_requested() && !draining.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let ready = !draining.load(Ordering::SeqCst) && !models.is_empty();
+                        // Scrapes are small and rare; serving them inline
+                        // keeps the endpoint a single thread.
+                        let _ = handle_request(stream, &models, ready);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                }
+            }
+        })
+        .context("spawning telemetry loop")?;
+    Ok(TelemetryHandle { addr: bound, thread })
+}
+
+/// Read one request, answer it, close the connection.
+fn handle_request(stream: TcpStream, models: &ModelRegistry, ready: bool) -> Result<()> {
+    stream.set_nonblocking(false).context("blocking telemetry stream")?;
+    stream.set_read_timeout(Some(Duration::from_secs(2))).context("telemetry read timeout")?;
+    stream.set_write_timeout(Some(Duration::from_secs(2))).context("telemetry write timeout")?;
+    let mut reader = BufReader::new(stream);
+    let mut request = String::new();
+    reader.read_line(&mut request).context("reading request line")?;
+    // Drain the headers; we key off the request line alone.
+    loop {
+        let mut header = String::new();
+        let n = reader.read_line(&mut header).context("reading header")?;
+        if n == 0 || header == "\r\n" || header == "\n" {
+            break;
+        }
+    }
+    let mut parts = request.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("").split('?').next().unwrap_or("");
+    let stream = reader.into_inner();
+    if method != "GET" {
+        return respond(stream, "405 Method Not Allowed", "text/plain", "method not allowed\n");
+    }
+    match path {
+        "/metrics" => {
+            let body = prometheus::render(MetricsRegistry::global(), &models.lane_metrics());
+            respond(stream, "200 OK", PROMETHEUS_CONTENT_TYPE, &body)
+        }
+        "/healthz" => respond(stream, "200 OK", "text/plain", "ok\n"),
+        "/readyz" if ready => respond(stream, "200 OK", "text/plain", "ready\n"),
+        "/readyz" => {
+            respond(stream, "503 Service Unavailable", "text/plain", "not ready\n")
+        }
+        "/trace" => {
+            let body = format!("{}\n", flight::recorder().snapshot().to_json_line());
+            respond(stream, "200 OK", "application/json", &body)
+        }
+        _ => respond(stream, "404 Not Found", "text/plain", "not found\n"),
+    }
+}
+
+/// Write a complete `HTTP/1.1` response and flush.
+fn respond(mut stream: TcpStream, status: &str, content_type: &str, body: &str) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes()).context("writing response head")?;
+    stream.write_all(body.as_bytes()).context("writing response body")?;
+    stream.flush().context("flushing response")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::ServeConfig;
+    use std::io::Read;
+
+    fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let (head, body) = buf.split_once("\r\n\r\n").expect("complete response");
+        (head.to_string(), body.to_string())
+    }
+
+    #[test]
+    fn endpoint_serves_probes_metrics_and_trace() {
+        let models = Arc::new(ModelRegistry::new(ServeConfig::default()));
+        let draining = Arc::new(AtomicBool::new(false));
+        let handle = start("127.0.0.1:0", Arc::clone(&models), Arc::clone(&draining)).unwrap();
+        let addr = handle.local_addr();
+
+        let (head, body) = http_get(addr, "/healthz");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert_eq!(body, "ok\n");
+
+        // No lane published yet → not ready.
+        let (head, body) = http_get(addr, "/readyz");
+        assert!(head.starts_with("HTTP/1.1 503"), "{head}");
+        assert_eq!(body, "not ready\n");
+
+        let (head, body) = http_get(addr, "/metrics");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert!(head.contains("version=0.0.4"), "{head}");
+        crate::metrics::check_exposition(&body).unwrap();
+
+        let (head, body) = http_get(addr, "/trace");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert!(body.contains("tulip.trace/v1"), "{body}");
+
+        let (head, _) = http_get(addr, "/nope");
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+
+        // Raising the drain flag stops the loop.
+        draining.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(addr); // nudge past the accept sleep
+        handle.join();
+    }
+}

@@ -171,6 +171,88 @@ fn perf_report_is_consistent_with_result() {
     assert!(json.contains("\"batch.images\""), "embedded registry snapshot missing");
 }
 
+/// `HistogramSnapshot::quantile` edge cases: empty snapshots, the extreme
+/// quantiles, single-bucket populations, and merged snapshots all answer
+/// within the recorded min/max envelope.
+#[test]
+fn histogram_quantiles_handle_edge_cases() {
+    let reg = MetricsRegistry::new();
+    let empty = reg.histogram("q.empty").snapshot();
+    assert_eq!(empty.quantile(0.5), 0, "empty histogram quantile is 0");
+
+    let h = reg.histogram("q.filled");
+    for v in [10u64, 20, 30, 40, 1000] {
+        h.observe(v);
+    }
+    let snap = h.snapshot();
+    // q=0 answers the lowest sample's bucket upper bound (10 lives in the
+    // log₂ bucket [8, 15]), never below the exact recorded min.
+    assert_eq!(snap.quantile(0.0), 15);
+    assert_eq!(snap.quantile(1.0), snap.max, "q=1 clamps to the recorded max");
+    assert!(snap.quantile(0.5) >= snap.min && snap.quantile(0.5) <= snap.max);
+    // p99 of 5 samples lands in the top bucket, clamped to the exact max.
+    assert_eq!(snap.quantile(0.99), 1000);
+
+    // Every sample in one bucket: all quantiles agree up to bucket clamping.
+    let one = reg.histogram("q.single");
+    for _ in 0..100 {
+        one.observe(42);
+    }
+    let snap = one.snapshot();
+    for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+        assert_eq!(snap.quantile(q), 42, "single-bucket population at q={q}");
+    }
+
+    // Merging two disjoint populations spans both envelopes.
+    let lo = reg.histogram("q.lo");
+    let hi = reg.histogram("q.hi");
+    for v in 1..=50u64 {
+        lo.observe(v);
+        hi.observe(v + 10_000);
+    }
+    let mut merged = lo.snapshot();
+    merged.merge(&hi.snapshot());
+    assert_eq!(merged.count, 100);
+    assert_eq!(merged.quantile(0.0), 1);
+    assert_eq!(merged.quantile(1.0), 10_050);
+    assert!(merged.quantile(0.25) <= 50, "lower quartile stays in the low population");
+    assert!(merged.quantile(0.75) > 10_000, "upper quartile reaches the high population");
+}
+
+/// Window histograms rotate per-second slices under a simulated clock:
+/// observations age out of narrow windows, survive wide ones, and slice
+/// reuse after a full lap of the ring discards the stale second.
+#[test]
+fn window_histograms_rotate_under_simulated_clock() {
+    let reg = MetricsRegistry::new();
+    let w = reg.window_histogram("w.rotate");
+    w.observe_at(100, 10);
+    w.observe_at(100, 30);
+    w.observe_at(105, 500);
+
+    let wide = w.snapshot_window_at(105, 60);
+    assert_eq!(wide.count, 3, "60s window spans both seconds");
+    assert_eq!(wide.sum, 540);
+    assert_eq!(wide.min, 10);
+    assert_eq!(wide.max, 500);
+
+    let narrow = w.snapshot_window_at(105, 1);
+    assert_eq!(narrow.count, 1, "1s window sees only the newest second");
+    assert_eq!(narrow.sum, 500);
+
+    // A snapshot taken *before* a slice's second ignores that slice.
+    let before = w.snapshot_window_at(104, 60);
+    assert_eq!(before.count, 2, "future seconds are excluded");
+    assert_eq!(before.sum, 40);
+
+    // 64 seconds later the ring wraps onto second 100's slice; its stale
+    // samples are discarded on reuse and must not leak into the window.
+    w.observe_at(164, 7);
+    let lap = w.snapshot_window_at(164, 60);
+    assert_eq!(lap.count, 2, "second 100 gone to slice reuse; 105 and 164 remain");
+    assert_eq!(lap.sum, 507);
+}
+
 /// Without the `trace` feature spans are inert; with it they record.
 #[test]
 fn spans_are_noops_unless_enabled() {

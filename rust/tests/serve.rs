@@ -123,6 +123,7 @@ fn admission_queue_is_bounded_under_both_policies() {
         // admission, and replies are best-effort by design.
         ServeRequest {
             id,
+            flight: 0,
             image: image(id),
             deadline: None,
             enqueued: Instant::now(),

@@ -1,0 +1,220 @@
+//! Live-telemetry contracts, end-to-end over real sockets:
+//!
+//! * **Scrapeable under load** — `--metrics-addr` serves a Prometheus
+//!   exposition that passes the strict in-repo checker mid-traffic, with
+//!   per-lane (`model="…"`) rolling-latency series and the
+//!   `energy_per_classification` gauge present;
+//! * **Cardinality retires with the lane** — after `unload_model`, the
+//!   retired lane's labeled series vanish from the next scrape;
+//! * **Flight chains are complete** — `{"op": "trace_dump"}` returns a
+//!   `tulip.trace/v1` document in which every `ok` response has an
+//!   admit→…→respond chain, and its Chrome conversion is valid
+//!   `trace_event` JSON;
+//! * **Endpoint lifecycle** — `/healthz` and `/readyz` answer while
+//!   serving, and the endpoint dies with the server's drain.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use tulip::bnn::tensor::BitTensor;
+use tulip::bnn::Model;
+use tulip::metrics::flight::{self, FlightStage};
+use tulip::metrics::{check_exposition, FlightDump};
+use tulip::serve::protocol::{parse_json, Json};
+use tulip::serve::{pack_bits, serve, ServeConfig, ServeHandle, ServeResponse, Status};
+
+/// Boot a two-lane server with the telemetry endpoint on an ephemeral
+/// port. Lane names are unique per test so parallel tests never share
+/// flight-recorder lanes.
+fn boot(lane_a: &str, lane_b: &str) -> ServeHandle {
+    let cfg = ServeConfig::builder()
+        .max_batch(4)
+        .max_wait_us(300)
+        .array(2, 4)
+        .metrics_addr("127.0.0.1:0")
+        .build();
+    serve(
+        vec![
+            (lane_a.into(), Model::demo("tiny").unwrap()),
+            (lane_b.into(), Model::demo("tiny8").unwrap()),
+        ],
+        cfg,
+    )
+    .unwrap()
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let (head, body) = buf.split_once("\r\n\r\n").expect("complete HTTP response");
+    (head.to_string(), body.to_string())
+}
+
+fn infer_line(id: u64, lane: &str, model: &Model) -> String {
+    let (h, w, c) = model.input_dims();
+    let img = BitTensor::random(h, w, c, 7000 + id);
+    format!("{{\"id\": {id}, \"model\": \"{lane}\", \"bits\": \"{}\"}}\n", pack_bits(&img.data))
+}
+
+/// Send `lines` on one connection and read exactly `expect` replies.
+fn round_trip(addr: SocketAddr, lines: &[String], expect: usize) -> Vec<String> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    for l in lines {
+        stream.write_all(l.as_bytes()).unwrap();
+    }
+    stream.flush().unwrap();
+    stream.shutdown(Shutdown::Write).unwrap();
+    let mut out = Vec::with_capacity(expect);
+    for line in BufReader::new(stream).lines() {
+        out.push(line.unwrap());
+        if out.len() == expect {
+            break;
+        }
+    }
+    out
+}
+
+#[test]
+fn metrics_scrape_is_valid_labeled_and_retires_with_lanes() {
+    let handle = boot("m.tiny", "m.tiny8");
+    let maddr = handle.metrics_addr().expect("metrics_addr configured");
+
+    let (head, body) = http_get(maddr, "/healthz");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert_eq!(body, "ok\n");
+    let (head, _) = http_get(maddr, "/readyz");
+    assert!(head.starts_with("HTTP/1.1 200"), "lanes are published: {head}");
+
+    // Traffic on both lanes so per-lane series have samples.
+    let tiny = Model::demo("tiny").unwrap();
+    let tiny8 = Model::demo("tiny8").unwrap();
+    let lines: Vec<String> = (0..6u64)
+        .map(|id| {
+            if id % 2 == 0 {
+                infer_line(id, "m.tiny", &tiny)
+            } else {
+                infer_line(id, "m.tiny8", &tiny8)
+            }
+        })
+        .collect();
+    for reply in round_trip(handle.local_addr(), &lines, 6) {
+        assert_eq!(ServeResponse::parse(&reply).unwrap().status, Status::Ok, "{reply}");
+    }
+
+    let (head, body) = http_get(maddr, "/metrics");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(head.contains("text/plain; version=0.0.4"), "{head}");
+    let stats = check_exposition(&body).expect("mid-load scrape passes the checker");
+    assert!(stats.families > 0 && stats.samples > 0);
+    // Per-lane accounting and rolling-latency series.
+    assert!(stats.has_series("tulip_serve_admitted_total{model=\"m.tiny\"} 3"), "{body}");
+    assert!(stats.has_series("tulip_serve_completed_total{model=\"m.tiny8\"} 3"), "{body}");
+    assert!(
+        stats.has_series("tulip_serve_latency_us_total_rolling{model=\"m.tiny\",window=\"10s\""),
+        "{body}"
+    );
+    assert!(
+        stats.has_series("tulip_serve_latency_us_queue_rolling{model=\"m.tiny8\",window=\"60s\""),
+        "{body}"
+    );
+    // The engine's analytic energy gauge flows into each lane's scope.
+    let energy = "tulip_batch_energy_per_classification_pj{model=\"m.tiny\"}";
+    assert!(stats.has_series(energy), "{body}");
+    // Engine histograms render completely (checker enforced; spot-check).
+    assert!(stats.has_series("tulip_serve_latency_us_total_bucket{model=\"m.tiny\""), "{body}");
+
+    // Retire a lane over the wire: its labeled series must vanish.
+    let unload = "{\"op\": \"unload_model\", \"name\": \"m.tiny8\"}\n".to_string();
+    let gone = round_trip(handle.local_addr(), &[unload], 1).remove(0);
+    assert!(gone.contains("\"ok\": true") && gone.contains("\"accounted\": true"), "{gone}");
+    let (_, body) = http_get(maddr, "/metrics");
+    let stats = check_exposition(&body).unwrap();
+    assert!(!body.contains("model=\"m.tiny8\""), "retired lane still exposed:\n{body}");
+    assert!(stats.has_series("tulip_serve_admitted_total{model=\"m.tiny\"}"), "{body}");
+
+    // Drain kills the endpoint with the server.
+    let report = handle.drain().unwrap();
+    assert!(report.accounted());
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    assert!(TcpStream::connect(maddr).is_err(), "telemetry endpoint must die with the server");
+}
+
+#[test]
+fn trace_dump_has_complete_chains_and_chrome_conversion() {
+    let handle = boot("t.tiny", "t.tiny8");
+    let maddr = handle.metrics_addr().unwrap();
+    let tiny = Model::demo("tiny").unwrap();
+    let lines: Vec<String> = (0..5u64).map(|id| infer_line(id, "t.tiny", &tiny)).collect();
+    let ok_ids: Vec<u64> = round_trip(handle.local_addr(), &lines, 5)
+        .iter()
+        .map(|l| {
+            let r = ServeResponse::parse(l).unwrap();
+            assert_eq!(r.status, Status::Ok, "{l}");
+            r.id
+        })
+        .collect();
+
+    // The batcher records Respond just after handing the reply to the
+    // connection writer — give the recorder a beat before dumping.
+    std::thread::sleep(std::time::Duration::from_millis(50));
+
+    // The wire op and the HTTP endpoint serve the same schema.
+    let wire = round_trip(handle.local_addr(), &["{\"op\": \"trace_dump\"}\n".into()], 1).remove(0);
+    let dump = FlightDump::parse(&wire).expect("wire dump parses");
+    let (_, http_body) = http_get(maddr, "/trace");
+    assert!(http_body.contains("\"schema\": \"tulip.trace/v1\""), "{http_body}");
+    FlightDump::parse(http_body.trim()).expect("HTTP dump parses");
+
+    // Every ok response has a complete admit→…→respond chain on its lane
+    // (the test ring is far from wrapping, so nothing was dropped).
+    let lane = flight::lane_id("t.tiny");
+    for id in &ok_ids {
+        let stages: Vec<FlightStage> = dump
+            .events
+            .iter()
+            .filter(|e| e.request == *id && e.lane == lane)
+            .map(|e| e.stage)
+            .collect();
+        let chain = [
+            FlightStage::Admit,
+            FlightStage::Dequeue,
+            FlightStage::BatchSeal,
+            FlightStage::Execute,
+            FlightStage::Respond,
+        ];
+        for want in chain {
+            assert!(stages.contains(&want), "request {id} missing {want:?} in {stages:?}");
+        }
+        let order: Vec<FlightStage> =
+            stages.iter().copied().filter(|s| *s != FlightStage::Shed).collect();
+        let mut sorted = order.clone();
+        sorted.sort();
+        assert_eq!(order, sorted, "request {id} stages out of order");
+    }
+    // Executed requests carry a sealed micro-batch id.
+    assert!(
+        dump.events
+            .iter()
+            .any(|e| e.lane == lane && e.stage == FlightStage::Execute && e.batch > 0),
+        "execute events must carry a batch id"
+    );
+
+    // Chrome conversion is valid trace_event JSON with spans for our lane.
+    let chrome = dump.chrome_trace();
+    let v = parse_json(&chrome).expect("chrome trace is valid JSON");
+    let events = match v.get("traceEvents") {
+        Some(Json::Arr(items)) => items.clone(),
+        other => panic!("expected traceEvents array, got {other:?}"),
+    };
+    assert!(
+        events
+            .iter()
+            .any(|e| e.get("ph").and_then(Json::as_str) == Some("X")
+                && e.get("pid").and_then(Json::as_u64) == Some(lane)),
+        "no complete-span events for lane {lane} in {chrome}"
+    );
+
+    let report = handle.drain().unwrap();
+    assert!(report.accounted());
+}
